@@ -1,0 +1,46 @@
+"""Benchmark plumbing: timing + the CSV contract (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def _force(result) -> None:
+    """Block until a Frame / PartitionedFrame / pytree is computed."""
+    from repro.core.frame import Frame
+    from repro.core.partition import PartitionedFrame
+    if isinstance(result, PartitionedFrame):
+        for row in result.parts:
+            for blk in row:
+                for c in blk.columns:
+                    jax.block_until_ready(c.data)
+    elif isinstance(result, Frame):
+        for c in result.columns:
+            jax.block_until_ready(c.data)
+    else:
+        jax.block_until_ready(result)
+
+
+def time_us(fn: Callable, *, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        _force(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _force(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+class Reporter:
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    def dump(self) -> str:
+        return "\n".join(f"{n},{u:.1f},{d}" for n, u, d in self.rows)

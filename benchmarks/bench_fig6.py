@@ -1,0 +1,86 @@
+"""Paper Figure 6: map / groupby(n) / groupby(1) / transpose — eager
+single-partition execution (the pandas stand-in: one core, one block) vs
+Modin-style block-partitioned parallel execution, across dataset scales.
+
+The paper measured 12×/19×/30× and a transpose pandas could not run at all;
+on this container the parallelism budget is the core count, so the expected
+speedup ceiling is ≈ #cores for compute-bound ops.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import algebra as alg
+from repro.core.partition import PartitionedFrame
+from repro.core.physical import run_node
+from repro.data.synthetic import numeric_matrix_frame, taxi_like_frame
+
+from ._util import Reporter, time_us
+
+_SCALES = (100_000, 1_000_000)
+
+
+def _exec(pf: PartitionedFrame, node_fn) -> PartitionedFrame:
+    src = alg.Source("bench", 0, 0)
+
+    def ev(node):
+        if node.op == "source":
+            return pf
+        return run_node(node, [ev(c) for c in node.children])
+
+    return ev(node_fn(src))
+
+
+def _fillna_udf():
+    import jax.numpy as jnp
+    from repro.core.dtypes import Domain
+    from repro.core.frame import Column, Frame
+    from repro.core.labels import labels_from_values
+
+    def fn(cols, frame):
+        out = {}
+        for n, c in cols.items():
+            if c.domain is Domain.FLOAT and c.mask is not None:
+                out[n] = Column(jnp.where(c.mask, c.data, 0.0), c.domain, None, None)
+            else:
+                out[n] = c
+        return Frame(list(out.values()), frame.row_labels,
+                     labels_from_values(list(out.keys())))
+
+    return alg.Udf.wrap(fn, name="bench_fillna", elementwise=True)
+
+
+def run(rep: Reporter) -> None:
+    cores = os.cpu_count() or 4
+    for n in _SCALES:
+        frame = taxi_like_frame(n, seed=0)
+        single = PartitionedFrame.from_frame(frame, row_parts=1)
+        multi = PartitionedFrame.from_frame(frame, row_parts=cores)
+
+        cases = {
+            "map": lambda src: alg.Map(src, _fillna_udf()),
+            "groupby_n": lambda src: alg.GroupBy(
+                src, ("passenger_count",), [("f0", "count", "cnt")]),
+            "groupby_1": lambda src: alg.GroupBy(src, (), [("f0", "count", "cnt")]),
+        }
+        for name, build in cases.items():
+            t1 = time_us(lambda: _exec(single, build))
+            tp = time_us(lambda: _exec(multi, build))
+            rep.add(f"fig6/{name}/rows={n}/eager1p", t1,
+                    f"rows_per_s={n / (t1 / 1e6):.3e}")
+            rep.add(f"fig6/{name}/rows={n}/partitioned", tp,
+                    f"speedup={t1 / tp:.2f}x")
+
+        # transpose: homogeneous matrix frame (paper: taxi data replicated)
+        mat = numeric_matrix_frame(n // 10, 64, seed=0)
+        ms = PartitionedFrame.from_frame(mat, row_parts=1)
+        mm = PartitionedFrame.from_frame(mat, row_parts=cores, col_parts=2)
+        build_t = lambda src: alg.Transpose(src)
+        t1 = time_us(lambda: _exec(ms, build_t))
+        tp = time_us(lambda: _exec(mm, build_t))
+        rep.add(f"fig6/transpose/rows={n // 10}x64/eager1p", t1,
+                f"cells_per_s={(n // 10) * 64 / (t1 / 1e6):.3e}")
+        rep.add(f"fig6/transpose/rows={n // 10}x64/partitioned", tp,
+                f"speedup={t1 / tp:.2f}x")

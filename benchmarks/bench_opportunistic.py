@@ -1,0 +1,61 @@
+"""Paper §6.1.1–6.1.2: opportunistic evaluation & prefix computation.
+
+Measures what the user *feels*: time from "statement typed" to "result
+visible", with think time between statements.  Eager pays at statement time;
+lazy pays at inspect time; opportunistic hides the work inside think time.
+Plus: head(k) via prefix computation vs full evaluation.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import DataFrame, EvalMode, Session, set_session
+
+from ._util import Reporter
+
+_N = 600_000
+_THINK_S = 0.35
+
+
+def _workflow(mode: str) -> tuple[float, float]:
+    """Returns (statement_latency_s, inspect_latency_s) summed over steps."""
+    s = set_session(Session(mode=mode, default_row_parts=8))
+    try:
+        data = {"v": list(range(_N)), "w": [float(i % 97) for i in range(_N)]}
+        t0 = time.perf_counter()
+        df = DataFrame(data)
+        q = df[df["v"] % 3 == 0]
+        q2 = q.cumsum(cols=["w"])
+        stmt_s = time.perf_counter() - t0
+        time.sleep(_THINK_S)          # the user thinks / types
+        t1 = time.perf_counter()
+        q2.head(5)                    # then inspects
+        inspect_s = time.perf_counter() - t1
+        return stmt_s, inspect_s
+    finally:
+        s.close()
+
+
+def run(rep: Reporter) -> None:
+    for mode in (EvalMode.EAGER, EvalMode.LAZY, EvalMode.OPPORTUNISTIC):
+        stmt_s, inspect_s = _workflow(mode)
+        rep.add(f"opportunistic/{mode}/statement", stmt_s * 1e6,
+                f"inspect_us={inspect_s * 1e6:.0f}")
+        rep.add(f"opportunistic/{mode}/inspect", inspect_s * 1e6,
+                f"total_us={(stmt_s + inspect_s) * 1e6:.0f}")
+
+    # prefix computation: head(5) on a selective plan, lazy session
+    s = set_session(Session(mode=EvalMode.LAZY, default_row_parts=16))
+    try:
+        df = DataFrame({"v": list(range(_N))})
+        q = df[df["v"] > 100]
+        t0 = time.perf_counter()
+        q.head(5)
+        prefix_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        q.collect()
+        full_s = time.perf_counter() - t1
+        rep.add("prefix/head5", prefix_s * 1e6,
+                f"full_eval_us={full_s * 1e6:.0f} speedup={full_s / max(prefix_s, 1e-9):.1f}x")
+    finally:
+        s.close()

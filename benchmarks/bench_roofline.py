@@ -1,0 +1,70 @@
+"""Deliverable (g): the roofline table from the dry-run artifacts.
+
+Reads ``experiments/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+emits one CSV row per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS.  Also writes the markdown
+table consumed by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from ._util import Reporter
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(mesh: str | None = "single") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(path))
+        if mesh is not None and r.get("mesh") != mesh:
+            continue
+        if r.get("status") not in ("compiled", "skipped"):
+            continue
+        if r.get("status") == "compiled" and "roofline" not in r:
+            continue  # auxiliary cells (e.g. the dataframe pipeline)
+        cells.append(r)
+    return cells
+
+
+def markdown_table(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | status | compute_s | memory_s | collective_s | "
+           "bottleneck | useful | roofline_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    for r in cells:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skip: {r['reason'][:48]}… "
+                        "| – | – | – | – | – | – |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {rl['compute_s']:.3e} | {rl['memory_s']:.3e} "
+            f"| {rl['collective_s']:.3e} | {rl['bottleneck']} "
+            f"| {rl['useful_flops_fraction']:.3f} "
+            f"| {rl['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def run(rep: Reporter) -> None:
+    cells = load_cells("single")
+    if not cells:
+        rep.add("roofline/no_dryrun_artifacts", 0.0,
+                "run: python -m repro.launch.dryrun")
+        return
+    for r in cells:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            rep.add(name, 0.0, "skipped:" + r["reason"][:60])
+            continue
+        rl = r["roofline"]
+        rep.add(name, rl["step_s"] * 1e6,
+                f"bottleneck={rl['bottleneck']} useful={rl['useful_flops_fraction']:.3f} "
+                f"frac={rl['roofline_fraction']:.4f}")
+    out = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(markdown_table(cells))

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig6          paper Fig. 6: map/groupby(n)/groupby(1)/transpose, eager-1p
+                (pandas stand-in) vs block-partitioned parallel
+  opportunistic paper §6.1.1/6.1.2: eager vs lazy vs opportunistic + prefix
+  rewrite       paper §5: transpose-elimination rewrites
+  reuse         paper §6.2: session materialization/reuse
+  approx        paper §6.1.3: progressive aggregation to ±1%
+  roofline      deliverable (g): table from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
+"""
+from __future__ import annotations
+
+import os
+
+# Single-threaded XLA intra-op execution (MUST precede jax init): the paper's
+# baseline is single-core pandas; with default settings XLA:CPU multithreads
+# single-partition ops internally, which would hide exactly the parallelism
+# Modin-style partitioning adds.  One partition ↔ one core, as in Modin's
+# worker model.
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+
+from ._util import Reporter
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args, _ = ap.parse_known_args()
+
+    from . import (bench_approx, bench_fig6, bench_opportunistic,
+                   bench_reuse, bench_rewrite, bench_roofline)
+    suites = {
+        "fig6": bench_fig6.run,
+        "opportunistic": bench_opportunistic.run,
+        "rewrite": bench_rewrite.run,
+        "reuse": bench_reuse.run,
+        "approx": bench_approx.run,
+        "roofline": bench_roofline.run,
+    }
+    picked = suites if args.only == "all" else {
+        k: suites[k] for k in args.only.split(",")}
+
+    rep = Reporter()
+    print("name,us_per_call,derived")
+    for name, fn in picked.items():
+        try:
+            fn(rep)
+        except Exception as e:  # keep the harness going; record the failure
+            rep.add(f"{name}/ERROR", 0.0, repr(e)[:120])
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: a formal dataframe data model (§3.2),
+a dataframe algebra (§3.3), and a Modin-style partitioned parallel
+implementation (§4) with the §5/§6 optimizations (rewriting, opportunistic
+evaluation, prefix computation, approximate execution, materialization/reuse).
+
+Public surface:
+  * ``api.DataFrame`` / ``read_csv`` / ``from_pydict`` — pandas-flavoured API
+  * ``algebra`` — the 14-operator algebra for direct plan construction
+  * ``Session`` — evaluation modes (eager / lazy / opportunistic) + reuse
+"""
+from . import algebra  # noqa: F401
+from .api import DataFrame, concat, from_pydict, get_dummies, read_csv  # noqa: F401
+from .dtypes import Domain  # noqa: F401
+from .frame import Column, Frame  # noqa: F401
+from .partition import PartitionedFrame  # noqa: F401
+from .session import EvalMode, Session, get_session, set_session  # noqa: F401

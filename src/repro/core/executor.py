@@ -1,0 +1,225 @@
+"""Evaluation engine: eager / lazy / opportunistic execution (paper §6.1).
+
+* **eager**       — pandas semantics: each statement fully evaluated on
+                    construction (the paper-faithful baseline).
+* **lazy**        — Spark semantics: nothing runs until the user inspects.
+* **opportunistic** — the paper's §6.1.1 middle ground: control returns
+                    immediately, the plan is *scheduled in the background*
+                    during "think time"; an inspect prioritizes that plan
+                    (and is usually a cache hit by then).
+
+Also implements:
+* prefix computation (§6.1.2): ``head(k)`` on prefix-safe plans evaluates only
+  enough *input row blocks* to produce k output rows (progressive doubling for
+  selective plans), instead of the whole frame;
+* materialization & reuse (§6.2.2): every evaluated sub-plan lands in a
+  budget-bounded cache keyed by structural plan hash; the eviction policy
+  maximizes saved-compute density (cost × hits / bytes) — the PTIME-optimal
+  policy of Helix [69] approximated greedily;
+* multi-query sharing (§6.2.1): common sub-expressions across concurrently
+  scheduled statements dedupe through the cache *and* through an in-flight
+  table, so a sub-plan running in the background is joined, never recomputed.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from . import algebra as alg
+from . import physical, rewrite
+from .frame import Frame
+from .partition import PartitionedFrame, default_grid
+
+__all__ = ["Executor", "CacheEntry", "ExecStats"]
+
+
+@dataclass
+class CacheEntry:
+    result: PartitionedFrame
+    cost_s: float          # wall time it took to produce
+    nbytes: int
+    hits: int = 0
+    created: float = field(default_factory=time.monotonic)
+
+    def benefit_density(self) -> float:
+        return (self.cost_s * (1 + self.hits)) / max(1, self.nbytes)
+
+
+@dataclass
+class ExecStats:
+    evaluated_nodes: int = 0
+    cache_hits: int = 0
+    inflight_joins: int = 0
+    prefix_evals: int = 0
+    rewrites_applied: int = 0
+    background_tasks: int = 0
+
+
+class Executor:
+    def __init__(self, frame_store: dict[str, PartitionedFrame], *,
+                 cache_budget_bytes: int = 1 << 30, optimize: bool = True,
+                 background_workers: int = 2):
+        self.frames = frame_store
+        self.cache: dict[tuple, CacheEntry] = {}
+        self.cache_budget = cache_budget_bytes
+        self.optimize = optimize
+        self.stats = ExecStats()
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, _fut.Future] = {}
+        self._bg = _fut.ThreadPoolExecutor(max_workers=background_workers,
+                                           thread_name_prefix="repro-bg")
+
+    # ------------------------------------------------------------------
+    # plan optimization entry
+    # ------------------------------------------------------------------
+    def _source_columns(self, frame_id: str) -> list | None:
+        pf = self.frames.get(frame_id)
+        if pf is None:
+            return None
+        return pf.parts[0][0].col_labels.to_list() if pf.col_parts == 1 else (
+            pf.repartition(col_parts=1).parts[0][0].col_labels.to_list())
+
+    def optimized(self, node: alg.Node) -> alg.Node:
+        if not self.optimize:
+            return node
+        out = rewrite.optimize(node, self._source_columns)
+        if out is not node:
+            self.stats.rewrites_applied += 1
+        return out
+
+    # ------------------------------------------------------------------
+    # synchronous evaluation (with cache + in-flight dedupe)
+    # ------------------------------------------------------------------
+    def evaluate(self, node: alg.Node) -> PartitionedFrame:
+        node = self.optimized(node)
+        return self._eval(node)
+
+    def _eval(self, node: alg.Node) -> PartitionedFrame:
+        key = node.cache_key()
+        with self._lock:
+            ent = self.cache.get(key)
+            if ent is not None:
+                ent.hits += 1
+                self.stats.cache_hits += 1
+                return ent.result
+            fut = self._inflight.get(key)
+        if fut is not None:
+            self.stats.inflight_joins += 1
+            return fut.result()
+
+        promise: _fut.Future = _fut.Future()
+        with self._lock:
+            # double-check under lock
+            ent = self.cache.get(key)
+            if ent is not None:
+                ent.hits += 1
+                self.stats.cache_hits += 1
+                return ent.result
+            existing = self._inflight.get(key)
+            if existing is not None:
+                fut = existing
+            else:
+                self._inflight[key] = promise
+                fut = None
+        if fut is not None:
+            self.stats.inflight_joins += 1
+            return fut.result()
+
+        try:
+            t0 = time.monotonic()
+            if node.op == "source":
+                result = self.frames[node.params["frame_id"]]
+            else:
+                inputs = [self._eval(c) for c in node.children]
+                result = physical.run_node(node, inputs)
+            dt = time.monotonic() - t0
+            self.stats.evaluated_nodes += 1
+            self._store(key, result, dt)
+            promise.set_result(result)
+            return result
+        except BaseException as e:
+            promise.set_exception(e)
+            raise
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+    # ------------------------------------------------------------------
+    # materialization cache with benefit-density eviction (§6.2.2)
+    # ------------------------------------------------------------------
+    def _store(self, key: tuple, result: PartitionedFrame, cost_s: float) -> None:
+        try:
+            nbytes = result.nbytes()
+        except Exception:
+            nbytes = 1
+        with self._lock:
+            self.cache[key] = CacheEntry(result, cost_s, nbytes)
+            total = sum(e.nbytes for e in self.cache.values())
+            if total > self.cache_budget:
+                # evict lowest benefit-density first; never evict sources
+                victims = sorted(self.cache.items(), key=lambda kv: kv[1].benefit_density())
+                for k, e in victims:
+                    if total <= self.cache_budget:
+                        break
+                    if k[0] == "source":
+                        continue
+                    del self.cache[k]
+                    total -= e.nbytes
+
+    def cache_bytes(self) -> int:
+        with self._lock:
+            return sum(e.nbytes for e in self.cache.values())
+
+    # ------------------------------------------------------------------
+    # opportunistic background scheduling (§6.1.1)
+    # ------------------------------------------------------------------
+    def submit(self, node: alg.Node) -> _fut.Future:
+        """Schedule evaluation in the background; returns a future.  The
+        user-facing handle keeps composing; an inspect call joins it."""
+        node = self.optimized(node)
+        self.stats.background_tasks += 1
+        return self._bg.submit(self._eval, node)
+
+    # ------------------------------------------------------------------
+    # prefix computation (§6.1.2)
+    # ------------------------------------------------------------------
+    def evaluate_prefix(self, node: alg.Node, k: int) -> PartitionedFrame:
+        """Produce (at least) the first k result rows cheaply when legal."""
+        node = self.optimized(node)
+        key = node.cache_key()
+        with self._lock:
+            ent = self.cache.get(key)
+        if ent is not None:  # full result already known
+            ent.hits += 1
+            return _head(ent.result, k)
+        if not alg.prefix_safe(node):
+            return _head(self._eval(node), k)
+
+        self.stats.prefix_evals += 1
+        src = next(n for n in node.walk() if n.op == "source")
+        total = self.frames[src.params["frame_id"]].nrows
+        take = max(k, 4096)
+        while True:
+            pref = self._eval_with_source_prefix(node, src, min(take, total))
+            if pref.nrows >= k or take >= total:
+                return _head(pref, k)
+            take *= 4   # selective plans: geometric back-off
+
+    def _eval_with_source_prefix(self, node: alg.Node, src: alg.Source, k: int) -> PartitionedFrame:
+        def substitute(n: alg.Node) -> alg.Node:
+            if n is src or n == src:
+                return alg.Limit(n, k, tail=False)
+            return rewrite.rebuild(n, [substitute(c) for c in n.children])
+        return self._eval(substitute(node))
+
+    def shutdown(self):
+        self._bg.shutdown(wait=False, cancel_futures=True)
+
+
+def _head(pf: PartitionedFrame, k: int) -> PartitionedFrame:
+    return PartitionedFrame.from_frame(pf.prefix(k).to_frame().head(k))

@@ -1,0 +1,211 @@
+"""Modin-style block partitioning of a dataframe (paper §4.2).
+
+A ``PartitionedFrame`` is a 2-D grid of ``Frame`` partitions:
+
+    parts[i][j]  — row-block i, column-block j
+
+Row-based partitioning is the special case ``col_parts == 1``; column-based is
+``row_parts == 1``; block-based is the general grid.  The partitioning scheme
+is chosen *per operation* (paper: "Our current simple approach to partitioning
+is to do it on a per-operation basis"), with repartitioning inserted when the
+next operator prefers a different scheme.
+
+Execution model on this CPU container mirrors Modin-on-Ray: each partition's
+work is a jit-compiled function dispatched onto a shared thread pool (XLA
+releases the GIL while executing, so partitions genuinely run in parallel
+across cores).  On the TPU mesh the same grid maps onto (data, model) axes via
+shard_map — see ``physical.py`` and ``launch/dryrun.py``.
+
+The headline trick (paper §4.2 "Supporting billions of columns"): TRANSPOSE is
+a *grid* transpose — each block is transposed locally (a Pallas kernel on
+TPU), then the grid metadata is swapped.  No global shuffle.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import os
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .frame import Frame
+
+__all__ = ["PartitionedFrame", "default_grid", "get_pool"]
+
+_POOL: _fut.ThreadPoolExecutor | None = None
+
+
+def get_pool() -> _fut.ThreadPoolExecutor:
+    global _POOL
+    if _POOL is None:
+        workers = int(os.environ.get("REPRO_POOL_WORKERS", str(os.cpu_count() or 4)))
+        _POOL = _fut.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="repro")
+    return _POOL
+
+
+def _pmap(fn: Callable, items: Sequence) -> list:
+    """Parallel map over partitions (ordered results)."""
+    items = list(items)
+    if len(items) <= 1:
+        return [fn(x) for x in items]
+    return list(get_pool().map(fn, items))
+
+
+def default_grid(nrows: int, ncols: int, *, min_block_rows: int = 4096,
+                 max_row_parts: int | None = None) -> tuple[int, int]:
+    """Pick a (row_parts, col_parts) grid for a frame of the given shape.
+
+    Mirrors Modin's default: square-ish grid bounded by core count, with a
+    minimum block height so tiny frames stay single-partition.
+    """
+    cores = max_row_parts or (os.cpu_count() or 4)
+    row_parts = max(1, min(cores, nrows // max(1, min_block_rows)))
+    col_parts = 1 if ncols < 64 else min(4, max(1, ncols // 64))
+    return row_parts, col_parts
+
+
+def _split_sizes(n: int, parts: int) -> list[int]:
+    parts = max(1, min(parts, n)) if n > 0 else 1
+    base, rem = divmod(n, parts)
+    return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+class PartitionedFrame:
+    """A grid of Frame partitions with global row/col split metadata."""
+
+    def __init__(self, parts: list[list[Frame]]):
+        assert parts and parts[0], "grid must be non-empty"
+        width = len(parts[0])
+        assert all(len(row) == width for row in parts)
+        self.parts = parts
+
+    # ------------------------------------------------------------------
+    @property
+    def row_parts(self) -> int:
+        return len(self.parts)
+
+    @property
+    def col_parts(self) -> int:
+        return len(self.parts[0])
+
+    @property
+    def row_sizes(self) -> list[int]:
+        return [self.parts[i][0].nrows for i in range(self.row_parts)]
+
+    @property
+    def col_sizes(self) -> list[int]:
+        return [self.parts[0][j].ncols for j in range(self.col_parts)]
+
+    @property
+    def nrows(self) -> int:
+        return sum(self.row_sizes)
+
+    @property
+    def ncols(self) -> int:
+        return sum(self.col_sizes)
+
+    # ------------------------------------------------------------------
+    # conversion
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_frame(frame: Frame, row_parts: int = 1, col_parts: int = 1) -> "PartitionedFrame":
+        row_sz = _split_sizes(frame.nrows, row_parts)
+        col_sz = _split_sizes(frame.ncols, col_parts)
+        grid: list[list[Frame]] = []
+        r0 = 0
+        for rs in row_sz:
+            row_block = frame.take_rows(np.arange(r0, r0 + rs))
+            r0 += rs
+            row_cells: list[Frame] = []
+            c0 = 0
+            for cs in col_sz:
+                row_cells.append(row_block.take_cols(range(c0, c0 + cs)))
+                c0 += cs
+            grid.append(row_cells)
+        return PartitionedFrame(grid)
+
+    def to_frame(self) -> Frame:
+        rows = []
+        for i in range(self.row_parts):
+            block = self.parts[i][0]
+            for j in range(1, self.col_parts):
+                block = block.concat_cols(self.parts[i][j])
+            rows.append(block)
+        out = rows[0]
+        for block in rows[1:]:
+            out = out.concat_rows(block)
+        return out
+
+    # ------------------------------------------------------------------
+    # partition-wise application
+    # ------------------------------------------------------------------
+    def map_blockwise(self, fn: Callable[[Frame], Frame]) -> "PartitionedFrame":
+        """Apply ``fn`` to every block in parallel (embarrassingly parallel
+        operators: MAP, SELECTION with per-row predicates, RENAME...)."""
+        flat = [blk for row in self.parts for blk in row]
+        out = _pmap(fn, flat)
+        w = self.col_parts
+        return PartitionedFrame([out[i * w:(i + 1) * w] for i in range(self.row_parts)])
+
+    def map_row_blocks(self, fn: Callable[[Frame], Frame]) -> "PartitionedFrame":
+        """Apply ``fn`` to each *full-width* row block (row partitioning)."""
+        pf = self.repartition(col_parts=1)
+        out = _pmap(fn, [row[0] for row in pf.parts])
+        return PartitionedFrame([[f] for f in out])
+
+    def map_col_blocks(self, fn: Callable[[Frame], Frame]) -> "PartitionedFrame":
+        """Apply ``fn`` to each *full-height* column block (column partitioning)."""
+        pf = self.repartition(row_parts=1)
+        out = _pmap(fn, pf.parts[0])
+        return PartitionedFrame([out])
+
+    # ------------------------------------------------------------------
+    # repartitioning (the paper's scheme changes between operators)
+    # ------------------------------------------------------------------
+    def repartition(self, row_parts: int | None = None, col_parts: int | None = None) -> "PartitionedFrame":
+        rp = row_parts if row_parts is not None else self.row_parts
+        cp = col_parts if col_parts is not None else self.col_parts
+        if rp == self.row_parts and cp == self.col_parts:
+            return self
+        # Concatenate then re-split.  (A production TPU path reshards with a
+        # collective-permute; on host this is a copy.)
+        return PartitionedFrame.from_frame(self.to_frame(), rp, cp)
+
+    # ------------------------------------------------------------------
+    # grid transpose (metadata swap; per-block op supplied by caller)
+    # ------------------------------------------------------------------
+    def transpose_grid(self, block_transpose: Callable[[Frame], Frame]) -> "PartitionedFrame":
+        flat = [self.parts[i][j] for j in range(self.col_parts) for i in range(self.row_parts)]
+        out = _pmap(block_transpose, flat)
+        grid = []
+        k = 0
+        for _ in range(self.col_parts):
+            row = []
+            for _ in range(self.row_parts):
+                row.append(out[k])
+                k += 1
+            grid.append(row)
+        return PartitionedFrame(grid)
+
+    # ------------------------------------------------------------------
+    def row_block_offsets(self) -> list[int]:
+        offs = [0]
+        for s in self.row_sizes:
+            offs.append(offs[-1] + s)
+        return offs
+
+    def prefix(self, k: int) -> "PartitionedFrame":
+        """First row blocks covering ≥ k rows (prefix computation, §6.1.2)."""
+        need, keep = k, []
+        for i in range(self.row_parts):
+            keep.append(self.parts[i])
+            need -= self.parts[i][0].nrows
+            if need <= 0:
+                break
+        return PartitionedFrame(keep)
+
+    def nbytes(self) -> int:
+        return sum(blk.nbytes() for row in self.parts for blk in row)
+
+    def __repr__(self) -> str:
+        return f"PartitionedFrame[{self.nrows}x{self.ncols}; grid {self.row_parts}x{self.col_parts}]"

@@ -1,0 +1,929 @@
+"""Physical operators: dataframe algebra over partitioned frames (paper §4).
+
+Each logical operator picks a partitioning scheme per the paper's §4.2 table:
+
+  MAP / SELECTION / RENAME      → embarrassingly parallel, any partitioning
+  GROUPBY(n)                    → row-parallel partial aggregation (MXU
+                                  segment_reduce) + small combine — the
+                                  shuffle-free plan the paper motivates
+  GROUPBY(1)                    → same with G = 1 (pure reduction)
+  WINDOW                        → blocked scan with cross-block carry
+                                  composition (order-exact, still parallel)
+  TRANSPOSE                     → per-block kernel transpose + grid swap
+  SORT / JOIN / DIFFERENCE / DROP-DUPLICATES → blocking; key extraction is
+                                  device-side, index building host-side
+                                  (numpy), payload gathers device-side.
+
+The same operator bodies double as the shard_map shard-level programs for the
+TPU mesh (see ``launch/dryrun.py`` — the pipeline dry-run lowers MAP/GROUPBY/
+WINDOW over the production mesh with psums standing in for the combines).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import algebra as alg
+from .dtypes import Domain, common_storage, parse_column, storage_dtype
+from .frame import Column, Frame
+from .labels import CodedLabels, Labels, RangeLabels, labels_from_values
+from .partition import PartitionedFrame, get_pool
+from ..kernels import ops as kops
+
+__all__ = ["run_node", "eval_expr", "NULL_CODE"]
+
+NULL_CODE = -1
+
+
+# =============================================================================
+# Expression evaluation (structured predicates / scalar exprs)
+# =============================================================================
+def _col_values(frame: Frame, name: Any) -> tuple[jnp.ndarray, jnp.ndarray, Column]:
+    c = frame.col(name)
+    return c.data, c.valid_mask(), c
+
+
+def eval_expr(expr: alg.Expr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized evaluation → (values, valid_mask) device arrays."""
+    if isinstance(expr, alg.ColRef):
+        data, mask, _ = _col_values(frame, expr.name)
+        return data, mask
+    if isinstance(expr, alg.Lit):
+        m = frame.nrows
+        return jnp.full((m,), expr.value), jnp.ones((m,), jnp.bool_)
+    if isinstance(expr, alg.UnaryExpr):
+        v, mask = eval_expr(expr.operand, frame)
+        if expr.op == "~":
+            return ~v.astype(jnp.bool_), mask
+        if expr.op == "isna":
+            return ~mask, jnp.ones_like(mask)
+        if expr.op == "notna":
+            return mask, jnp.ones_like(mask)
+        raise ValueError(expr.op)
+    if isinstance(expr, alg.BinExpr):
+        return _eval_bin(expr, frame)
+    raise TypeError(expr)
+
+
+def _lit_to_code(column: Column, value: Any) -> int:
+    table = column.dictionary or ()
+    key = str(value)
+    return table.index(key) if key in table else -2  # -2 never matches
+
+def _eval_bin(expr: alg.BinExpr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
+    # coded-column vs literal comparisons translate to code-space
+    if isinstance(expr.left, alg.ColRef) and isinstance(expr.right, alg.Lit):
+        c = frame.col(expr.left.name)
+        if c.domain.is_coded and expr.op in ("==", "!="):
+            code = _lit_to_code(c, expr.right.value)
+            v = c.data == code if expr.op == "==" else c.data != code
+            return v, c.valid_mask()
+    lv, lm = eval_expr(expr.left, frame)
+    rv, rm = eval_expr(expr.right, frame)
+    mask = lm & rm
+    op = expr.op
+    if op in ("&", "|"):
+        lb, rb = lv.astype(jnp.bool_), rv.astype(jnp.bool_)
+        return (lb & rb if op == "&" else lb | rb), mask
+    if op in ("+", "-", "*", "/", "%", "//"):
+        lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
+        out = {"+": lf + rf, "-": lf - rf, "*": lf * rf, "/": lf / rf,
+               "%": jnp.mod(lf, rf), "//": jnp.floor_divide(lf, rf)}[op]
+        return out, mask
+    lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
+    out = {
+        "==": lf == rf, "!=": lf != rf, "<": lf < rf,
+        "<=": lf <= rf, ">": lf > rf, ">=": lf >= rf,
+    }[op]
+    return out, mask
+
+
+def _predicate_mask(frame: Frame, predicate) -> np.ndarray:
+    if isinstance(predicate, alg.Udf):
+        out = predicate.fn({n: c for n, c in zip(frame.col_labels.to_list(), frame.columns)}, frame)
+        return np.asarray(out, dtype=bool)
+    v, mask = eval_expr(predicate, frame)
+    return np.asarray(v.astype(jnp.bool_) & mask)  # null comparisons → False
+
+
+# =============================================================================
+# Per-operator physical implementations
+# =============================================================================
+def _selection(pf: PartitionedFrame, predicate) -> PartitionedFrame:
+    if pf.col_parts == 1:
+        return pf.map_blockwise(lambda f: f.filter_rows(_predicate_mask(f, predicate)))
+    # predicate may span column blocks: evaluate per row-stripe, filter blocks
+    def stripe(i: int) -> list[Frame]:
+        full = pf.parts[i][0]
+        for j in range(1, pf.col_parts):
+            full = full.concat_cols(pf.parts[i][j])
+        keep = _predicate_mask(full, predicate)
+        return [blk.filter_rows(keep) for blk in pf.parts[i]]
+    rows = list(get_pool().map(stripe, range(pf.row_parts)))
+    return PartitionedFrame(rows)
+
+
+def _projection(pf: PartitionedFrame, cols: Sequence[Any]) -> PartitionedFrame:
+    f = pf.repartition(col_parts=1)
+    def proj(frame: Frame) -> Frame:
+        return frame.take_cols(frame.col_labels.positions_of(cols))
+    return f.map_blockwise(proj)
+
+
+def _union(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
+    l = left.repartition(col_parts=1)
+    r = right.repartition(col_parts=1)
+    return PartitionedFrame(l.parts + r.parts)
+
+
+_HASH_MASK = (1 << 52) - 1  # exactly-representable ints in float64
+
+
+def _fnv64(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for ch in s.encode():
+        h ^= ch
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def _row_keys(frame: Frame, subset: Sequence[Any] | None) -> np.ndarray:
+    """Normalized per-row key matrix (host) for equality (dedup / difference /
+    join / groupby).  Coded (Σ*) columns map through a *value* hash so keys
+    compare correctly across frames with different dictionaries; numerics are
+    their float64 values; nulls are NaN (never equal a valid key)."""
+    cols = frame.columns if subset is None else [frame.col(n) for n in subset]
+    mats = []
+    for c in cols:
+        if c.domain.is_coded:
+            table = c.dictionary or ()
+            lut = np.asarray([float(_fnv64(str(v)) & _HASH_MASK) for v in table]
+                             or [0.0], dtype=np.float64)
+            codes = np.asarray(c.data)
+            v = lut[np.clip(codes, 0, len(lut) - 1)]
+            v = np.where(codes >= 0, v, np.nan)
+        else:
+            v = np.asarray(c.data, dtype=np.float64)
+        if c.mask is not None:
+            v = np.where(np.asarray(c.mask), v, np.nan)
+        mats.append(v)
+    return np.stack(mats, axis=1) if mats else np.zeros((frame.nrows, 0))
+
+
+def _sort_rank_keys(frame: Frame, subset: Sequence[Any]) -> list[np.ndarray]:
+    """Per-column sort keys: lexicographic rank for coded columns, values for
+    numerics (ordering, unlike equality, needs real value order)."""
+    out = []
+    for name in subset:
+        c = frame.col(name)
+        if c.domain.is_coded:
+            table = list(c.dictionary or ())
+            rank = np.empty(max(len(table), 1), dtype=np.float64)
+            for r, idx in enumerate(sorted(range(len(table)), key=lambda i: str(table[i]))):
+                rank[idx] = r
+            codes = np.asarray(c.data)
+            v = rank[np.clip(codes, 0, len(table) - 1 if table else 0)]
+            v = np.where(codes >= 0, v, np.nan)
+        else:
+            v = np.asarray(c.data, dtype=np.float64)
+        if c.mask is not None:
+            v = np.where(np.asarray(c.mask), v, np.nan)
+        out.append(v)
+    return out
+
+
+def _keys_to_ids(*key_mats: np.ndarray) -> list[np.ndarray]:
+    """Jointly factorize row-key matrices → dense ids (NaN-safe)."""
+    all_rows = np.concatenate(key_mats, axis=0)
+    # use bit-view so NaN == NaN for grouping purposes
+    view = all_rows.view(np.int64).reshape(all_rows.shape)
+    if view.shape[1] == 1:
+        # single-key fast path: 1-D unique (axis=0 unique void-sorts, ~30×
+        # slower — this is the groupby(n) hot path)
+        _, inv = np.unique(view[:, 0], return_inverse=True)
+    else:
+        _, inv = np.unique(view, axis=0, return_inverse=True)
+    out, off = [], 0
+    for m in key_mats:
+        out.append(inv[off:off + m.shape[0]].astype(np.int64))
+        off += m.shape[0]
+    return out
+
+
+def _difference(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
+    lf, rf = left.to_frame(), right.to_frame()
+    lids, rids = _keys_to_ids(_row_keys(lf, None), _row_keys(rf, None))
+    keep = ~np.isin(lids, np.unique(rids))
+    return PartitionedFrame.from_frame(lf.filter_rows(keep))
+
+
+def _drop_duplicates(pf: PartitionedFrame, subset) -> PartitionedFrame:
+    f = pf.to_frame()
+    ids = _keys_to_ids(_row_keys(f, subset))[0]
+    _, first = np.unique(ids, return_index=True)
+    keep = np.zeros(f.nrows, dtype=bool)
+    keep[first] = True
+    return PartitionedFrame.from_frame(f.filter_rows(keep))
+
+
+# ---- JOIN -------------------------------------------------------------------
+def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict) -> PartitionedFrame:
+    lf, rf = left.to_frame().induce(), right.to_frame().induce()
+    how = params["how"]
+    on = params["on"]
+    left_on = params["left_on"] or on
+    right_on = params["right_on"] or on
+
+    if left_on is None:  # CROSS-PRODUCT: nested order, left outer (Table 1 †)
+        ml, mr = lf.nrows, rf.nrows
+        lidx = np.repeat(np.arange(ml), mr)
+        ridx = np.tile(np.arange(mr), ml)
+        out = _assemble_join(lf, rf, lidx, ridx, None, None, drop_right=())
+        return PartitionedFrame.from_frame(out)
+
+    lids, rids = _keys_to_ids(_row_keys(lf, left_on), _row_keys(rf, right_on))
+    groups: dict[int, list[int]] = {}
+    for pos, gid in enumerate(rids):
+        groups.setdefault(int(gid), []).append(pos)
+
+    lidx_l, ridx_l, lnull, rnull = [], [], [], []
+    for i, gid in enumerate(lids):
+        match = groups.get(int(gid))
+        if match:
+            for r in match:          # right order breaks ties (Table 1 †)
+                lidx_l.append(i)
+                ridx_l.append(r)
+                rnull.append(True)
+        elif how in ("left", "outer"):
+            lidx_l.append(i)
+            ridx_l.append(0)
+            rnull.append(False)
+    if how in ("right", "outer"):
+        lseen = set(np.unique(lids).tolist())
+        for r, gid in enumerate(rids):
+            if int(gid) not in lseen:
+                lidx_l.append(0)
+                lnull.append(len(lidx_l) - 1)
+                ridx_l.append(r)
+                rnull.append(True)
+    lidx = np.asarray(lidx_l, dtype=np.int64)
+    ridx = np.asarray(ridx_l, dtype=np.int64)
+    rvalid = np.asarray(rnull, dtype=bool)
+    lvalid = np.ones(len(lidx), dtype=bool)
+    lvalid[np.asarray(lnull, dtype=np.int64)] = False
+
+    drop_right = tuple(right_on) if on is not None else ()
+    out = _assemble_join(lf, rf, lidx, ridx, lvalid, rvalid, drop_right)
+    return PartitionedFrame.from_frame(out)
+
+
+def _assemble_join(lf: Frame, rf: Frame, lidx, ridx, lvalid, rvalid, drop_right) -> Frame:
+    lpart = lf.take_rows(lidx)
+    keep_r = [j for j, n in enumerate(rf.col_labels.to_list()) if n not in drop_right]
+    rpart = rf.take_cols(keep_r).take_rows(ridx)
+    lpart = _mask_all(lpart, lvalid)
+    rpart = _mask_all(rpart, rvalid)
+    out = lpart.concat_cols(rpart)
+    return Frame(out.columns, RangeLabels(out.nrows), out.col_labels)  # reset index
+
+
+def _mask_all(frame: Frame, valid: np.ndarray | None) -> Frame:
+    if valid is None or valid.all():
+        return frame
+    vmask = jnp.asarray(valid)
+    cols = [Column(c.data, c.domain, c.valid_mask() & vmask, c.dictionary) for c in frame.columns]
+    return Frame(cols, frame.row_labels, frame.col_labels, frame.row_domains)
+
+
+# ---- GROUPBY ----------------------------------------------------------------
+_COMBINE = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
+
+
+def _groupby(pf: PartitionedFrame, keys: Sequence[Any], aggs: Sequence[tuple]) -> PartitionedFrame:
+    """Row-parallel partial aggregation + tree combine (paper §4.2 Fig. 6).
+
+    groupby(1) is ``keys == ()``: all rows fall into segment 0 and the combine
+    is a pure reduction (any partitioning scheme works — paper's point).
+    """
+    pf = pf.repartition(col_parts=1)
+    row_blocks = [row[0].induce() for row in pf.parts]
+
+    # ---- dense small-range INT key: no host factorization ------------------
+    # (paper's groupby(n) benchmark shape: "passenger_count"-like keys).
+    # codes = v - min, computed per block in parallel; empty groups dropped
+    # after the combine.  Avoids the serial np.unique Amdahl term.
+    dense = _dense_int_key(row_blocks, keys) if len(keys) == 1 else None
+    if dense is not None:
+        vmin, G = dense
+        codes_per_block = []
+        for b in row_blocks:
+            c = b.col(keys[0])
+            codes = np.asarray(c.data, dtype=np.int64) - vmin
+            if c.mask is not None:
+                codes = np.where(np.asarray(c.mask), codes, -1)
+            codes_per_block.append(codes.astype(np.int32))
+        return _groupby_with_codes(row_blocks, keys, aggs, codes_per_block,
+                                   int(G), key_values=[int(vmin) + i for i in range(int(G))],
+                                   drop_empty=True)
+
+    # ---- global key factorization (one column set to host) -----------------
+    if keys:
+        key_mats = [_row_keys(b, keys) for b in row_blocks]
+        ids_per_block = _keys_to_ids(*key_mats)
+        all_ids = np.concatenate(ids_per_block)
+        all_keys = np.concatenate(key_mats, axis=0)
+        valid_rows = ~np.isnan(all_keys).any(axis=1)  # pandas drops null keys
+        valid_idx = np.nonzero(valid_rows)[0]
+        uniq_ids, first = np.unique(all_ids[valid_rows], return_index=True)
+        first_global = valid_idx[first]
+        # decode representative key VALUES (O(G·K) single lookups) so output
+        # groups sort lexicographically by value, not by hash/code
+        offsets = np.cumsum([0] + [b.nrows for b in row_blocks])
+        def decode_row(gidx: int) -> tuple:
+            bi = int(np.searchsorted(offsets, gidx, side="right") - 1)
+            local = int(gidx - offsets[bi])
+            return tuple(row_blocks[bi].col(k).value_at(local) for k in keys)
+        rep_vals = [decode_row(int(gi)) for gi in first_global]
+        perm = sorted(range(len(rep_vals)), key=lambda i: tuple(
+            (str(type(v)), v) if not isinstance(v, (int, float, bool)) else ("num", v)
+            for v in rep_vals[i]))
+        order = uniq_ids[np.asarray(perm, dtype=np.int64)] if len(perm) else uniq_ids
+        rep_sorted = [rep_vals[i] for i in perm]
+        G = len(order)
+        n_ids = int(all_ids.max()) + 1 if all_ids.size else 0
+        remap = np.full(n_ids, NULL_CODE, dtype=np.int32)
+        remap[order] = np.arange(G, dtype=np.int32)
+        codes_per_block = [remap[ids] if ids.size else ids.astype(np.int32)
+                           for ids in ids_per_block]
+    else:
+        G = 1
+        rep_sorted = None
+        codes_per_block = [np.zeros(b.nrows, dtype=np.int32) for b in row_blocks]
+    return _groupby_with_codes(row_blocks, keys, aggs, codes_per_block, G,
+                               rep_sorted=rep_sorted)
+
+
+def _dense_int_key(row_blocks: list[Frame], keys) -> tuple[int, int] | None:
+    """(vmin, G) when the single key column is INT with a small value range —
+    codes are then ``v - vmin`` with no host factorization."""
+    try:
+        cols = [b.col(keys[0]) for b in row_blocks]
+    except KeyError:
+        return None
+    if any(c.domain is not Domain.INT for c in cols):
+        return None
+    vmin, vmax = None, None
+    for c in cols:
+        v = np.asarray(c.data, dtype=np.int64)
+        if c.mask is not None:
+            mask = np.asarray(c.mask)
+            if not mask.any():
+                continue
+            v = v[mask]
+        if v.size == 0:
+            continue
+        lo, hi = int(v.min()), int(v.max())
+        vmin = lo if vmin is None else min(vmin, lo)
+        vmax = hi if vmax is None else max(vmax, hi)
+    if vmin is None:
+        return None
+    g = vmax - vmin + 1
+    if g > 65536:
+        return None
+    return vmin, g
+
+
+def _groupby_with_codes(row_blocks: list[Frame], keys, aggs, codes_per_block,
+                        G: int, rep_sorted=None, key_values=None,
+                        drop_empty: bool = False) -> PartitionedFrame:
+    # ---- per-block partials (parallel; MXU segment_reduce) ------------------
+    need: list[tuple[Any, str]] = []
+    for col_label, func, _ in aggs:
+        for base in _bases_for(func):
+            if (col_label, base) not in need:
+                need.append((col_label, base))
+    need_main = tuple(need)
+
+    def block_partial(args) -> dict:
+        block, codes = args
+        codes_dev = jnp.asarray(codes)
+        out = {}
+        if drop_empty:
+            # group presence = #rows with a valid key code (independent of
+            # value nulls) so empty dense-range slots drop after the combine
+            ones = jnp.ones(block.nrows, jnp.float32)
+            out[("__presence__", "sum")] = kops.segment_reduce(
+                ones, codes_dev, G, "sum")
+        for col_label, base in need_main:
+            c = block.col(col_label)
+            v = c.data.astype(jnp.float32)
+            valid = c.valid_mask()
+            if base == "count":
+                out[(col_label, base)] = kops.segment_reduce(
+                    valid.astype(jnp.float32), codes_dev, G, "sum")
+            elif base == "sum":
+                out[(col_label, base)] = kops.segment_reduce(
+                    jnp.where(valid, v, 0.0), codes_dev, G, "sum")
+            elif base == "sumsq":
+                out[(col_label, base)] = kops.segment_reduce(
+                    jnp.where(valid, v * v, 0.0), codes_dev, G, "sum")
+            elif base == "min":
+                out[(col_label, base)] = kops.segment_reduce(
+                    jnp.where(valid, v, jnp.finfo(jnp.float32).max), codes_dev, G, "min")
+            elif base == "max":
+                out[(col_label, base)] = kops.segment_reduce(
+                    jnp.where(valid, v, jnp.finfo(jnp.float32).min), codes_dev, G, "max")
+        return out
+
+    if drop_empty:
+        need.append(("__presence__", "sum"))
+
+    partials = list(get_pool().map(block_partial, list(zip(row_blocks, codes_per_block))))
+
+    # ---- combine (G-sized, tiny vs data) ------------------------------------
+    combined: dict[tuple, jnp.ndarray] = {}
+    for key in need:
+        base = key[1]
+        parts = [p[key] for p in partials]
+        acc = parts[0]
+        for nxt in parts[1:]:
+            if base in ("sum", "count", "sumsq"):
+                acc = acc + nxt
+            elif base == "min":
+                acc = jnp.minimum(acc, nxt)
+            else:
+                acc = jnp.maximum(acc, nxt)
+        combined[key] = acc
+
+    # ---- finalize -----------------------------------------------------------
+    out_cols: list[Column] = []
+    out_names: list[Any] = []
+    # key columns first (representative decoded values, sorted order)
+    if keys and key_values is not None:      # dense-int fast path
+        out_cols.append(_host_column(list(key_values), Domain.INT))
+        out_names.append(keys[0])
+    elif keys:
+        template = row_blocks[0]
+        for kpos, kname in enumerate(keys):
+            src = template.col(kname)
+            vals = [r[kpos] for r in rep_sorted]
+            dom = src.domain if src.domain is not Domain.UNSPECIFIED else None
+            out_cols.append(_host_column(vals, dom))
+            out_names.append(kname)
+    for col_label, func, out_label in aggs:
+        cnt = combined.get((col_label, "count"))
+        if func == "count":
+            vals = cnt
+        elif func == "sum":
+            vals = combined[(col_label, "sum")]
+        elif func == "mean":
+            vals = combined[(col_label, "sum")] / jnp.maximum(cnt, 1.0)
+        elif func in ("min", "max"):
+            vals = combined[(col_label, func)]
+        elif func in ("var", "std"):
+            s, ss = combined[(col_label, "sum")], combined[(col_label, "sumsq")]
+            var = (ss - s * s / jnp.maximum(cnt, 1.0)) / jnp.maximum(cnt - 1.0, 1.0)
+            vals = jnp.sqrt(jnp.maximum(var, 0.0)) if func == "std" else var
+        elif func == "any":
+            vals = (combined[(col_label, "max")] > 0).astype(jnp.float32)
+        elif func == "all":
+            vals = (combined[(col_label, "min")] > 0).astype(jnp.float32)
+        else:
+            raise ValueError(func)
+        mask = cnt > 0 if cnt is not None else None
+        dom = Domain.INT if func == "count" else (Domain.BOOL if func in ("any", "all") else Domain.FLOAT)
+        data = vals.astype(storage_dtype(dom))
+        out_cols.append(Column(data, dom, mask if func != "count" else None, None))
+        out_names.append(out_label)
+
+    frame = Frame(out_cols, RangeLabels(G), labels_from_values(out_names))
+    if drop_empty:
+        present = np.asarray(combined[("__presence__", "sum")]) > 0
+        frame = frame.filter_rows(present)
+    return PartitionedFrame.from_frame(frame)
+
+
+def _bases_for(func: str) -> tuple[str, ...]:
+    return {
+        "sum": ("sum", "count"), "count": ("count",), "mean": ("sum", "count"),
+        "min": ("min", "count"), "max": ("max", "count"),
+        "var": ("sum", "sumsq", "count"), "std": ("sum", "sumsq", "count"),
+        "any": ("max", "count"), "all": ("min", "count"),
+    }[func]
+
+
+def _host_column(values: list, domain: Domain) -> Column:
+    p = parse_column(values, domain)
+    return Column(p.data, p.domain, p.mask, p.dictionary)
+
+
+# ---- SORT ---------------------------------------------------------------
+def _sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool) -> PartitionedFrame:
+    f = pf.to_frame().induce()
+    key_cols = []
+    for v in _sort_rank_keys(f, by):
+        # nulls (NaN) sort last regardless of direction
+        v = np.where(np.isnan(v), np.inf if ascending else -np.inf, v)
+        key_cols.append(v)
+    if ascending:
+        idx = np.lexsort(tuple(reversed(key_cols)))   # stable; first key primary
+    else:
+        idx = np.lexsort(tuple(-k for k in reversed(key_cols)))
+    return PartitionedFrame.from_frame(f.take_rows(idx))
+
+
+# ---- WINDOW -------------------------------------------------------------
+def _window(pf: PartitionedFrame, func: str, cols, size, periods) -> PartitionedFrame:
+    pf = pf.repartition(col_parts=1)
+    template = pf.parts[0][0].induce()
+    names = template.col_labels.to_list()
+    targets = list(cols) if cols else [n for n, c in zip(names, template.columns)
+                                       if c.domain.is_numeric]
+
+    if func in ("cumsum", "cummax", "cummin"):
+        return _window_scan_blocks(pf, func, targets)
+    if func in ("diff", "shift"):
+        return _window_halo(pf, func, targets, periods)
+    if func in ("rolling_sum", "rolling_mean"):
+        assert size is not None, "rolling window requires size"
+        # rolling(w) = cumsum − shift(cumsum, w); first w−1 rows are null
+        csum = _window_scan_blocks(pf, "cumsum", targets)
+        shifted = _window_halo(csum, "shift", targets, size)
+        return _rolling_combine(csum, shifted, targets, size, mean=(func == "rolling_mean"))
+    if func == "cumprod":
+        # via linear_scan: h_t = x_t * h_{t-1}  (a = x, b = 0, h0 = 1) → use
+        # log-space cumsum? keep exact: per-block scan + multiplicative carry
+        return _window_scan_blocks(pf, "cumprod", targets)
+    raise ValueError(func)
+
+
+def _apply_cols(frame: Frame, targets, fn: Callable[[Column], Column]) -> Frame:
+    cols = list(frame.columns)
+    names = frame.col_labels.to_list()
+    for j, n in enumerate(names):
+        if n in targets:
+            cols[j] = fn(cols[j])
+    return Frame(cols, frame.row_labels, frame.col_labels, frame.row_domains)
+
+
+def _window_scan_blocks(pf: PartitionedFrame, func: str, targets) -> PartitionedFrame:
+    blocks = [row[0].induce() for row in pf.parts]
+
+    def local(block: Frame) -> Frame:
+        def scan_col(c: Column) -> Column:
+            v = jnp.where(c.valid_mask(), c.data.astype(jnp.float32),
+                          _scan_identity(func))
+            if func == "cumprod":
+                out = jnp.cumprod(v, axis=0)
+            else:
+                out = kops.window_scan(v, func)
+            return Column(out.astype(jnp.float32), Domain.FLOAT, c.mask, None)
+        return _apply_cols(block, targets, scan_col)
+
+    locals_ = list(get_pool().map(local, blocks))
+
+    # cross-block carry composition: exclusive combine of block totals
+    out_blocks: list[Frame] = []
+    carries: dict[Any, float | jnp.ndarray] = {}
+    for bi, (orig, loc) in enumerate(zip(blocks, locals_)):
+        if bi == 0:
+            out_blocks.append(loc)
+        else:
+            cols = list(loc.columns)
+            names = loc.col_labels.to_list()
+            for j, n in enumerate(names):
+                if n in targets and n in carries:
+                    cr = carries[n]
+                    v = cols[j].data
+                    if func == "cumsum":
+                        v = v + cr
+                    elif func == "cummax":
+                        v = jnp.maximum(v, cr)
+                    elif func == "cummin":
+                        v = jnp.minimum(v, cr)
+                    elif func == "cumprod":
+                        v = v * cr
+                    cols[j] = Column(v, cols[j].domain, cols[j].mask, None)
+            out_blocks.append(Frame(cols, loc.row_labels, loc.col_labels, loc.row_domains))
+        # update carries from the *combined* block tails
+        last = out_blocks[-1]
+        for n in targets:
+            if last.nrows:
+                carries[n] = last.col(n).data[-1]
+    return PartitionedFrame([[b] for b in out_blocks])
+
+
+def _scan_identity(func: str):
+    return {"cumsum": 0.0, "cummax": -jnp.inf, "cummin": jnp.inf, "cumprod": 1.0}[func]
+
+
+def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int) -> PartitionedFrame:
+    """diff/shift via a ``periods``-row halo — the running tail of everything
+    before the block (a single block may be shorter than ``periods``)."""
+    blocks = [row[0].induce() for row in pf.parts]
+    halos: list[Frame | None] = [None]
+    running: Frame | None = None
+    for b in blocks[:-1]:
+        running = b.tail(periods) if running is None else (
+            running.concat_rows(b).tail(periods))
+        halos.append(running)
+
+    def local(args) -> Frame:
+        block, halo = args
+        ext = halo.concat_rows(block) if halo is not None else block
+        pad = ext.nrows - block.nrows
+
+        def do(c_name) -> Column:
+            c = ext.col(c_name)
+            v = c.data.astype(jnp.float32)
+            valid = c.valid_mask()
+            prev = jnp.roll(v, periods)
+            prev_valid = jnp.roll(valid, periods)
+            rowpos = jnp.arange(ext.nrows)
+            in_range = rowpos >= periods
+            if func == "diff":
+                out = v - prev
+                mask = valid & prev_valid & in_range
+            else:  # shift
+                out = prev
+                mask = prev_valid & in_range
+            return Column(out[pad:], Domain.FLOAT, mask[pad:], None)
+
+        cols = list(block.columns)
+        names = block.col_labels.to_list()
+        for j, n in enumerate(names):
+            if n in targets:
+                cols[j] = do(n)
+        return Frame(cols, block.row_labels, block.col_labels, block.row_domains)
+
+    out = list(get_pool().map(local, list(zip(blocks, halos))))
+    return PartitionedFrame([[b] for b in out])
+
+
+def _rolling_combine(csum: PartitionedFrame, shifted: PartitionedFrame, targets,
+                     size: int, mean: bool) -> PartitionedFrame:
+    rows = []
+    offset = 0
+    for (crow, srow) in zip(csum.parts, shifted.parts):
+        cb, sb = crow[0], srow[0]
+        cols = list(cb.columns)
+        names = cb.col_labels.to_list()
+        rowpos = jnp.arange(cb.nrows) + offset
+        full = rowpos >= size - 1
+        for j, n in enumerate(names):
+            if n in targets:
+                c, s = cb.col(n), sb.col(n)
+                base = jnp.where(s.valid_mask(), s.data, 0.0)
+                out = c.data - base
+                if mean:
+                    out = out / size
+                cols[j] = Column(out, Domain.FLOAT, c.valid_mask() & full, None)
+        rows.append([Frame(cols, cb.row_labels, cb.col_labels)])
+        offset += cb.nrows
+    return PartitionedFrame(rows)
+
+
+# ---- TRANSPOSE ----------------------------------------------------------
+def _transpose(pf: PartitionedFrame) -> PartitionedFrame:
+    """Grid transpose: per-block kernel transpose + grid metadata swap."""
+    def block_t(frame: Frame) -> Frame:
+        # No induction: coded-ness is decidable from declared domains, and
+        # UNSPECIFIED columns (a prior transpose's output) are numeric storage
+        # whose logical schema is recovered via row_domains downstream.
+        f = frame
+        tgt = common_storage(f.schema)
+        if tgt.is_coded:
+            return _transpose_coded(f.induce())
+        mat, dom = f.as_matrix(tgt if tgt is not Domain.UNSPECIFIED else Domain.FLOAT)
+        out = kops.transpose(mat)
+        masks = [c.mask for c in f.columns]
+        out_mask = None
+        if any(m is not None for m in masks):
+            mm = jnp.stack([c.valid_mask() for c in f.columns], axis=1)
+            out_mask = np.asarray(kops.transpose(mm))
+        # Wide-output fast path ("billions of columns", paper §4.2): one
+        # device→host materialization, then zero-copy numpy views per column —
+        # NOT n_cols separate device slices (O(µs) dispatch each).
+        out_np = np.asarray(out)
+        # second-transpose schema recovery (paper §3.3): the child's recorded
+        # row-type vector (length == child.nrows == our ncols) gives the
+        # output schema without re-running S(·) over values.
+        rec = f.row_domains if (f.row_domains is not None
+                                and len(f.row_domains) == f.nrows) else None
+        new_cols = []
+        for i in range(f.nrows):
+            dom = rec[i] if rec is not None else Domain.UNSPECIFIED
+            data = out_np[:, i]
+            if rec is not None:
+                data = data.astype(storage_dtype(dom))
+            new_cols.append(Column(
+                data, dom,
+                None if out_mask is None else out_mask[:, i],
+                None))
+        return Frame(new_cols, f.col_labels, f.row_labels, row_domains=f.schema)
+
+    return pf.transpose_grid(block_t)
+
+
+def _transpose_coded(f: Frame) -> Frame:
+    """Heterogeneous/string transpose: host re-encode (paper: coerce to
+    Object; schema induction recovers on a second transpose)."""
+    records = f.to_records()
+    rec = f.row_domains if (f.row_domains is not None
+                            and len(f.row_domains) == f.nrows) else None
+    new_cols = []
+    for i in range(f.nrows):
+        vals = [records[i][j] for j in range(f.ncols)]
+        if rec is not None:
+            new_cols.append(_host_column(vals, rec[i]))
+        else:
+            new_cols.append(_host_column(
+                [None if v is None else str(v) for v in vals], Domain.STR))
+    return Frame(new_cols, f.col_labels, f.row_labels, row_domains=f.schema)
+
+
+# ---- MAP ------------------------------------------------------------------
+def _map(pf: PartitionedFrame, udf: alg.Udf) -> PartitionedFrame:
+    def apply(frame: Frame) -> Frame:
+        f = frame.induce()
+        cols_in = {n: c for n, c in zip(f.col_labels.to_list(), f.columns)}
+        out = udf.fn(cols_in, f)
+        if isinstance(out, Frame):
+            return out
+        # dict {label: Column | array | (array, mask)} preserving row count
+        names, cols = [], []
+        for name, v in out.items():
+            names.append(name)
+            if isinstance(v, Column):
+                cols.append(v)
+            elif isinstance(v, tuple):
+                data, mask = v
+                cols.append(Column(jnp.asarray(data), _infer_dom(data), mask, None))
+            else:
+                arr = jnp.asarray(v)
+                cols.append(Column(arr, _infer_dom(arr), None, None))
+        return Frame(cols, f.row_labels, labels_from_values(names))
+
+    if udf.elementwise:
+        if udf.deps is None:
+            return pf.repartition(col_parts=1).map_blockwise(apply)
+        return pf.repartition(col_parts=1).map_blockwise(apply)
+    return PartitionedFrame.from_frame(apply(pf.to_frame()))
+
+
+def _infer_dom(arr) -> Domain:
+    d = jnp.asarray(arr).dtype
+    if d == jnp.bool_:
+        return Domain.BOOL
+    if jnp.issubdtype(d, jnp.integer):
+        return Domain.INT
+    return Domain.FLOAT
+
+
+# ---- label movement ---------------------------------------------------------
+def _to_labels(pf: PartitionedFrame, column: Any) -> PartitionedFrame:
+    def conv(frame: Frame) -> Frame:
+        f = frame.induce()
+        j = f.col_labels.position_of(column)
+        c = f.columns[j]
+        labels = labels_from_values(c.to_pylist(), c.domain)
+        keep = [x for x in range(f.ncols) if x != j]
+        g = f.take_cols(keep)
+        return Frame(g.columns, labels, g.col_labels)
+    return pf.repartition(col_parts=1).map_blockwise(conv)
+
+
+def _from_labels(pf: PartitionedFrame, label: Any) -> PartitionedFrame:
+    pf = pf.repartition(col_parts=1)
+    offsets = pf.row_block_offsets()
+
+    def conv(args) -> Frame:
+        (frame, start) = args
+        f = frame
+        vals = f.row_labels.to_list()
+        c = _host_column(vals, None if not isinstance(f.row_labels, RangeLabels) else Domain.INT)
+        new = Frame([c] + list(f.columns),
+                    RangeLabels(f.nrows, start),
+                    labels_from_values([label]).concat(f.col_labels))
+        return new
+
+    out = list(get_pool().map(conv, [(row[0], offsets[i]) for i, row in enumerate(pf.parts)]))
+    return PartitionedFrame([[b] for b in out])
+
+
+def _rename(pf: PartitionedFrame, mapping_items) -> PartitionedFrame:
+    mapping = dict(mapping_items)
+    def ren(frame: Frame) -> Frame:
+        names = [mapping.get(n, n) for n in frame.col_labels.to_list()]
+        return Frame(frame.columns, frame.row_labels, labels_from_values(names), frame.row_domains)
+    return pf.map_blockwise(ren)
+
+
+def _limit(pf: PartitionedFrame, k: int, tail: bool) -> PartitionedFrame:
+    # Touch only the row blocks the prefix/suffix needs (§6.1.2).
+    if not tail:
+        f = pf.prefix(k).to_frame()
+        return PartitionedFrame.from_frame(f.head(k))
+    need, keep = k, []
+    for i in range(pf.row_parts - 1, -1, -1):
+        keep.insert(0, pf.parts[i])
+        need -= pf.parts[i][0].nrows
+        if need <= 0:
+            break
+    f = PartitionedFrame(keep).to_frame()
+    return PartitionedFrame.from_frame(f.tail(k))
+
+
+# ---- rewrite targets: column-space ops without any TRANSPOSE (paper §5) ------
+def _key_rows_matrix(pf: PartitionedFrame, row_names: Sequence[Any]) -> np.ndarray:
+    """(len(row_names), ncols) float64 matrix of the named rows' values."""
+    pf1 = pf.repartition(col_parts=1)
+    offsets = pf1.row_block_offsets()
+    rows = []
+    for name in row_names:
+        found = None
+        for bi, row in enumerate(pf1.parts):
+            try:
+                local = row[0].row_labels.position_of(name)
+                found = (bi, local)
+                break
+            except KeyError:
+                continue
+        if found is None:
+            raise KeyError(name)
+        bi, local = found
+        one = pf1.parts[bi][0].take_rows(np.asarray([local]))
+        rows.append(_row_keys(one.induce(), None)[0])
+    return np.stack(rows, axis=0)
+
+
+def _column_sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool) -> PartitionedFrame:
+    keys = _key_rows_matrix(pf, by)                       # (K, n)
+    if ascending:
+        perm = np.lexsort(tuple(reversed([k for k in keys])))
+    else:
+        perm = np.lexsort(tuple(reversed([-k for k in keys])))
+    pf1 = pf.repartition(col_parts=1)
+    return pf1.map_blockwise(lambda f: f.take_cols(perm.tolist()))
+
+
+def _column_filter(pf: PartitionedFrame, predicate: alg.Expr) -> PartitionedFrame:
+    refs = sorted(predicate.refs(), key=repr)
+    keys = _key_rows_matrix(pf, refs)                     # (K, n)
+    n = keys.shape[1]
+    temp = Frame(
+        [Column(jnp.asarray(keys[i].astype(np.float32)), Domain.FLOAT) for i in range(len(refs))],
+        RangeLabels(n),
+        labels_from_values(list(refs)),
+    )
+    keep = _predicate_mask(temp, predicate)
+    idx = np.nonzero(keep)[0].tolist()
+    pf1 = pf.repartition(col_parts=1)
+    return pf1.map_blockwise(lambda f: f.take_cols(idx))
+
+
+# =============================================================================
+# dispatcher
+# =============================================================================
+def run_node(node: alg.Node, inputs: list[PartitionedFrame]) -> PartitionedFrame:
+    op = node.op
+    if op == "selection":
+        return _selection(inputs[0], node.params["predicate"])
+    if op == "projection":
+        return _projection(inputs[0], node.params["cols"])
+    if op == "union":
+        return _union(inputs[0], inputs[1])
+    if op == "difference":
+        return _difference(inputs[0], inputs[1])
+    if op == "join":
+        return _join(inputs[0], inputs[1], node.params)
+    if op == "drop_duplicates":
+        return _drop_duplicates(inputs[0], node.params["subset"])
+    if op == "groupby":
+        return _groupby(inputs[0], node.params["keys"], node.params["aggs"])
+    if op == "sort":
+        return _sort(inputs[0], node.params["by"], node.params["ascending"])
+    if op == "rename":
+        return _rename(inputs[0], node.params["mapping"])
+    if op == "window":
+        return _window(inputs[0], node.params["func"], node.params["cols"],
+                       node.params["size"], node.params["periods"])
+    if op == "transpose":
+        return _transpose(inputs[0])
+    if op == "map":
+        return _map(inputs[0], node.params["udf"])
+    if op == "to_labels":
+        return _to_labels(inputs[0], node.params["column"])
+    if op == "from_labels":
+        return _from_labels(inputs[0], node.params["label"])
+    if op == "limit":
+        return _limit(inputs[0], node.params["k"], node.params["tail"])
+    if op == "column_sort":
+        return _column_sort(inputs[0], node.params["by"], node.params["ascending"])
+    if op == "column_filter":
+        return _column_filter(inputs[0], node.params["predicate"])
+    raise ValueError(f"no physical implementation for {op}")

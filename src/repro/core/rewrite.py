@@ -1,0 +1,374 @@
+"""Query rewriting for the dataframe algebra (paper §5 "Pipelining and
+rewriting").
+
+Ordered semantics restrict the classical rule set — set-operator
+commutativity fails without compensating sorts — but the paper identifies the
+rules that *do* hold, plus dataframe-specific transpose eliminations:
+
+  R1  TRANSPOSE(TRANSPOSE(x))                  → x
+  R2  TRANSPOSE(SORT(TRANSPOSE(x)))            → COLUMN_SORT(x)      (MAP+RENAME)
+  R3  TRANSPOSE(SELECTION(TRANSPOSE(x)))       → COLUMN_FILTER(x)
+  R4  SELECTION(SELECTION(x, p1), p2)          → SELECTION(x, p2 & p1)
+      (filters commute / fuse under ordered semantics)
+  R5  SELECTION(UNION(l, r), p)                → UNION(SEL(l,p), SEL(r,p))
+  R6  SELECTION(MAP(x, u), p)                  → MAP(SELECTION(x, p), u)
+      when u is elementwise and p only references columns u passes through
+  R7  SELECTION(CROSS(l, r), l.a == r.b)       → JOIN(l, r, a=b)
+      (the paper's §6.2 incremental-join pattern)
+  R8  MAP(MAP(x, u1), u2)                      → MAP(x, u2 ∘ u1)     (pipelining)
+  R9  PROJECTION(PROJECTION(x, c1), c2)        → PROJECTION(x, c2)
+  R10 LIMIT(LIMIT(x, k1), k2)                  → LIMIT(x, min)
+  R11 LIMIT(k) pushdown through row-local ops  → evaluate less input
+      (prefix computation §6.1.2 exploits this dynamically; the static rule
+      pushes LIMIT below SELECTION-free row-local chains)
+
+Rules apply bottom-up to a fixpoint.  Column-name inference threads through
+static-schema operators so R6/R7 only fire when provably safe.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+from . import algebra as alg
+
+__all__ = ["optimize", "infer_columns", "rebuild"]
+
+
+# -----------------------------------------------------------------------------
+# static column-label inference (None ⇒ unknown/dynamic)
+# -----------------------------------------------------------------------------
+def infer_columns(node: alg.Node, source_columns: Callable[[str], list | None]) -> list | None:
+    op = node.op
+
+    def child(i=0):
+        return infer_columns(node.children[i], source_columns)
+
+    if op == "source":
+        return source_columns(node.params["frame_id"])
+    if op in ("selection", "sort", "drop_duplicates", "limit", "window",
+              "column_sort", "column_filter"):
+        return child()
+    if op == "projection":
+        return list(node.params["cols"])
+    if op == "rename":
+        base = child()
+        if base is None:
+            return None
+        mapping = dict(node.params["mapping"])
+        return [mapping.get(c, c) for c in base]
+    if op in ("union", "difference"):
+        return child(0)
+    if op == "join":
+        l, r = child(0), infer_columns(node.children[1], source_columns)
+        if l is None or r is None:
+            return None
+        drop = set(node.params["on"] or ())
+        return l + [c for c in r if c not in drop]
+    if op == "map":
+        u: alg.Udf = node.params["udf"]
+        return list(u.out_cols) if u.out_cols is not None else None
+    if op == "to_labels":
+        base = child()
+        if base is None:
+            return None
+        return [c for c in base if c != node.params["column"]]
+    if op == "from_labels":
+        base = child()
+        if base is None:
+            return None
+        return [node.params["label"]] + base
+    if op == "groupby":
+        return list(node.params["keys"]) + [a[2] for a in node.params["aggs"]]
+    return None  # transpose & anything else: dynamic
+
+
+# -----------------------------------------------------------------------------
+# node reconstruction
+# -----------------------------------------------------------------------------
+_CTORS: dict[str, Callable] = {}
+
+
+def _ctor(op: str):
+    def reg(fn):
+        _CTORS[op] = fn
+        return fn
+    return reg
+
+
+@_ctor("source")
+def _(n, ch):
+    return n
+
+
+@_ctor("selection")
+def _(n, ch):
+    return alg.Selection(ch[0], n.params["predicate"])
+
+
+@_ctor("projection")
+def _(n, ch):
+    return alg.Projection(ch[0], n.params["cols"])
+
+
+@_ctor("union")
+def _(n, ch):
+    return alg.Union(ch[0], ch[1])
+
+
+@_ctor("difference")
+def _(n, ch):
+    return alg.Difference(ch[0], ch[1])
+
+
+@_ctor("join")
+def _(n, ch):
+    return alg.Join(ch[0], ch[1], on=n.params["on"], how=n.params["how"],
+                    left_on=n.params["left_on"], right_on=n.params["right_on"])
+
+
+@_ctor("drop_duplicates")
+def _(n, ch):
+    return alg.DropDuplicates(ch[0], n.params["subset"])
+
+
+@_ctor("groupby")
+def _(n, ch):
+    return alg.GroupBy(ch[0], n.params["keys"], n.params["aggs"])
+
+
+@_ctor("sort")
+def _(n, ch):
+    return alg.Sort(ch[0], n.params["by"], n.params["ascending"])
+
+
+@_ctor("rename")
+def _(n, ch):
+    return alg.Rename(ch[0], dict(n.params["mapping"]))
+
+
+@_ctor("window")
+def _(n, ch):
+    return alg.Window(ch[0], n.params["func"], n.params["cols"],
+                      n.params["size"], n.params["periods"])
+
+
+@_ctor("transpose")
+def _(n, ch):
+    return alg.Transpose(ch[0])
+
+
+@_ctor("map")
+def _(n, ch):
+    return alg.Map(ch[0], n.params["udf"])
+
+
+@_ctor("to_labels")
+def _(n, ch):
+    return alg.ToLabels(ch[0], n.params["column"])
+
+
+@_ctor("from_labels")
+def _(n, ch):
+    return alg.FromLabels(ch[0], n.params["label"])
+
+
+@_ctor("limit")
+def _(n, ch):
+    return alg.Limit(ch[0], n.params["k"], n.params["tail"])
+
+
+@_ctor("column_sort")
+def _(n, ch):
+    return alg.ColumnSort(ch[0], n.params["by"], n.params["ascending"])
+
+
+@_ctor("column_filter")
+def _(n, ch):
+    return alg.ColumnFilter(ch[0], n.params["predicate"])
+
+
+def rebuild(node: alg.Node, children: Sequence[alg.Node]) -> alg.Node:
+    if tuple(children) == node.children:
+        return node
+    return _CTORS[node.op](node, list(children))
+
+
+# -----------------------------------------------------------------------------
+# the rules
+# -----------------------------------------------------------------------------
+def _and(p1: alg.Expr, p2: alg.Expr) -> alg.Expr:
+    return alg.BinExpr("&", p1, p2)
+
+
+def _rule_once(node: alg.Node, cols_of: Callable[[alg.Node], list | None]) -> alg.Node | None:
+    """Try every rule at ``node``; return the rewritten node or None."""
+    op = node.op
+    ch = node.children
+
+    # R1: TRANSPOSE∘TRANSPOSE → identity
+    if op == "transpose" and ch[0].op == "transpose":
+        return ch[0].children[0]
+
+    # R2: TRANSPOSE∘SORT∘TRANSPOSE → COLUMN_SORT
+    if op == "transpose" and ch[0].op == "sort" and ch[0].children[0].op == "transpose":
+        inner = ch[0].children[0].children[0]
+        return alg.ColumnSort(inner, ch[0].params["by"], ch[0].params["ascending"])
+
+    # R3: TRANSPOSE∘SELECTION∘TRANSPOSE → COLUMN_FILTER (structured preds only)
+    if (op == "transpose" and ch[0].op == "selection"
+            and ch[0].children[0].op == "transpose"
+            and isinstance(ch[0].params["predicate"], alg.Expr)):
+        inner = ch[0].children[0].children[0]
+        return alg.ColumnFilter(inner, ch[0].params["predicate"])
+
+    # R4: fuse stacked selections (filters commute under ordered semantics)
+    if (op == "selection" and ch[0].op == "selection"
+            and isinstance(node.params["predicate"], alg.Expr)
+            and isinstance(ch[0].params["predicate"], alg.Expr)):
+        return alg.Selection(ch[0].children[0],
+                             _and(node.params["predicate"], ch[0].params["predicate"]))
+
+    # R5: push selection through union
+    if op == "selection" and ch[0].op == "union":
+        p = node.params["predicate"]
+        u = ch[0]
+        return alg.Union(alg.Selection(u.children[0], p), alg.Selection(u.children[1], p))
+
+    # R6: push selection below an elementwise pass-through MAP
+    if (op == "selection" and ch[0].op == "map"
+            and isinstance(node.params["predicate"], alg.Expr)):
+        u: alg.Udf = ch[0].params["udf"]
+        pred: alg.Expr = node.params["predicate"]
+        in_cols = cols_of(ch[0].children[0])
+        out_cols = cols_of(ch[0])
+        if (u.elementwise and in_cols is not None and out_cols is not None
+                and pred.refs() <= (set(in_cols) & set(out_cols))
+                and _passes_through(u, pred.refs())):
+            return alg.Map(alg.Selection(ch[0].children[0], pred), u)
+
+    # R7: selection(cross, l.a == r.b) → join  (paper §6.2)
+    if (op == "selection" and ch[0].op == "join" and ch[0].params["on"] is None
+            and ch[0].params["left_on"] is None and ch[0].params["how"] == "inner"):
+        pred = node.params["predicate"]
+        if (isinstance(pred, alg.BinExpr) and pred.op == "=="
+                and isinstance(pred.left, alg.ColRef) and isinstance(pred.right, alg.ColRef)):
+            l, r = ch[0].children
+            lcols, rcols = cols_of(l), cols_of(r)
+            if lcols is not None and rcols is not None:
+                a, b = pred.left.name, pred.right.name
+                if a in lcols and b in rcols and a not in rcols and b not in lcols:
+                    return alg.Join(l, r, how="inner", left_on=[a], right_on=[b])
+                if b in lcols and a in rcols and b not in rcols and a not in lcols:
+                    return alg.Join(l, r, how="inner", left_on=[b], right_on=[a])
+
+    # R8: fuse stacked elementwise MAPs (pipelining)
+    if op == "map" and ch[0].op == "map":
+        u2: alg.Udf = node.params["udf"]
+        u1: alg.Udf = ch[0].params["udf"]
+        if u1.elementwise and u2.elementwise:
+            fused = _fuse_udfs(u1, u2)
+            return alg.Map(ch[0].children[0], fused)
+
+    # R9: collapse stacked projections
+    if op == "projection" and ch[0].op == "projection":
+        return alg.Projection(ch[0].children[0], node.params["cols"])
+
+    # R10: collapse stacked limits (same direction)
+    if op == "limit" and ch[0].op == "limit" and node.params["tail"] == ch[0].params["tail"]:
+        return alg.Limit(ch[0].children[0],
+                         min(node.params["k"], ch[0].params["k"]),
+                         node.params["tail"])
+
+    # R11: push head-LIMIT below row-local order-preserving unary ops
+    if (op == "limit" and not node.params["tail"]
+            and ch[0].op in ("map", "rename", "projection") and len(ch[0].children) == 1):
+        u = ch[0]
+        if u.op != "map" or u.params["udf"].elementwise:
+            pushed = alg.Limit(u.children[0], node.params["k"], False)
+            return rebuild(u, [pushed])
+
+    return None
+
+
+def _passes_through(u: alg.Udf, names) -> bool:
+    """Best-effort: MAP passes a column through unchanged if it's declared in
+    out_cols and not in deps (the udf never reads it, so by the elementwise
+    contract it must be forwarding it)."""
+    if u.out_cols is None:
+        return False
+    if u.deps is None:
+        return False
+    return all(n in u.out_cols and n not in u.deps for n in names)
+
+
+def _fuse_udfs(u1: alg.Udf, u2: alg.Udf) -> alg.Udf:
+    def fused(cols, frame):
+        from .frame import Frame  # local import to avoid cycle at module load
+        mid = u1.fn(cols, frame)
+        if not isinstance(mid, Frame):
+            from .labels import labels_from_values
+            from .frame import Column
+            import jax.numpy as jnp
+            names, cs = [], []
+            for name, v in mid.items():
+                names.append(name)
+                cs.append(v if isinstance(v, Column) else Column(jnp.asarray(v), _dom_of(v)))
+            mid = Frame(cs, frame.row_labels, labels_from_values(names))
+        cols2 = {n: c for n, c in zip(mid.col_labels.to_list(), mid.columns)}
+        return u2.fn(cols2, mid)
+
+    return alg.Udf(
+        name=f"{u2.name}∘{u1.name}",
+        fn=fused,
+        deps=u1.deps,
+        elementwise=True,
+        out_cols=u2.out_cols,
+        version=max(u1.version, u2.version),
+    )
+
+
+def _dom_of(v):
+    import jax.numpy as jnp
+    from .dtypes import Domain
+    d = jnp.asarray(v).dtype
+    if d == jnp.bool_:
+        return Domain.BOOL
+    if jnp.issubdtype(d, jnp.integer):
+        return Domain.INT
+    return Domain.FLOAT
+
+
+# -----------------------------------------------------------------------------
+# driver
+# -----------------------------------------------------------------------------
+def optimize(node: alg.Node, source_columns: Callable[[str], list | None] | None = None,
+             max_passes: int = 10) -> alg.Node:
+    """Bottom-up rewriting to a fixpoint."""
+    src = source_columns or (lambda _fid: None)
+    memo: dict = {}
+
+    def cols_of(n: alg.Node):
+        if n not in memo:
+            memo[n] = infer_columns(n, src)
+        return memo[n]
+
+    def rewrite_tree(n: alg.Node) -> alg.Node:
+        new_children = [rewrite_tree(c) for c in n.children]
+        cur = rebuild(n, new_children)
+        for _ in range(max_passes):
+            nxt = _rule_once(cur, cols_of)
+            if nxt is None:
+                return cur
+            cur = nxt
+            # rule may expose new opportunities below; re-descend once
+            cur = rebuild(cur, [rewrite_tree(c) for c in cur.children])
+        return cur
+
+    prev = None
+    cur = node
+    passes = 0
+    while cur is not prev and passes < max_passes:
+        prev = cur
+        cur = rewrite_tree(cur)
+        passes += 1
+    return cur

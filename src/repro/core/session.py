@@ -1,0 +1,96 @@
+"""Session model (paper §3.5 Workflow Definitions + §6).
+
+A *session* owns the frame store, the executor (with its reuse cache), the
+evaluation mode, and statement bookkeeping.  Statements create plan nodes;
+queries are the DAGs those statements compose; the session-level machinery
+(§6) — opportunistic scheduling, multi-query sharing, materialization reuse —
+lives in the executor and is configured here.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any
+
+from . import algebra as alg
+from .executor import Executor
+from .frame import Frame
+from .partition import PartitionedFrame, default_grid
+
+__all__ = ["Session", "EvalMode", "get_session", "set_session"]
+
+
+class EvalMode:
+    EAGER = "eager"                  # pandas semantics (paper-faithful baseline)
+    LAZY = "lazy"                    # Spark semantics
+    OPPORTUNISTIC = "opportunistic"  # §6.1.1 — background compute in think time
+
+
+class Session:
+    def __init__(self, *, mode: str = EvalMode.OPPORTUNISTIC,
+                 cache_budget_bytes: int = 1 << 30, optimize: bool = True,
+                 default_row_parts: int | None = None):
+        self.mode = mode
+        self.frames: dict[str, PartitionedFrame] = {}
+        self.executor = Executor(self.frames, cache_budget_bytes=cache_budget_bytes,
+                                 optimize=optimize)
+        self._ids = itertools.count()
+        self._lock = threading.Lock()
+        self.default_row_parts = default_row_parts
+        self.statements: list[alg.Node] = []   # session history (§3.5)
+
+    # ------------------------------------------------------------------
+    def register_frame(self, frame: Frame | PartitionedFrame,
+                       row_parts: int | None = None, col_parts: int = 1) -> alg.Source:
+        """Ingest a materialized frame; returns its Source node."""
+        if isinstance(frame, Frame):
+            rp = row_parts or self.default_row_parts
+            if rp is None:
+                rp, col_parts = default_grid(frame.nrows, frame.ncols)
+            pf = PartitionedFrame.from_frame(frame, rp, col_parts)
+        else:
+            pf = frame
+        fid = f"frame_{next(self._ids)}"
+        with self._lock:
+            self.frames[fid] = pf
+        return alg.Source(fid, nrows=pf.nrows, ncols=pf.ncols)
+
+    # ------------------------------------------------------------------
+    def statement(self, node: alg.Node) -> alg.Node:
+        """Record a statement; under opportunistic mode, schedule it now —
+        the background work the user gets for free during think time."""
+        self.statements.append(node)
+        if self.mode == EvalMode.OPPORTUNISTIC:
+            self.executor.submit(node)
+        elif self.mode == EvalMode.EAGER:
+            self.executor.evaluate(node)
+        return node
+
+    def collect(self, node: alg.Node) -> Frame:
+        return self.executor.evaluate(node).to_frame()
+
+    def head(self, node: alg.Node, k: int = 5) -> Frame:
+        return self.executor.evaluate_prefix(node, k).to_frame().head(k)
+
+    def tail(self, node: alg.Node, k: int = 5) -> Frame:
+        return self.executor.evaluate(alg.Limit(node, k, tail=True)).to_frame()
+
+    def close(self):
+        self.executor.shutdown()
+        self.frames.clear()
+
+
+_DEFAULT: Session | None = None
+
+
+def get_session() -> Session:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Session()
+    return _DEFAULT
+
+
+def set_session(s: Session) -> Session:
+    global _DEFAULT
+    _DEFAULT = s
+    return s

@@ -1,0 +1,51 @@
+"""Synthetic data generators: a toy text corpus (for the end-to-end training
+examples) and tabular data shaped like the paper's NYC-taxicab benchmark
+(for the dataframe benchmarks — Fig. 6 uses taxi trips replicated 1–11×)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.dtypes import Domain
+from ..core.frame import Frame
+
+_WORDS = (
+    "the of and a to in is you that it he was for on are as with his they I "
+    "at be this have from or one had by word but not what all were we when "
+    "your can said there use an each which she do how their if will up other "
+    "about out many then them these so some her would make like him into time "
+    "has look two more write go see number no way could people my than first "
+    "water been call who oil its now find long down day did get come made may"
+).split()
+
+
+def synthetic_corpus(n_docs: int, seed: int = 0, mean_len: int = 64) -> list[str]:
+    rng = np.random.default_rng(seed)
+    docs = []
+    for _ in range(n_docs):
+        n = max(4, int(rng.poisson(mean_len)))
+        docs.append(" ".join(rng.choice(_WORDS, size=n)))
+    return docs
+
+
+def taxi_like_frame(n_rows: int, seed: int = 0, n_float_cols: int = 6) -> Frame:
+    """Columns mirroring the paper's benchmark data: a small-cardinality
+    group key ("passenger_count"), floats with nulls, and a category."""
+    rng = np.random.default_rng(seed)
+    data = {
+        "passenger_count": rng.integers(1, 7, n_rows).tolist(),
+        "payment_type": rng.choice(["card", "cash", "dispute"], n_rows).tolist(),
+    }
+    for j in range(n_float_cols):
+        col = rng.standard_normal(n_rows)
+        nulls = rng.random(n_rows) < 0.01
+        vals = [None if nulls[i] else float(col[i]) for i in range(n_rows)]
+        data[f"f{j}"] = vals
+    return Frame.from_pydict(data)
+
+
+def numeric_matrix_frame(n_rows: int, n_cols: int, seed: int = 0) -> Frame:
+    """Homogeneous float frame (matrix dataframe) — the transpose benchmark."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    mat = jnp.asarray(rng.standard_normal((n_rows, n_cols)).astype(np.float32))
+    return Frame.from_matrix(mat, Domain.FLOAT)

@@ -1,0 +1,110 @@
+"""Single-token GQA decode attention over a KV cache (serve_step hot-spot).
+
+At decode, arithmetic intensity collapses: one query token attends to a long
+cache, so the op is HBM-bandwidth-bound on the KV stream.  The kernel keeps
+the whole (G, D) grouped-query tile resident (G = query heads per KV head —
+the GQA group), streams (TS, D) cache tiles once, and fuses the softmax
+normalization — every cache byte is read exactly once.
+
+Grid: (num_cache_tiles,).  ``length`` (valid cache prefix) arrives as a
+scalar-prefetch operand so masking is positional, enabling a static cache
+allocation with dynamic occupancy — the serving engine's paged-lite layout.
+
+Wrapper: q (H, D), cache (S, KVH, D) → vmap over KV heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._util import LANE, SUBLANE, cdiv, ceil_to, pad_axis, pick_tile, use_interpret
+
+_NEG = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, ts: int, ns: int):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale            # (G, D)
+    k = k_ref[...].astype(jnp.float32)                    # (TS, D)
+    v = v_ref[...].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, TS)
+    kpos = j * ts + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[0], s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == ns - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "ts"))
+def _decode_single(q, k, v, length, scale: float, ts: int):
+    g, d = q.shape
+    s = k.shape[0]
+    ns = cdiv(s, ts)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ns,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda j, *_: (0, 0)),
+            pl.BlockSpec((ts, d), lambda j, *_: (j, 0)),
+            pl.BlockSpec((ts, d), lambda j, *_: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, d), lambda j, *_: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, ts=ts, ns=ns),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, d), q.dtype),
+        interpret=use_interpret(),
+    )(length, q, k, v)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray | int, *, scale: float | None = None,
+                     tile_s: int = 512) -> jnp.ndarray:
+    """q: (H, D) one token's query heads; cache: (S, KVH, D); returns (H, D)."""
+    h, d = q.shape
+    s, kvh, _ = k_cache.shape
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    scale_v = scale if scale is not None else 1.0 / (d ** 0.5)
+    ts = pick_tile(s, tile_s, LANE)
+    dp = ceil_to(d, LANE)
+    gp = ceil_to(group, SUBLANE)
+    qg = pad_axis(pad_axis(q.reshape(kvh, group, d), 1, gp), 2, dp)          # (KVH, Gp, Dp)
+    kc = pad_axis(pad_axis(k_cache.transpose(1, 0, 2), 1, ceil_to(s, ts)), 2, dp)  # (KVH, Sp, Dp)
+    vc = pad_axis(pad_axis(v_cache.transpose(1, 0, 2), 1, ceil_to(s, ts)), 2, dp)
+    len_arr = jnp.full((1,), length, dtype=jnp.int32) if not hasattr(length, "shape") else jnp.asarray(length, jnp.int32).reshape(1)
+    run = functools.partial(_decode_single, scale=scale_v, ts=ts)
+    out = jax.vmap(lambda a, b, c: run(a, b, c, len_arr))(qg, kc, vc)        # (KVH, Gp, Dp)
+    return out[:, :group, :d].reshape(h, d)

@@ -1,0 +1,125 @@
+"""Fused (flash) attention kernel — training/prefill path of the LM substrate.
+
+Standard online-softmax tiling adapted to TPU: the (TQ, D) query tile stays
+resident in VMEM while (TK, D) key/value tiles stream through the sequential
+grid; running max m, denominator l and accumulator acc live in VMEM scratch.
+MXU does both matmuls (QKᵀ and PV) per tile pair; nothing S×S ever
+materializes in HBM.
+
+Grid: (num_q_tiles, num_kv_tiles), kv innermost.  Causal and local-window
+masking are positional (supports gemma3's 5:1 local:global pattern); query
+positions are aligned to the *end* of the key axis so the same kernel serves
+chunked prefill.
+
+Wrapper handles batch/head via vmap and GQA by repeating KV heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._util import LANE, SUBLANE, cdiv, ceil_to, pad_axis, pick_tile, use_interpret
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  sq: int, sk: int, tq: int, tk: int, nk: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale            # (TQ, D)
+    k = k_ref[...].astype(jnp.float32)                    # (TK, D)
+    v = v_ref[...].astype(jnp.float32)                    # (TK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (TQ, TK)
+
+    qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], k.shape[0]), 0) + (sk - sq)
+    kpos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], k.shape[0]), 1)
+    mask = kpos < sk                                      # padded keys invalid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]                                   # (TQ, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (TQ, TK)
+    alpha = jnp.exp(m_prev - m_new)                       # (TQ, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window", "sq", "sk", "tq", "tk"))
+def _flash_single(q, k, v, scale: float, causal: bool, window: int | None,
+                  sq: int, sk: int, tq: int, tk: int):
+    sqp, d = q.shape
+    skp = k.shape[0]
+    nq, nk = cdiv(sqp, tq), cdiv(skp, tk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal, window=window,
+                          sq=sq, sk=sk, tq=tq, tk=tk, nk=nk),
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, d), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+        ],
+        interpret=use_interpret(),
+    )(q, k, v)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: float | None = None,
+                    window: int | None = None,
+                    tile_q: int = 128, tile_k: int = 128) -> jnp.ndarray:
+    """Fused attention.  q: (H, Sq, D) or (Sq, D); k/v: (H, Sk, D) or (Sk, D).
+
+    GQA is handled by the caller (repeat kv heads to H).  Query positions are
+    aligned to the end of the key axis (prefill-chunk semantics).
+    """
+    single = q.ndim == 2
+    if single:
+        q, k, v = q[None], k[None], v[None]
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    scale_v = scale if scale is not None else 1.0 / (d ** 0.5)
+    tq = pick_tile(sq, tile_q, SUBLANE)
+    tk = pick_tile(sk, tile_k, LANE)
+    dp = ceil_to(d, LANE)
+    qp = pad_axis(pad_axis(q, 1, ceil_to(sq, tq)), 2, dp)
+    kp = pad_axis(pad_axis(k, 1, ceil_to(sk, tk)), 2, dp)
+    vp = pad_axis(pad_axis(v, 1, ceil_to(sk, tk)), 2, dp)
+    run = functools.partial(_flash_single, scale=scale_v, causal=causal,
+                            window=window, sq=sq, sk=sk, tq=tq, tk=tk)
+    out = jax.vmap(lambda a, b, c: run(a, b, c))(qp, kp, vp)
+    out = out[:, :sq, :d]
+    return out[0] if single else out

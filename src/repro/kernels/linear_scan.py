@@ -1,0 +1,76 @@
+"""First-order linear recurrence kernel: h_t = a_t ⊙ h_{t-1} + b_t.
+
+This is the shared primitive behind the recurrent architectures in the model
+zoo — RG-LRU (RecurrentGemma) and the RWKV6 state update both reduce to
+elementwise-gated linear recurrences.  Same blocked-scan structure as
+``window_scan``: per-tile the recurrence is composed with an associative scan
+over (a, b) pairs ((a2,b2)∘(a1,b1) = (a1·a2, a2·b1+b2)), and a (1, N) carry in
+VMEM bridges tiles across the sequential grid.
+
+Shapes: a, b — (T, N) (time-major, N = flattened state width, LANE-aligned by
+the wrapper).  Returns all h_t, (T, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._util import LANE, SUBLANE, cdiv, ceil_to, pad_axis, pick_tile, use_interpret
+
+
+def _compose(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _linscan_kernel(a_ref, b_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    # local inclusive scan of the recurrence within the tile (log-depth)
+    acc_a, acc_b = jax.lax.associative_scan(_compose, (a, b), axis=0)
+    # fold in the carry h_{tile-1}: h_t = acc_a_t * h_carry + acc_b_t
+    h = acc_a * carry_ref[...] + acc_b
+    carry_ref[...] = h[-1:, :]
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def _linear_scan_padded(a, b, tm: int):
+    m, n = a.shape
+    return pl.pallas_call(
+        _linscan_kernel,
+        grid=(cdiv(m, tm),),
+        in_specs=[
+            pl.BlockSpec((tm, n), lambda i: (i, 0)),
+            pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, n), jnp.float32)],
+        interpret=use_interpret(),
+    )(a, b)
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, *, tile_m: int = 512) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t along axis 0 (h_0 folded into b_0)."""
+    assert a.shape == b.shape and a.ndim == 2, (a.shape, b.shape)
+    m, n = a.shape
+    if m == 0:
+        return b.astype(jnp.float32)
+    tm = pick_tile(m, tile_m, SUBLANE)
+    npad = ceil_to(n, LANE)
+    # pad a with 1s? a-padding only matters beyond m; rows past m are discarded
+    ap = pad_axis(pad_axis(a.astype(jnp.float32), 0, ceil_to(m, tm)), 1, npad)
+    bp = pad_axis(pad_axis(b.astype(jnp.float32), 0, ceil_to(m, tm)), 1, npad)
+    return _linear_scan_padded(ap, bp, tm)[:m, :n]

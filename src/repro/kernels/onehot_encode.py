@@ -1,0 +1,52 @@
+"""One-hot encoding kernel (paper §2 A1 — ``get_dummies``).
+
+Categorical codes (M,) → indicator matrix (M, G) f32, built tile-by-tile with
+a broadcasted-iota compare so the one-hot never round-trips through HBM as
+int8 gather indices.  Code -1 (null) yields an all-zero row.
+
+Grid: (M/TM, G/TG); each program writes one (TM, TG) output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._util import LANE, SUBLANE, cdiv, ceil_to, pad_axis, pick_tile, use_interpret
+
+
+def _onehot_kernel(c_ref, o_ref, *, tg: int):
+    j = pl.program_id(1)
+    codes = c_ref[...]                       # (TM, 1) int32
+    local = codes - j * tg
+    seg = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], tg), 1)
+    o_ref[...] = (local == seg).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "tm", "tg"))
+def _onehot_padded(codes, num_classes: int, tm: int, tg: int):
+    m = codes.shape[0]
+    return pl.pallas_call(
+        functools.partial(_onehot_kernel, tg=tg),
+        grid=(cdiv(m, tm), cdiv(num_classes, tg)),
+        in_specs=[pl.BlockSpec((tm, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((tm, tg), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, num_classes), jnp.float32),
+        interpret=use_interpret(),
+    )(codes)
+
+
+def onehot_encode(codes: jnp.ndarray, num_classes: int, *,
+                  tile_m: int = 512, tile_g: int = 512) -> jnp.ndarray:
+    """(M,) int32 codes → (M, num_classes) f32 one-hot (−1 → zero row)."""
+    assert codes.ndim == 1
+    m = codes.shape[0]
+    if m == 0:
+        return jnp.zeros((0, num_classes), jnp.float32)
+    tm = pick_tile(m, tile_m, SUBLANE)
+    tg = pick_tile(num_classes, tile_g, LANE)
+    cp = pad_axis(codes.astype(jnp.int32)[:, None], 0, ceil_to(m, tm), value=-1)
+    out = _onehot_padded(cp, ceil_to(num_classes, tg), tm, tg)
+    return out[:m, :num_classes]

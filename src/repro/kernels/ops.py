@@ -1,0 +1,86 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * On TPU — always the Pallas kernels.
+  * On CPU — the pure-jnp references by default (XLA:CPU fuses them well and
+    the interpret-mode emulation is for *validation*, not speed); set
+    ``REPRO_USE_KERNELS=1`` to force the kernels (interpret=True) anywhere,
+    ``REPRO_FORCE_REF=1`` to force the references anywhere.
+
+Every wrapper has an identically-shaped oracle in ``ref.py``; tests sweep
+shapes × dtypes asserting allclose between the two.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_transpose import block_transpose as _pallas_transpose
+from .decode_attention import decode_attention as _pallas_decode
+from .flash_attention import flash_attention as _pallas_flash
+from .linear_scan import linear_scan as _pallas_linscan
+from .onehot_encode import onehot_encode as _pallas_onehot
+from .segment_reduce import segment_reduce as _pallas_segred
+from .window_scan import window_scan as _pallas_winscan
+from ._util import narrow_from_kernel, widen_for_kernel
+
+__all__ = [
+    "use_pallas", "transpose", "segment_reduce", "window_scan",
+    "linear_scan", "onehot_encode", "flash_attention", "decode_attention",
+]
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_REF", "0") not in ("0", ""):
+        return False
+    if os.environ.get("REPRO_USE_KERNELS", "0") not in ("0", ""):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+# -----------------------------------------------------------------------------
+def transpose(x: jnp.ndarray) -> jnp.ndarray:
+    if use_pallas():
+        w, orig = widen_for_kernel(x)
+        return narrow_from_kernel(_pallas_transpose(w), orig)
+    return ref.transpose(x)
+
+
+def segment_reduce(values, codes, num_segments: int, op: str = "sum"):
+    if use_pallas():
+        return _pallas_segred(values, codes, num_segments, op)
+    return ref.segment_reduce(values.astype(jnp.float32), codes, num_segments, op)
+
+
+def window_scan(x, op: str = "cumsum"):
+    if use_pallas():
+        return _pallas_winscan(x, op)
+    return ref.window_scan(x.astype(jnp.float32), op)
+
+
+def linear_scan(a, b):
+    if use_pallas():
+        return _pallas_linscan(a, b)
+    return ref.linear_scan(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def onehot_encode(codes, num_classes: int):
+    if use_pallas():
+        return _pallas_onehot(codes, num_classes)
+    return ref.onehot_encode(codes, num_classes)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None, window=None):
+    if use_pallas():
+        return _pallas_flash(q, k, v, causal=causal, scale=scale, window=window)
+    return ref.flash_attention(q, k, v, causal=causal, scale=scale, window=window)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, scale=None):
+    if use_pallas():
+        return _pallas_decode(q, k_cache, v_cache, length, scale=scale)
+    return ref.decode_attention(q, k_cache, v_cache, length, scale=scale)

@@ -1,0 +1,110 @@
+"""GROUPBY aggregation as one-hot matmul on the MXU (paper §4.2, Fig. 6).
+
+Hardware adaptation (DESIGN.md §3): TPUs have no efficient scatter, so hash
+aggregation is re-thought as dense linear algebra.  For a tile of TM rows with
+group codes c ∈ [0, G), build the one-hot matrix H ∈ {0,1}^(TM×TG) on the fly
+(broadcasted-iota compare — never materialized in HBM) and compute
+
+    partial[j]  +=  Hᵀ · values_tile        (sum / count)
+    partial[j]   =  min/max(where(H, v, ±∞)) elementwise-reduced over rows
+
+Grid: (G/TG, M/TM) with the *segment* axis outermost so each output tile stays
+resident in VMEM while the full M axis streams through (sequential-grid
+accumulation).  A single psum across row shards combines partials — this is
+what turns the paper's groupby shuffle into an aggregate-sized all-reduce.
+
+Multi-column variant: values (M, C) aggregates C columns at once (C ≤ LANE),
+matching the paper's observation that multi-column GROUP BY prefers
+column-friendly layouts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._util import LANE, SUBLANE, cdiv, ceil_to, pad_axis, pick_tile, use_interpret
+
+_IDENTITY = {"sum": 0.0, "count": 0.0}
+
+
+def _seg_kernel(v_ref, c_ref, o_ref, *, op: str, tg: int):
+    j = pl.program_id(0)   # segment tile (outer — output stays in VMEM)
+    i = pl.program_id(1)   # row tile (inner — streams through)
+
+    @pl.when(i == 0)
+    def _init():
+        if op in ("sum", "count"):
+            o_ref[...] = jnp.zeros_like(o_ref)
+        elif op == "min":
+            o_ref[...] = jnp.full_like(o_ref, jnp.finfo(o_ref.dtype).max)
+        else:  # max
+            o_ref[...] = jnp.full_like(o_ref, jnp.finfo(o_ref.dtype).min)
+
+    v = v_ref[...].astype(jnp.float32)          # (TM, C)
+    codes = c_ref[...]                           # (TM, 1) int32
+    local = codes - j * tg                       # segment id within this tile
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], tg), 1)
+    onehot = (local == seg_ids)                  # (TM, TG) — codes<0 never match
+
+    if op in ("sum", "count"):
+        contrib = jnp.ones_like(v) if op == "count" else v
+        contrib = jnp.where(codes >= 0, contrib, 0.0)
+        # MXU path: (TG, TM) @ (TM, C) → (TG, C)
+        part = jax.lax.dot_general(
+            onehot.astype(jnp.float32), contrib,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[...] += part.astype(o_ref.dtype)
+    else:
+        fill = jnp.finfo(jnp.float32).max if op == "min" else jnp.finfo(jnp.float32).min
+        # (TM, TG, C) masked broadcast reduced over rows
+        expanded = jnp.where(onehot[:, :, None], v[:, None, :], fill)
+        part = expanded.min(axis=0) if op == "min" else expanded.max(axis=0)
+        o_ref[...] = (
+            jnp.minimum(o_ref[...], part.astype(o_ref.dtype))
+            if op == "min"
+            else jnp.maximum(o_ref[...], part.astype(o_ref.dtype))
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "tm", "tg"))
+def _segment_reduce_padded(values, codes, num_segments: int, op: str, tm: int, tg: int):
+    m, c = values.shape
+    grid = (cdiv(num_segments, tg), cdiv(m, tm))
+    return pl.pallas_call(
+        functools.partial(_seg_kernel, op=op, tg=tg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, c), lambda j, i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, c), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, c), jnp.float32),
+        interpret=use_interpret(),
+    )(values, codes)
+
+
+def segment_reduce(values: jnp.ndarray, codes: jnp.ndarray, num_segments: int,
+                   op: str = "sum", *, tile_m: int = 512, tile_g: int = 128) -> jnp.ndarray:
+    """Per-segment aggregate.  values (M,) or (M,C) f32; codes (M,) int32 with
+    -1 = null (contributes nothing).  Returns (G,) or (G,C) f32."""
+    assert op in ("sum", "count", "min", "max"), op
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    v = v.astype(jnp.float32)
+    m = v.shape[0]
+    if m == 0:
+        from . import ref
+        out = ref.segment_reduce(v, codes, num_segments, op)
+        return out[:, 0] if squeeze else out
+    tm = pick_tile(m, tile_m, SUBLANE)
+    tg = pick_tile(num_segments, tile_g, LANE)
+    g_pad = ceil_to(num_segments, tg)
+    vp = pad_axis(v, 0, ceil_to(m, tm))
+    cp = pad_axis(codes.astype(jnp.int32)[:, None], 0, ceil_to(m, tm), value=-1)
+    out = _segment_reduce_padded(vp, cp, g_pad, op, tm, tg)[:num_segments]
+    return out[:, 0] if squeeze else out

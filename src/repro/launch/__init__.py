@@ -1,0 +1,5 @@
+"""Launch layer: production mesh, sharding policies, multi-pod dry-run,
+train/serve entry points.  NOTE: ``dryrun`` must be run as its own process
+(it sets XLA_FLAGS before jax init); do not import it from a live session.
+"""
+from .mesh import make_local_mesh, make_production_mesh  # noqa: F401

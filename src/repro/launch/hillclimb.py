@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (EXPERIMENTS.md §Perf).
+
+Compiles one (arch × shape) cell under a named *variant* — a set of config
+overrides implementing a hypothesis — and records the full loop-corrected
+HLO breakdown (top byte/flop contributors, wire bytes by collective kind) so
+each hypothesis → change → measure cycle is one invocation:
+
+  python -m repro.launch.hillclimb --arch rwkv6-1.6b --shape train_4k \
+      --variant chunked --set rwkv_chunked=True
+
+Results land in experiments/perf/<arch>__<shape>__<variant>.json.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from ..configs import SHAPES, get_config  # noqa: E402
+from .dryrun import (_decode_artifacts, _memory_dict, _model_flops,  # noqa: E402
+                     _prefill_artifacts, _train_artifacts)
+from .hlo_analysis import Roofline, analyze_hlo  # noqa: E402
+from .mesh import dp_axes, make_production_mesh  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "perf")
+
+
+def _parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        elif v.isdigit():
+            out[k] = int(v)
+        else:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _flash_adjust(stats, cfg, shape) -> dict:
+    """Kernel-substitution accounting: the Pallas flash-attention kernel
+    (validated vs oracle in tests) streams K/V tiles through VMEM and never
+    writes the (chunk, S) probability matrices to HBM.  Subtract the
+    *measured* bytes of exactly those tensors (identified by their
+    (chunk=1024, S) trailing dims in the breakdown) and add the kernel's own
+    HBM traffic (q,k,v read + o write per layer ≈ 4·tokens·H·Dh·2B — already
+    counted via the projection dots, so the correction is pure removal)."""
+    seq = shape.seq_len
+    pat = f",{seq}]"
+    chunk_tags = [f"1024,{seq}]", f"{seq},1024]", f"1024,{seq}]"]
+    removed = 0.0
+    for key, nbytes in stats.bytes_by_key.items():
+        if any(t in key for t in chunk_tags):
+            removed += nbytes
+    return {"removed_bytes": removed,
+            "hbm_bytes_fused_adj": stats.hbm_bytes_fused - removed}
+
+
+def run_variant(arch: str, shape_name: str, variant: str, overrides: dict,
+                multi_pod: bool = False, adjust: str = "") -> dict:
+    cfg = dataclasses.replace(get_config(arch), **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    from . import sharding as shlib
+    from ..models.sharding_ctx import activation_sharding
+    t0 = time.monotonic()
+    with activation_sharding(mesh, shlib.effective_dp(cfg, mesh)):
+        if shape.kind == "train":
+            lowered, _ = _train_artifacts(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered, _ = _prefill_artifacts(cfg, shape, mesh)
+        else:
+            lowered, _ = _decode_artifacts(cfg, shape, mesh)
+    compiled = lowered.compile()
+    compile_s = time.monotonic() - t0
+
+    repeats, _ = cfg.repeats_and_tail()
+    stats = analyze_hlo(compiled.as_text(), default_trip=max(1, repeats))
+    hbm = stats.hbm_bytes_fused
+    wire = stats.wire_bytes
+    adjustment = {}
+    for adj in adjust.split(",") if adjust else []:
+        if adj == "flash_attention":
+            adjustment.update(_flash_adjust(stats, cfg, shape))
+            hbm = adjustment["hbm_bytes_fused_adj"]
+        elif adj == "bf16_psum":
+            # XLA:CPU lowers bf16 dots as f32+convert, so GSPMD's partial-sum
+            # all-reduces ride f32; a TPU compile reduces bf16.  Halve the
+            # measured f32 collective payloads (activation cotangents/partials).
+            adjustment["wire_bytes_adj"] = wire - 0.5 * stats.wire_bytes_f32
+            wire = adjustment["wire_bytes_adj"]
+    rl = Roofline(hlo_flops=stats.flops, hlo_bytes=hbm,
+                  wire_bytes=wire, chips=chips,
+                  model_flops=_model_flops(cfg, shape))
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "adjustment": adjustment,
+        "compile_s": compile_s,
+        "memory_analysis": _memory_dict(compiled),
+        "hlo_analysis": stats.to_dict(),
+        "roofline": rl.to_dict(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--adjust", default="")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    res = run_variant(args.arch, args.shape, args.variant,
+                      _parse_overrides(args.set), args.multi,
+                      adjust=args.adjust)
+    path = os.path.join(OUT_DIR, f"{args.arch}__{args.shape}__{args.variant}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    rl = res["roofline"]
+    print(f"{args.arch} {args.shape} [{args.variant}]  compile={res['compile_s']:.0f}s")
+    print(f"  compute={rl['compute_s']:.3g}s memory={rl['memory_s']:.3g}s "
+          f"collective={rl['collective_s']:.3g}s → {rl['bottleneck']}")
+    print(f"  useful={rl['useful_flops_fraction']:.3f} "
+          f"roofline_frac={rl['roofline_fraction']:.4f}")
+    ha = res["hlo_analysis"]
+    print("  wire by kind:", {k: f"{v:.3g}" for k, v in ha["wire_bytes_by_kind"].items()})
+    print("  top bytes:")
+    for k, v in ha["top_bytes"][:8]:
+        print(f"    {v:12.3e}  {k}")
+    print("  top flops:")
+    for k, v in ha["top_flops"][:5]:
+        print(f"    {v:12.3e}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Serving entry point: ``python -m repro.launch.serve --arch yi-6b --smoke``.
+
+Batched greedy decoding over synthetic requests with the continuous-batching
+engine; full-config serving paths are exercised by the decode/prefill cells
+of ``launch/dryrun.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from ..configs import get_config, get_smoke_config
+from ..data.tokenizer import HashTokenizer
+from ..models import build_model
+from ..serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not args.smoke and jax.default_backend() == "cpu":
+        raise SystemExit("full configs need TPU; use --smoke on CPU")
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_batch=args.max_batch,
+                         max_seq=args.max_seq)
+    tok = HashTokenizer(cfg.vocab)
+    prompts = [f"request number {i} about dataframes" for i in range(args.requests)]
+    reqs = [Request(rid=i, prompt_ids=tok.encode(p), max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)]
+    t0 = time.monotonic()
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_done()
+    dt = time.monotonic() - t0
+    out = dict(engine.metrics)
+    out["wall_s"] = dt
+    out["tokens_per_s"] = engine.metrics["tokens_out"] / dt if dt else 0
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

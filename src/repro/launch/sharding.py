@@ -1,0 +1,263 @@
+"""Sharding policies: param/optimizer/batch/cache PartitionSpecs per
+(architecture × shape × mesh).
+
+Parallelism (DESIGN.md §5):
+  * TP  — Megatron pairing: column-parallel in-projections P(None, "model"),
+    row-parallel out-projections P("model", None) ⇒ two psums per block.
+  * DP  — batch over ("pod", "data"); gradients reduce over DP axes.
+  * FSDP — for params-too-big-for-TP archs, weights also shard the non-TP
+    dim over "data" (all-gather at use; ZeRO-3-style).
+  * EP  — MoE expert dim over "model"; token routing becomes an all-to-all.
+  * SP  — decode KV caches shard the *sequence* dim (flash-decode style);
+    batch dim shards DP when divisible.
+
+Only inputs/params are annotated; intermediate shardings are propagated by
+GSPMD.  Every rule degrades to None when a dim isn't divisible by the axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .mesh import axis_size, dp_axes
+
+FSDP_THRESHOLD_BYTES = 2 << 30    # params/chip beyond this → FSDP over "data"
+
+
+def _div(size: int, mesh, axes) -> bool:
+    return axes is not None and size % axis_size(mesh, axes) == 0 and size > 0
+
+
+def _maybe(size: int, mesh, axes):
+    """axes if divisible else None."""
+    if axes is None:
+        return None
+    ax = axes if isinstance(axes, tuple) else (axes,)
+    return axes if _div(size, mesh, ax) else None
+
+
+def use_fsdp(cfg: ArchConfig, mesh) -> bool:
+    total, _ = cfg.param_count()
+    bytes_per_chip_tp = total * 2 / mesh.shape["model"]
+    return bytes_per_chip_tp > FSDP_THRESHOLD_BYTES
+
+
+def effective_dp(cfg: ArchConfig, mesh) -> tuple[str, ...]:
+    """Axes the batch shards over.  Pure-FSDP mode has no TP, so the "model"
+    axis joins data parallelism (otherwise it would sit idle)."""
+    base = dp_axes(mesh)
+    if cfg.sharding_mode == "fsdp":
+        return base + ("model",)
+    return base
+
+
+# -----------------------------------------------------------------------------
+# parameter specs (structural walk over the param tree)
+# -----------------------------------------------------------------------------
+def param_specs(cfg: ArchConfig, params_shapes: Any, mesh) -> Any:
+    """PartitionSpec tree matching the params pytree (by path patterns).
+
+    sharding_mode:
+      * "tp"   — Megatron TP over "model" only;
+      * "fsdp" — no TP: every ≥2-D weight shards dim 0 over "data" (ZeRO-3;
+        all-gathered at use).  Right for small models where TP collectives
+        dominate (per-shard matmuls too skinny);
+      * "auto" — TP, plus FSDP over "data" when TP-sharded params exceed
+        per-chip HBM budget (the big archs).
+    """
+    mode = cfg.sharding_mode
+    if mode == "fsdp":
+        return _fsdp_only_specs(params_shapes, mesh)
+    fsdp = mode != "tp" and use_fsdp(cfg, mesh)
+    fsdp_ax = "data" if fsdp else None
+
+    def spec_for(path: tuple, shape: tuple) -> P:
+        names = [p for p in path]
+        name = names[-1] if names else ""
+        stacked = "blocks" in names  # scanned: leading repeats dim
+        lead = (None,) if stacked else ()
+
+        def col(io_shape):  # (in, out) column-parallel
+            return P(*lead, _maybe(io_shape[0], mesh, fsdp_ax),
+                     _maybe(io_shape[1], mesh, "model"))
+
+        def row(io_shape):  # (in, out) row-parallel
+            return P(*lead, _maybe(io_shape[0], mesh, "model"),
+                     _maybe(io_shape[1], mesh, fsdp_ax))
+
+        body = shape[1:] if stacked else shape
+        # ---- embeddings ----------------------------------------------------
+        if name in ("embed", "unembed"):
+            return P(_maybe(shape[0], mesh, "model"),
+                     _maybe(shape[1], mesh, fsdp_ax))
+        # ---- MoE (E, in, out): expert-parallel over "model" ---------------
+        if name in ("w_gate", "w_up", "w_down") and len(body) == 3:
+            return P(*lead, _maybe(body[0], mesh, "model"), None,
+                     _maybe(body[2], mesh, fsdp_ax))
+        if name == "router":
+            return P(*lead, None, None)
+        # ---- attention -----------------------------------------------------
+        if name in ("wq", "wk", "wv") and len(body) == 2:
+            return col(body)
+        if name == "wo" and len(body) == 2:
+            return row(body)
+        # ---- dense MLPs ------------------------------------------------------
+        if name in ("w_gate", "w_up", "w_k"):   # column side
+            return col(body) if len(body) == 2 else P(*lead, *(None,) * len(body))
+        if name in ("w_down", "w_v"):
+            return row(body) if len(body) == 2 else P(*lead, *(None,) * len(body))
+        # ---- recurrent blocks ------------------------------------------------
+        if name in ("w_x", "w_gate_branch", "w_input_gate", "w_rec_gate",
+                    "w_r", "w_g"):
+            return col(body) if len(body) == 2 else P(*lead, *(None,) * len(body))
+        if name in ("w_out", "w_o"):
+            return row(body) if len(body) == 2 else P(*lead, *(None,) * len(body))
+        # ---- everything else (norms, biases, small tensors): replicate ----
+        return P(*lead, *(None,) * len(body))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        names = tuple(_path_name(p) for p in path)
+        specs.append(spec_for(names, tuple(leaf.shape)))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(params_shapes), specs)
+
+
+def _path_name(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _fsdp_only_specs(params_shapes: Any, mesh) -> Any:
+    """Pure ZeRO-3: shard a dim of every weight over the *flattened*
+    ("data","model") axes; no tensor parallelism (weights all-gather
+    just-in-time; the batch shards over both axes too)."""
+    all_axes = tuple(a for a in mesh.axis_names)
+
+    def spec_for(path, shape) -> P:
+        names = [_path_name(p) for p in path]
+        stacked = "blocks" in names
+        body = shape[1:] if stacked else shape
+        lead = (None,) if stacked else ()
+        if len(body) < 2:
+            return P(*lead, *(None,) * len(body))
+        entries: list = [None] * len(body)
+        for d in range(len(body)):          # prefer dim0; degrade by divisibility
+            if _div(body[d], mesh, all_axes):
+                entries[d] = all_axes
+                break
+            if _div(body[d], mesh, ("data",)):
+                entries[d] = "data"
+                break
+        return P(*lead, *entries)
+
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    specs = [spec_for(path, tuple(leaf.shape)) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(jax.tree.structure(params_shapes), specs)
+
+
+# -----------------------------------------------------------------------------
+# optimizer-state specs (shape-matched against the param spec)
+# -----------------------------------------------------------------------------
+def opt_state_specs(param_specs_tree: Any, params_shapes: Any, state_shapes: Any) -> Any:
+    """Derive state specs: exact-shape leaves inherit the param spec; factored
+    adafactor moments drop the reduced dim's spec entry; scalars replicate."""
+    flat_params = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    flat_specs = jax.tree.leaves(param_specs_tree)
+    by_path = {}
+    for (path, leaf), spec in zip(flat_params, flat_specs):
+        by_path[tuple(_path_name(x) for x in path)] = (tuple(leaf.shape), spec)
+
+    def spec_for_state(path: tuple, shape: tuple):
+        # state paths look like ("m", *param_path) / ("v", *param_path, "vr")
+        for start in range(len(path)):
+            for end in range(len(path), start, -1):
+                key = path[start:end]
+                if key in by_path:
+                    pshape, pspec = by_path[key]
+                    if shape == pshape:
+                        return pspec
+                    if shape == pshape[:-1]:           # adafactor vr
+                        return P(*tuple(pspec)[:-1])
+                    if shape == pshape[:-2] + pshape[-1:]:  # adafactor vc
+                        return P(*(tuple(pspec)[:-2] + tuple(pspec)[-1:]))
+        return P(*(None,) * len(shape))
+
+    flat_state = jax.tree_util.tree_flatten_with_path(state_shapes)[0]
+    specs = [spec_for_state(tuple(_path_name(x) for x in path), tuple(l.shape))
+             for path, l in flat_state]
+    return jax.tree_util.tree_unflatten(jax.tree.structure(state_shapes), specs)
+
+
+# -----------------------------------------------------------------------------
+# batch / cache specs
+# -----------------------------------------------------------------------------
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                specs_tree: Any) -> Any:
+    dp = effective_dp(cfg, mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    b = shape.global_batch
+
+    def spec_for(path, leaf):
+        name = _path_name(path[-1])
+        bshard = _maybe(b, mesh, dp)
+        if name in ("tokens", "labels", "mask"):
+            return P(bshard, None)
+        if name == "token":
+            return P(bshard)
+        if name == "memory":
+            return P(bshard, None, None)
+        return P(*(None,) * len(leaf.shape))
+
+    flat = jax.tree_util.tree_flatten_with_path(specs_tree)[0]
+    out = [spec_for(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(jax.tree.structure(specs_tree), out)
+
+
+def cache_specs_tree(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     cache_shapes: Any) -> Any:
+    """KV/state cache sharding: batch → DP when divisible, sequence dim →
+    "model" (+ "data" when batch is unshardable) — flash-decode SP."""
+    dp = effective_dp(cfg, mesh) if cfg.sharding_mode == "fsdp" else dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    b = shape.global_batch
+    b_ok = _div(b, mesh, dp if isinstance(dp, tuple) else (dp,))
+    seq_ax = "model" if b_ok else (dp + ("model",) if isinstance(dp, tuple)
+                                   else (dp, "model"))
+
+    def spec_for(path, leaf):
+        names = [_path_name(x) for x in path]
+        name = names[-1]
+        stacked = "blocks" in names
+        lead = (None,) if stacked else ()
+        body = leaf.shape[1:] if stacked else leaf.shape
+        if name == "length":
+            return P(None)
+        if name in ("k", "v") and len(body) == 4:      # (B, S, K, Dh)
+            return P(*lead, _maybe(b, mesh, dp), _maybe(body[1], mesh, seq_ax),
+                     None, None)
+        if name == "S" and len(body) == 4:             # rwkv (B, H, dk, dv)
+            return P(*lead, _maybe(b, mesh, dp),
+                     _maybe(body[1], mesh, "model"), None, None)
+        if name == "h" and len(body) == 2:             # rglru (B, dr)
+            return P(*lead, _maybe(b, mesh, dp), _maybe(body[1], mesh, "model"))
+        if len(body) >= 1:
+            return P(*lead, _maybe(body[0], mesh, dp),
+                     *(None,) * (len(body) - 1))
+        return P(*lead)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)[0]
+    out = [spec_for(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(jax.tree.structure(cache_shapes), out)
+
+
+def to_named(tree_specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,61 @@
+"""Training entry point: ``python -m repro.launch.train --arch yi-6b --smoke``.
+
+On this CPU container only ``--smoke`` (reduced config) actually executes;
+full configs go through the dry-run.  The launcher wires together the
+dataframe data pipeline, the trainer, checkpointing, and failure recovery —
+the same objects a multi-host deployment would construct per process.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from ..configs import SHAPES, get_config, get_smoke_config
+from ..data import DataPipeline, PipelineConfig, synthetic_corpus
+from ..models import build_model
+from ..train.fault import run_with_recovery
+from ..train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--docs", type=int, default=4000)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not args.smoke and jax.default_backend() == "cpu":
+        raise SystemExit("full configs need TPU; use --smoke on CPU "
+                         "(the production mesh path is launch/dryrun.py)")
+
+    model = build_model(cfg)
+    pc = PipelineConfig(seq_len=args.seq_len, global_batch=args.batch,
+                        memory_len=cfg.cross_memory_len, d_model=cfg.d_model)
+    pipe = DataPipeline(synthetic_corpus(args.docs), cfg.vocab, pc)
+    tc = TrainConfig(lr=args.lr, total_steps=args.steps,
+                     microbatches=args.microbatches,
+                     checkpoint_dir=args.checkpoint_dir,
+                     checkpoint_every=max(10, args.steps // 5))
+    trainer = Trainer(model, tc)
+    if args.checkpoint_dir:
+        state = run_with_recovery(trainer, lambda: pipe.batches(), steps=args.steps)
+    else:
+        state = trainer.fit(pipe.batches(), steps=args.steps)
+
+    print(json.dumps({"history": trainer.history[-5:],
+                      "pipeline": pipe.stats()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures as composable pure-JAX modules."""
+from .model import Model, build_model, cache_specs, input_specs, params_specs  # noqa: F401

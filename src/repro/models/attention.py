@@ -1,0 +1,218 @@
+"""Attention: GQA self-attention (RoPE, optional QKV bias, optional local
+window), cross-attention, and KV-cache decode.
+
+Three execution paths, selected by ``impl``:
+  * "xla"     — einsum attention with explicit masks; fine for short S.
+  * "chunked" — query-chunked attention (lax.map over chunks): never
+                materializes S×S, the XLA analogue of flash attention; used
+                for long-context prefill in the dry-run path.
+  * "pallas"  — the fused flash kernel (TPU); validated in interpret mode.
+
+Shapes: x (B, S, d); params store fused qkv projections (d, (H+2K)·Dh).
+KV caches are (B, S_max, K, Dh) with a scalar per-example length.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from ..kernels import ops as kops
+
+NEG = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False, dtype=layers.DEFAULT_PARAM_DTYPE) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": layers.dense_init(kk, d_model, n_kv * head_dim, dtype),
+        "wv": layers.dense_init(kv, d_model, n_kv * head_dim, dtype),
+        "wo": layers.dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, use_rope=True):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    if use_rope:
+        q = layers.rope(q, positions)
+        k = layers.rope(k, positions)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+# -----------------------------------------------------------------------------
+# core attention (three paths)
+# -----------------------------------------------------------------------------
+def _xla_attention(q, k, v, *, causal: bool, window: int | None,
+                   kv_len: jnp.ndarray | None = None):
+    """q (B,Sq,H,D); k/v (B,Sk,H,D) — full-mask einsum path (f32 softmax)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    m = mask[None, None]
+    if kv_len is not None:
+        m = m & (kpos[None, None] < kv_len[:, None, None, None])
+    logits = jnp.where(m, logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: int | None,
+                       chunk: int = 1024, kv_len=None):
+    """Query-chunked attention: O(chunk·Sk) live memory, never S×S."""
+    b, sq, h, d = q.shape
+    if sq <= chunk:
+        return _xla_attention(q, k, v, causal=causal, window=window, kv_len=kv_len)
+    pad = (-sq) % chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunks = qp.shape[1] // chunk
+    qc = qp.reshape(b, nchunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    sk = k.shape[1]
+
+    def one(ci_q):
+        ci, qi = ci_q
+        # positions of this chunk within the full query range
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) / np.sqrt(d)
+        qpos = ci * chunk + jnp.arange(chunk)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((chunk, sk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        m = mask[None, None]
+        if kv_len is not None:
+            m = m & (kpos[None, None] < kv_len[:, None, None, None])
+        logits = jnp.where(m, logits, NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+    outs = jax.lax.map(one, (jnp.arange(nchunks), qc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, h, d)
+    return out[:, :sq]
+
+
+def _pallas_attention(q, k, v, *, causal: bool, window: int | None):
+    b, sq, h, d = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    out = kops.flash_attention(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def multihead_attention(q, k, v, *, causal=True, window=None, impl="xla",
+                        kv_len=None):
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D) — GQA-expands kv then dispatches."""
+    groups = q.shape[2] // k.shape[2]
+    k, v = _repeat_kv(k, groups), _repeat_kv(v, groups)
+    if impl == "pallas" and kv_len is None:
+        return _pallas_attention(q, k, v, causal=causal, window=window)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, causal=causal, window=window, kv_len=kv_len)
+    return _xla_attention(q, k, v, causal=causal, window=window, kv_len=kv_len)
+
+
+# -----------------------------------------------------------------------------
+# block-level entry points
+# -----------------------------------------------------------------------------
+def self_attention(params: dict, x: jnp.ndarray, *, n_heads: int, n_kv: int,
+                   head_dim: int, causal: bool = True, window: int | None = None,
+                   impl: str = "xla", positions: jnp.ndarray | None = None,
+                   use_rope: bool = True) -> jnp.ndarray:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, use_rope)
+    out = multihead_attention(q, k, v, causal=causal, window=window, impl=impl)
+    return jnp.einsum("bsh,he->bse", out.reshape(b, s, n_heads * head_dim),
+                      params["wo"], preferred_element_type=x.dtype)
+
+
+def cross_attention(params: dict, x: jnp.ndarray, memory: jnp.ndarray, *,
+                    n_heads: int, n_kv: int, head_dim: int, impl: str = "xla") -> jnp.ndarray:
+    """x (B,S,d) attends to memory (B,M,d) — VLM image layers / enc-dec."""
+    b, s, _ = x.shape
+    m = memory.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, n_heads, head_dim)
+    k = jnp.einsum("bmd,dh->bmh", memory, params["wk"]).reshape(b, m, n_kv, head_dim)
+    v = jnp.einsum("bmd,dh->bmh", memory, params["wv"]).reshape(b, m, n_kv, head_dim)
+    out = multihead_attention(q, k, v, causal=False, impl=impl)
+    return jnp.einsum("bsh,he->bse", out.reshape(b, s, n_heads * head_dim),
+                      params["wo"], preferred_element_type=x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# KV cache (decode path)
+# -----------------------------------------------------------------------------
+def cache_init(batch: int, s_max: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+    }
+
+
+def decode_self_attention(params: dict, x: jnp.ndarray, cache: dict,
+                          length: jnp.ndarray, *, n_heads: int, n_kv: int,
+                          head_dim: int, window: int | None = None,
+                          impl: str = "xla", use_rope: bool = True):
+    """One-token decode step.  x (B,1,d); cache k/v (B,Smax,K,Dh); ``length``
+    (B,) valid-slot counts.  Returns (out (B,1,d), new_cache)."""
+    b = x.shape[0]
+    positions = length[:, None]                                   # (B,1)
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, use_rope)
+    # write the new k/v at slot ``length`` (static cache, dynamic occupancy)
+    slot = length                                                  # (B,)
+    onehot = jax.nn.one_hot(slot, cache["k"].shape[1], dtype=cache["k"].dtype)  # (B,Smax)
+    newk = cache["k"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * k[:, 0:1].astype(cache["k"].dtype)
+    newv = cache["v"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * v[:, 0:1].astype(cache["v"].dtype)
+    kv_len = length + 1
+    if impl == "pallas":
+        def per_example(qi, ki, vi, li):
+            return kops.decode_attention(qi, ki, vi, li)
+        out = jax.vmap(per_example)(q.reshape(b, n_heads, head_dim),
+                                    newk, newv, kv_len)
+        out = out.reshape(b, 1, n_heads, head_dim)
+    else:
+        out = multihead_attention(q, newk.astype(q.dtype), newv.astype(q.dtype),
+                                  causal=False, window=window, impl="xla",
+                                  kv_len=kv_len)
+    proj = jnp.einsum("bsh,he->bse", out.reshape(b, 1, n_heads * head_dim),
+                      params["wo"], preferred_element_type=x.dtype)
+    return proj, {"k": newk, "v": newv}

@@ -1,0 +1,148 @@
+"""Shared neural layers (pure-JAX, functional, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take (key, cfg-ish args)
+  * compute dtype is bf16 by default with f32 norms/softmax/logits
+  * weight matrices are stored (in_dim, out_dim) so TP sharding specs read
+    naturally as P(None, "model") column-parallel / P("model", None)
+    row-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_PARAM_DTYPE = jnp.bfloat16
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+
+# -----------------------------------------------------------------------------
+# init helpers
+# -----------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype=DEFAULT_PARAM_DTYPE,
+               scale: float | None = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=DEFAULT_PARAM_DTYPE) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# -----------------------------------------------------------------------------
+# norms
+# -----------------------------------------------------------------------------
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# rotary position embeddings
+# -----------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq     # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# MLPs
+# -----------------------------------------------------------------------------
+def swiglu_init(key, d_model: int, d_ff: int, dtype=DEFAULT_PARAM_DTYPE) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    # residual-dtype dot output: keeps the row-parallel TP psum in bf16
+    # (f32 dot accumulation would make GSPMD all-reduce f32 partials — 2×
+    # the wire bytes; see EXPERIMENTS.md §Perf llama-90b iteration 4)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=x.dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=DEFAULT_PARAM_DTYPE) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, params["w_up"]) + params["b_up"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=x.dtype) + params["b_down"]
+
+
+# -----------------------------------------------------------------------------
+# embedding / unembedding
+# -----------------------------------------------------------------------------
+def embed(params: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params, tokens, axis=0)
+
+
+def unembed(params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(..., d) @ (V, d)^T → (..., V) logits in f32."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      params.astype(jnp.float32))
+
+
+# -----------------------------------------------------------------------------
+# losses
+# -----------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None, z_loss: float = 1e-4):
+    """Next-token cross entropy with optional z-loss; logits (..., V) f32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * logz ** 2
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = np.prod(labels.shape)
+    return nll.sum() / denom

@@ -1,0 +1,98 @@
+"""Unified model interface: ``build_model(cfg)`` → init / loss / serve fns.
+
+The returned ``Model`` is what the trainer, the serving engine, and the
+dry-run all consume.  ``input_specs`` produces ShapeDtypeStruct stand-ins for
+every (shape-kind) input so the dry-run lowers without allocating (modality
+frontends are stubs: precomputed frame/patch embeddings, per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, transformer
+from ..configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable                  # (key) -> params
+    loss_fn: Callable               # (params, batch) -> (loss, metrics)
+    forward: Callable               # (params, tokens, memory?) -> logits
+    prefill: Callable               # (params, tokens, memory?) -> last logits
+    decode_step: Callable           # (params, token, cache, memory?) -> (logits, cache)
+    cache_init: Callable            # (batch, s_max) -> cache
+
+    def param_count(self) -> tuple[int, int]:
+        return self.cfg.param_count()
+
+
+def _needs_memory(cfg: ArchConfig) -> bool:
+    return cfg.cross_memory_len > 0
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    def init(key):
+        return transformer.init_params(key, cfg)
+
+    def forward(params, tokens, memory=None):
+        logits, _ = transformer.forward(params, tokens, cfg, memory)
+        return logits
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        memory = batch.get("memory")
+        logits, aux = transformer.forward(params, tokens, cfg, memory)
+        xent = layers.softmax_xent(logits, labels, mask)
+        loss = xent + aux
+        return loss, {"xent": xent, "moe_aux": aux}
+
+    def prefill(params, tokens, memory=None):
+        return transformer.prefill(params, tokens, cfg, memory)
+
+    def decode_step(params, token, cache, memory=None):
+        return transformer.decode_step(params, token, cache, cfg, memory)
+
+    def cache_init(batch, s_max):
+        return transformer.cache_init(cfg, batch, s_max)
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, cache_init)
+
+
+# =============================================================================
+# ShapeDtypeStruct input specs for the dry-run (no allocation)
+# =============================================================================
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), tok)
+        specs["mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+    else:  # decode: one new token against an S-long cache
+        specs["token"] = jax.ShapeDtypeStruct((b,), tok)
+    if _needs_memory(cfg):
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.cross_memory_len, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, s_max: int) -> Any:
+    """ShapeDtypeStruct pytree of the decode cache (eval_shape — no alloc)."""
+    return jax.eval_shape(lambda: transformer.cache_init(cfg, batch, s_max))
+
+
+def params_specs(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch
+(GShard/Switch style) and expert parallelism over the "model" mesh axis.
+
+Dispatch avoids the O(T·E·C) combine tensor: slot positions come from a
+cumulative-sum over the (T·k, E) assignment one-hot, tokens are scattered
+into the (E, C, d) expert buffers, and the combine is a gather weighted by
+the router gates.  With experts sharded P("model", ...) and tokens sharded
+P("data", ...), GSPMD lowers the scatter/gather into the MoE all-to-all —
+the collective the roofline analysis watches for MoE cells.
+
+Aux losses: load-balancing (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=layers.DEFAULT_PARAM_DTYPE) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale_in = 1.0 / np.sqrt(d_model)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "router": layers.dense_init(kr, d_model, n_experts, jnp.float32),
+        "w_gate": (jax.random.normal(k1, (n_experts, d_model, d_ff), jnp.float32) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (n_experts, d_model, d_ff), jnp.float32) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (n_experts, d_ff, d_model), jnp.float32) * scale_out).astype(dtype),
+    }
+
+
+def _gcd_groups(t: int, want: int) -> int:
+    import math
+    return max(1, math.gcd(t, want))
+
+
+def moe_apply(params: dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25,
+              n_groups: int = 16) -> tuple[jnp.ndarray, dict]:
+    """x (B, S, d) → (B, S, d), aux {load_balance_loss, router_z_loss}.
+
+    Dispatch is **group-local** (GShard "groups"): tokens are split into G
+    independent routing groups, each with its own capacity and slot space, so
+    the position-cumsum and the scatter/gather are local to a group.  With G
+    a multiple of the DP shard count, GSPMD keeps all dispatch bookkeeping
+    shard-local and the only cross-chip movement is the (G,E,C,d)↔expert
+    all-to-all — without groups the global-T cumsum replicates a (T·k, E)
+    tensor on every chip (hundreds of GB at 1M tokens)."""
+    b, s, d = x.shape
+    t = b * s
+    g = _gcd_groups(t, n_groups)
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G,Tg,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)           # (G,Tg,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(np.ceil(tg * top_k / n_experts * capacity_factor))
+    capacity = max(capacity, top_k)
+
+    # slot positions within each group: cumsum over the (k·Tg, E) one-hot,
+    # choice-major so primary routes win capacity.
+    flat_idx = expert_idx.transpose(0, 2, 1).reshape(g, top_k * tg)  # (G,kTg)
+    onehot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.int32)    # (G,kTg,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    slot_flat = jnp.take_along_axis(pos, flat_idx[..., None], axis=2)[..., 0]
+    slot = slot_flat.reshape(g, top_k, tg).transpose(0, 2, 1)        # (G,Tg,k)
+    keep = slot < capacity
+
+    e_flat = expert_idx.reshape(g, tg * top_k)
+    s_flat = slot.reshape(g, tg * top_k)
+    keep_flat = keep.reshape(g, tg * top_k)
+    e_safe = jnp.where(keep_flat, e_flat, 0)
+    s_safe = jnp.where(keep_flat, s_flat, 0)
+    src = jnp.repeat(xt, top_k, axis=1)                              # (G,Tg·k,d)
+    src = jnp.where(keep_flat[..., None], src, 0)
+
+    def dispatch(buf_g, e_g, s_g, src_g):
+        return buf_g.at[e_g, s_g].add(src_g)
+
+    buffers = jnp.zeros((g, n_experts, capacity, d), xt.dtype)
+    buffers = jax.vmap(dispatch)(buffers, e_safe, s_safe, src)       # (G,E,C,d)
+
+    # expert computation (SwiGLU) — E shards over "model" (EP); G over DP.
+    gg = jnp.einsum("gecd,edf->gecf", buffers, params["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", buffers, params["w_up"])
+    hh = jax.nn.silu(gg.astype(jnp.float32)).astype(buffers.dtype) * uu
+    out_buf = jnp.einsum("gecf,efd->gecd", hh, params["w_down"])     # (G,E,C,d)
+
+    def combine(out_g, e_g, s_g):
+        return out_g[e_g, s_g]
+
+    gathered = jax.vmap(combine)(out_buf, e_safe, s_safe)            # (G,Tg·k,d)
+    gathered = jnp.where(keep_flat[..., None], gathered, 0)
+    w = gate_vals.reshape(g, tg * top_k)                             # token-major
+    weighted = gathered * w[..., None].astype(gathered.dtype)
+    out = weighted.reshape(g, tg, top_k, d).sum(axis=2)
+
+    # aux losses
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(expert_idx[..., 0], n_experts).mean(axis=(0, 1))
+    load_balance = n_experts * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance_loss": load_balance, "router_z_loss": router_z}
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,272 @@
+"""Recurrent/SSM blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both reduce to gated first-order recurrences:
+  * RG-LRU — diagonal state: h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t);
+    evaluated with the ``linear_scan`` Pallas kernel (time-parallel blocked
+    associative scan), a_t data-dependent through the recurrence gate.
+  * RWKV6 — matrix state per head: S_t = diag(w_t) S_{t-1} + kᵀ_t v_t, with
+    data-dependent decay w_t and a current-token bonus u.  The baseline path
+    scans over time (compiles to a fori loop); a chunked variant
+    (``rwkv6_chunked``) trades it for matmul-rich O(T/c) chunk steps — the
+    long-context hillclimb in EXPERIMENTS.md §Perf compares the two.
+
+Decode paths carry the state explicitly — these architectures are why the
+``long_500k`` shape is runnable at all (state size is O(d²/head), not O(S)).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from ..kernels import ops as kops
+
+_C_RGLRU = 8.0
+
+
+# =============================================================================
+# RG-LRU (RecurrentGemma)
+# =============================================================================
+def rglru_block_init(key, d_model: int, d_rnn: int, conv_width: int = 4,
+                     dtype=layers.DEFAULT_PARAM_DTYPE) -> dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": layers.dense_init(ks[0], d_model, d_rnn, dtype),
+        "w_gate_branch": layers.dense_init(ks[1], d_model, d_rnn, dtype),
+        "conv": (jax.random.normal(ks[2], (conv_width, d_rnn), jnp.float32) * 0.02).astype(dtype),
+        "w_input_gate": layers.dense_init(ks[3], d_rnn, d_rnn, dtype),
+        "w_rec_gate": layers.dense_init(ks[4], d_rnn, d_rnn, dtype),
+        "lam": jnp.asarray(np.linspace(2.0, 5.0, d_rnn), jnp.float32),  # Λ init
+        "w_out": layers.dense_init(ks[5], d_rnn, d_model, dtype),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (B,S,C), w (W,C) depthwise causal conv."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _rglru_coeffs(params, u):
+    """u (B,S,dr) → recurrence coefficients a, b (f32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, params["w_rec_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", u, params["w_input_gate"]).astype(jnp.float32))
+    log_a = -_C_RGLRU * r * jax.nn.softplus(params["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * uf)
+    return a, b
+
+
+def rglru_block(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Griffin recurrent block: conv → RG-LRU, gated by a GeLU branch."""
+    u = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_gate_branch"])
+                       .astype(jnp.float32))
+    u = _causal_conv1d(u, params["conv"])
+    a, b = _rglru_coeffs(params, u)
+    h = jax.vmap(kops.linear_scan)(a, b)                       # (B,S,dr) f32
+    out = (h * gate).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", out, params["w_out"])
+
+
+def rglru_decode_init(batch: int, d_rnn: int, conv_width: int = 4) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv_buf": jnp.zeros((batch, conv_width - 1, d_rnn), jnp.bfloat16),
+    }
+
+
+def rglru_decode(params: dict, x: jnp.ndarray, state: dict):
+    """x (B,1,d) single step; returns (out (B,1,d), new_state)."""
+    u = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_gate_branch"])
+                       .astype(jnp.float32))
+    buf = jnp.concatenate([state["conv_buf"].astype(u.dtype), u], axis=1)  # (B,W,dr)
+    w = params["conv"]
+    u_conv = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32),
+                        w.astype(jnp.float32))[:, None].astype(u.dtype)
+    a, b = _rglru_coeffs(params, u_conv)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None] * gate).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, params["w_out"])
+    return out, {"h": h, "conv_buf": buf[:, 1:].astype(jnp.bfloat16)}
+
+
+# =============================================================================
+# RWKV6 (Finch)
+# =============================================================================
+def rwkv6_block_init(key, d_model: int, head_dim: int = 64,
+                     dtype=layers.DEFAULT_PARAM_DTYPE) -> dict:
+    n_heads = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    lowrank = 32
+    return {
+        "mu": (jax.random.normal(ks[0], (5, d_model), jnp.float32) * 0.02).astype(jnp.float32),
+        "w_r": layers.dense_init(ks[1], d_model, d_model, dtype),
+        "w_k": layers.dense_init(ks[2], d_model, d_model, dtype),
+        "w_v": layers.dense_init(ks[3], d_model, d_model, dtype),
+        "w_g": layers.dense_init(ks[4], d_model, d_model, dtype),
+        "w_o": layers.dense_init(ks[5], d_model, d_model, dtype),
+        # data-dependent decay: low-rank ddlerp (Finch's token-shift decay)
+        "decay_a": layers.dense_init(ks[6], d_model, lowrank, jnp.float32),
+        "decay_b": layers.dense_init(ks[7], lowrank, d_model, jnp.float32),
+        "decay_base": jnp.asarray(np.linspace(-6.0, -0.5, d_model), jnp.float32),
+        "bonus": (jax.random.normal(ks[8], (n_heads, head_dim), jnp.float32) * 0.02),
+        "ln_out": layers.layernorm_init(d_model),
+    }
+
+
+def _rwkv6_inputs(params, x, x_prev):
+    """Token-shift mixes current with previous token (Finch ddlerp, simplified
+    to static per-projection mix weights mu[0..4] for r,k,v,g,w)."""
+    mix = lambda i: x * (1 - params["mu"][i]) + x_prev * params["mu"][i]
+    xr, xk, xv, xg, xw = (mix(i).astype(x.dtype) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, params["w_r"])
+    k = jnp.einsum("bsd,de->bse", xk, params["w_k"])
+    v = jnp.einsum("bsd,de->bse", xv, params["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["w_g"]).astype(jnp.float32))
+    dd = jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32), params["decay_a"])
+    dd = jnp.einsum("bsl,ld->bsd", jnp.tanh(dd), params["decay_b"])
+    w = jnp.exp(-jnp.exp(params["decay_base"] + dd))           # (B,S,d) ∈ (0,1)
+    return r, k, v, g, w
+
+
+def rwkv6_block(params: dict, x: jnp.ndarray, *, head_dim: int = 64) -> jnp.ndarray:
+    """Time-mixing with matrix state, scan-over-time baseline."""
+    b, s, d = x.shape
+    h = d // head_dim
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv6_inputs(params, x, x_prev)
+    rh = r.reshape(b, s, h, head_dim).astype(jnp.float32)
+    kh = k.reshape(b, s, h, head_dim).astype(jnp.float32)
+    vh = v.reshape(b, s, h, head_dim).astype(jnp.float32)
+    wh = w.reshape(b, s, h, head_dim)
+    u = params["bonus"]                                        # (H,Dk)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                   # (B,H,Dk)... vt (B,H,Dv)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+          vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    _, outs = jax.lax.scan(step, S0, xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    out = layers.layernorm(params["ln_out"], out) * g
+    return jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["w_o"])
+
+
+def rwkv6_chunked(params: dict, x: jnp.ndarray, *, head_dim: int = 64,
+                  chunk: int = 64) -> jnp.ndarray:
+    """Chunked linear-attention formulation: O(T/c) scan steps of matmuls
+    instead of O(T) elementwise steps — the §Perf optimized path."""
+    b, s, d = x.shape
+    h = d // head_dim
+    pad = (-s) % chunk
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    x_prev = jnp.pad(xp, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv6_inputs(params, xp, x_prev)
+    nch = sp // chunk
+    rs = r.reshape(b, nch, chunk, h, head_dim).astype(jnp.float32)
+    ks_ = k.reshape(b, nch, chunk, h, head_dim).astype(jnp.float32)
+    vs = v.reshape(b, nch, chunk, h, head_dim).astype(jnp.float32)
+    ws = w.reshape(b, nch, chunk, h, head_dim).astype(jnp.float32)
+    u = params["bonus"]
+
+    logw = jnp.log(jnp.maximum(ws, 1e-12))
+    cum = jnp.cumsum(logw, axis=2)                             # within-chunk cumulative
+    total = cum[:, :, -1]                                      # (B,N,H,Dk)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lwc, cumc, totc = inp
+        # inter-chunk: r_t decayed against state entering the chunk
+        r_dec = rc * jnp.exp(cumc - lwc)                       # r_t ⊙ Πw_{≤t-1}
+        inter = jnp.einsum("bthk,bhkv->bthv", r_dec, S)
+        # intra-chunk: pairs j < t with decay Πw_{j+1..t-1}
+        k_dec = kc * jnp.exp(-cumc)                            # k_j / Πw_{≤j}
+        att = jnp.einsum("bthk,bjhk->bhtj", r_dec, k_dec)
+        tri = jnp.tril(jnp.ones((rc.shape[1], rc.shape[1]), jnp.float32), -1)
+        att = att * tri[None, None]
+        intra = jnp.einsum("bhtj,bjhv->bthv", att, vc)
+        # current-token bonus
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        cur = bonus[..., None] * vc
+        out = inter + intra + cur
+        # state update: S' = diag(Πw_chunk) S + Σ_j (Πw_{j+1..end}) kᵀv
+        k_tail = kc * jnp.exp(totc[:, None] - cumc)            # Πw_{j+1..end}
+        S = jnp.exp(totc)[..., None] * S + jnp.einsum("bjhk,bjhv->bhkv", k_tail, vc)
+        return S, out
+
+    S0 = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    seq = (rs.transpose(1, 0, 2, 3, 4), ks_.transpose(1, 0, 2, 3, 4),
+           vs.transpose(1, 0, 2, 3, 4), logw.transpose(1, 0, 2, 3, 4),
+           cum.transpose(1, 0, 2, 3, 4),
+           total.transpose(1, 0, 2, 3))
+    _, outs = jax.lax.scan(chunk_step, S0, seq)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sp, d)[:, :s]
+    out = layers.layernorm(params["ln_out"], out) * g[:, :s]
+    return jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["w_o"])
+
+
+def rwkv_cmix_init(key, d_model: int, d_ff: int,
+                   dtype=layers.DEFAULT_PARAM_DTYPE) -> dict:
+    """RWKV6 channel-mixing (replaces the MLP in rwkv blocks)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": (jax.random.normal(k1, (2, d_model), jnp.float32) * 0.02),
+        "w_k": layers.dense_init(k2, d_model, d_ff, dtype),
+        "w_v": layers.dense_init(k3, d_ff, d_model, dtype),
+        "w_r": layers.dense_init(jax.random.fold_in(k1, 7), d_model, d_model, dtype),
+    }
+
+
+def rwkv_cmix(params: dict, x: jnp.ndarray,
+              x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """out = σ(W_r x_r) ⊙ W_v(relu(W_k x_k)²), with token-shift mixes."""
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = (x * (1 - params["mu"][0]) + x_prev * params["mu"][0]).astype(x.dtype)
+    xr = (x * (1 - params["mu"][1]) + x_prev * params["mu"][1]).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, params["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["w_r"]).astype(jnp.float32))
+    return (r * jnp.einsum("bsf,fd->bsd", k, params["w_v"]).astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv6_decode_init(batch: int, d_model: int, head_dim: int = 64) -> dict:
+    h = d_model // head_dim
+    return {
+        "S": jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        "x_prev": jnp.zeros((batch, d_model), jnp.bfloat16),
+    }
+
+
+def rwkv6_decode(params: dict, x: jnp.ndarray, state: dict, *, head_dim: int = 64):
+    """x (B,1,d) one step."""
+    b, _, d = x.shape
+    h = d // head_dim
+    r, k, v, g, w = _rwkv6_inputs(params, x, state["x_prev"][:, None].astype(x.dtype))
+    rt = r.reshape(b, h, head_dim).astype(jnp.float32)
+    kt = k.reshape(b, h, head_dim).astype(jnp.float32)
+    vt = v.reshape(b, h, head_dim).astype(jnp.float32)
+    wt = w.reshape(b, h, head_dim)
+    u = params["bonus"]
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, state["S"] + u[None, :, :, None] * kv)
+    S = wt[..., None] * state["S"] + kv
+    out = out.reshape(b, 1, d)
+    out = layers.layernorm(params["ln_out"], out) * g
+    out = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["w_o"])
+    return out, {"S": S, "x_prev": x[:, 0].astype(jnp.bfloat16)}

@@ -1,0 +1,53 @@
+"""Activation-sharding context: pins batch sharding through the network.
+
+With FSDP-style weight sharding (weights sharded over the DP axis), GSPMD
+sometimes prefers resharding *activations* (replicating the batch!) over
+all-gathering weights — catastrophic for memory.  Pinning the hidden-state
+sharding at block boundaries forces the intended plan: batch stays on the DP
+axes, weights all-gather just-in-time (ZeRO-3 semantics).
+
+The context is consulted at **trace time**: the dry-run / trainer wraps
+``jit(...).lower(...)`` in ``activation_sharding(mesh, dp_axes)``; without an
+active context every constraint is the identity, so tests and single-device
+runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_act_sharding",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, dp_axes: tuple[str, ...]):
+    token = _CTX.set((mesh, tuple(dp_axes)))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _dp_size(mesh, dp) -> int:
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain_hidden(x):
+    """x (B, S, d) or (B, 1, d): pin B to the DP axes when divisible."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, dp = ctx
+    b = x.shape[0]
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    if b % _dp_size(mesh, dp) != 0:
+        return x
+    spec = P(dp_entry, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,418 @@
+"""Transformer stack assembly: scan-over-layers, heterogeneous patterns,
+train / prefill / decode entry points.
+
+A stack is ``repeats`` scanned superblocks (pattern positions unrolled inside
+the scan body, params stacked over the repeat dim) plus an unrolled tail for
+``n_layers % len(pattern)``.  Scan keeps the lowered HLO O(pattern) instead of
+O(n_layers) — required for 94–100-layer dry-run compiles — and composes with
+``jax.checkpoint`` for per-superblock remat.
+
+Decode threads a per-layer cache pytree (stacked the same way) through the
+same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, layers, moe, recurrent
+from .sharding_ctx import constrain_hidden
+from ..configs.base import ArchConfig
+
+
+# =============================================================================
+# parameter init
+# =============================================================================
+def _norm_init(cfg: ArchConfig):
+    return layers.rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm" \
+        else layers.layernorm_init(cfg.d_model)
+
+
+def _norm_apply(cfg: ArchConfig, p, x):
+    return layers.rmsnorm(p, x) if cfg.norm == "rmsnorm" else layers.layernorm(p, x)
+
+
+def _block_init(key, kind: str, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": _norm_init(cfg), "ln2": _norm_init(cfg)}
+    if kind in ("attn", "local", "global"):
+        p["attn"] = attention.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                        cfg.head_dim_, cfg.qkv_bias)
+    elif kind == "cross":
+        p["cross"] = attention.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                         cfg.head_dim_, cfg.qkv_bias)
+    elif kind == "dec":
+        p["attn"] = attention.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                        cfg.head_dim_, cfg.qkv_bias)
+        p["lnx"] = _norm_init(cfg)
+        p["cross"] = attention.attn_init(ks[3], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                         cfg.head_dim_, cfg.qkv_bias)
+    elif kind == "rglru":
+        p["rglru"] = recurrent.rglru_block_init(ks[0], cfg.d_model, cfg.rnn_width_)
+    elif kind == "rwkv":
+        p["rwkv"] = recurrent.rwkv6_block_init(ks[0], cfg.d_model, cfg.rwkv_head_dim)
+    else:
+        raise ValueError(kind)
+
+    if cfg.mlp == "moe":
+        p["mlp"] = moe.moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts)
+    elif cfg.mlp == "gelu":
+        p["mlp"] = layers.gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    elif cfg.mlp == "rwkv_cmix":
+        p["mlp"] = recurrent.rwkv_cmix_init(ks[1], cfg.d_model, cfg.d_ff)
+    else:
+        p["mlp"] = layers.swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    repeats, tail = cfg.repeats_and_tail()
+    params: dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.vocab, cfg.d_model),
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.embed_init(keys[1], cfg.vocab, cfg.d_model)
+
+    # scanned superblocks: one stacked param tree per pattern position
+    def stacked(kind: str, base_key, n: int):
+        inits = [_block_init(jax.random.fold_in(base_key, i), kind, cfg)
+                 for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *inits) if n > 1 else (
+            jax.tree.map(lambda x: x[None], inits[0]) if n == 1 else None)
+
+    if repeats > 0:
+        params["blocks"] = [stacked(kind, jax.random.fold_in(keys[2], pi), repeats)
+                            for pi, kind in enumerate(cfg.pattern)]
+    else:
+        params["blocks"] = []
+    params["tail"] = [_block_init(jax.random.fold_in(keys[3], i), cfg.pattern[i], cfg)
+                      for i in range(tail)]
+
+    if cfg.encoder_layers:
+        enc_cfg = cfg
+        params["encoder"] = {
+            "enc_layers": [_block_init(jax.random.fold_in(keys[4], i), "attn", enc_cfg)
+                           for i in range(cfg.encoder_layers)],
+            "final_norm": _norm_init(cfg),
+        }
+    return params
+
+
+# =============================================================================
+# forward blocks
+# =============================================================================
+def _pick_impl(cfg: ArchConfig, seq_len: int) -> str:
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    return "chunked" if seq_len > 2048 else "xla"
+
+
+def _block_apply(kind: str, p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                 memory: jnp.ndarray | None, impl: str,
+                 causal: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x, moe_aux_loss)."""
+    hd = cfg.head_dim_
+    h = _norm_apply(cfg, p["ln1"], x)
+    if kind in ("attn", "global"):
+        y = attention.self_attention(p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                     head_dim=hd, causal=causal, impl=impl,
+                                     use_rope=cfg.use_rope)
+    elif kind == "local":
+        y = attention.self_attention(p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                     head_dim=hd, causal=causal, window=cfg.window,
+                                     impl=impl, use_rope=cfg.use_rope)
+    elif kind == "cross":
+        y = attention.cross_attention(p["cross"], h, memory, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv, head_dim=hd, impl=impl)
+    elif kind == "dec":
+        y = attention.self_attention(p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                     head_dim=hd, causal=True, impl=impl,
+                                     use_rope=cfg.use_rope)
+        x = x + y
+        hx = _norm_apply(cfg, p["lnx"], x)
+        y = attention.cross_attention(p["cross"], hx, memory, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv, head_dim=hd, impl=impl)
+    elif kind == "rglru":
+        y = recurrent.rglru_block(p["rglru"], h)
+    elif kind == "rwkv":
+        y = (recurrent.rwkv6_chunked(p["rwkv"], h, head_dim=cfg.rwkv_head_dim)
+             if cfg.rwkv_chunked else
+             recurrent.rwkv6_block(p["rwkv"], h, head_dim=cfg.rwkv_head_dim))
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    h2 = _norm_apply(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.mlp == "moe":
+        m, auxd = moe.moe_apply(p["mlp"], h2, n_experts=cfg.n_experts,
+                                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                                n_groups=cfg.moe_groups)
+        aux = auxd["load_balance_loss"] * 0.01 + auxd["router_z_loss"] * 1e-3
+    elif cfg.mlp == "gelu":
+        m = layers.gelu_mlp(p["mlp"], h2)
+    elif cfg.mlp == "rwkv_cmix":
+        m = recurrent.rwkv_cmix(p["mlp"], h2)
+    else:
+        m = layers.swiglu(p["mlp"], h2)
+    return x + m, aux
+
+
+# =============================================================================
+# train / prefill forward
+# =============================================================================
+def forward(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+            memory: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B,S) → (logits (B,S,V) f32, moe_aux scalar)."""
+    b, s = tokens.shape
+    impl = _pick_impl(cfg, s)
+    x = layers.embed(params["embed"], tokens) * np.sqrt(cfg.d_model)
+    x = x.astype(jnp.bfloat16)
+    if not cfg.use_rope:
+        x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)
+
+    if cfg.encoder_layers and memory is not None:
+        memory = encode(params["encoder"], memory, cfg)
+
+    x = constrain_hidden(x)
+
+    def superblock(x, block_params):
+        aux = jnp.zeros((), jnp.float32)
+        for pi, kind in enumerate(cfg.pattern):
+            x, a = _block_apply(kind, block_params[pi], x, cfg, memory, impl)
+            x = constrain_hidden(x)
+            aux = aux + a
+        return x, aux
+
+    sb = superblock
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        sb = jax.checkpoint(superblock, policy=policy)
+
+    repeats, _ = cfg.repeats_and_tail()
+    aux_total = jnp.zeros((), jnp.float32)
+    if repeats > 0 and cfg.scan_layers:
+        def scan_body(carry, layer_params):
+            x, aux = carry
+            x, a = sb(x, layer_params)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total), params["blocks"])
+    elif repeats > 0:
+        for r in range(repeats):   # unrolled (probe compiles / tiny models)
+            x, a = sb(x, _index_layer(params["blocks"], r))
+            aux_total = aux_total + a
+    for i, p in enumerate(params["tail"]):
+        x, a = _block_apply(cfg.pattern[i], p, x, cfg, memory, impl)
+        aux_total = aux_total + a
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    unemb = params.get("unembed", params["embed"])
+    logits = layers.unembed(unemb, x)
+    return logits, aux_total
+
+
+def encode(enc_params: dict, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Whisper-style encoder over stubbed frame embeddings (B,F,d)."""
+    x = frames.astype(jnp.bfloat16) + _sinusoid(frames.shape[1], cfg.d_model).astype(jnp.bfloat16)
+    impl = _pick_impl(cfg, frames.shape[1])
+    for p in enc_params["enc_layers"]:
+        x, _ = _block_apply("attn", p, x, cfg, None, impl, causal=False)
+    return _norm_apply(cfg, enc_params["final_norm"], x)
+
+
+def _index_layer(tree, r: int):
+    return jax.tree.map(lambda x: x[r], tree)
+
+
+@functools.lru_cache(maxsize=8)
+def _sinusoid_np(s: int, d: int):
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+def _sinusoid(s: int, d: int) -> jnp.ndarray:
+    return jnp.asarray(_sinusoid_np(s, d))
+
+
+# =============================================================================
+# serving: cache structure + prefill + decode
+# =============================================================================
+def _layer_cache_init(kind: str, cfg: ArchConfig, batch: int, s_max: int) -> dict:
+    hd = cfg.head_dim_
+    if kind in ("attn", "global", "dec"):
+        return attention.cache_init(batch, s_max, cfg.n_kv, hd)
+    if kind == "local":
+        return attention.cache_init(batch, min(s_max, (cfg.window or s_max)), cfg.n_kv, hd)
+    if kind == "cross":
+        return {}
+    if kind == "rglru":
+        return recurrent.rglru_decode_init(batch, cfg.rnn_width_)
+    if kind == "rwkv":
+        c = recurrent.rwkv6_decode_init(batch, cfg.d_model, cfg.rwkv_head_dim)
+        c["cmix_prev"] = jnp.zeros((batch, cfg.d_model), jnp.bfloat16)
+        return c
+    raise ValueError(kind)
+
+
+def cache_init(cfg: ArchConfig, batch: int, s_max: int) -> dict:
+    repeats, tail = cfg.repeats_and_tail()
+
+    def stacked(kind: str):
+        one = _layer_cache_init(kind, cfg, batch, s_max)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (repeats,) + x.shape), one)
+
+    return {
+        "blocks": [stacked(kind) for kind in cfg.pattern] if repeats else [],
+        "tail": [_layer_cache_init(cfg.pattern[i], cfg, batch, s_max)
+                 for i in range(tail)],
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _decode_block(kind: str, p: dict, x, cache: dict, length, cfg: ArchConfig,
+                  memory) -> tuple[jnp.ndarray, dict]:
+    hd = cfg.head_dim_
+    h = _norm_apply(cfg, p["ln1"], x)
+    new_cache = cache
+    if kind in ("attn", "global"):
+        y, new_cache = attention.decode_self_attention(
+            p["attn"], h, cache, length, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=hd, use_rope=cfg.use_rope)
+    elif kind == "local":
+        y, new_cache = _decode_local(p["attn"], h, cache, length, cfg)
+    elif kind == "cross":
+        y = attention.cross_attention(p["cross"], h, memory, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv, head_dim=hd)
+    elif kind == "dec":
+        y, new_cache = attention.decode_self_attention(
+            p["attn"], h, cache, length, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=hd, use_rope=cfg.use_rope)
+        x = x + y
+        hx = _norm_apply(cfg, p["lnx"], x)
+        y = attention.cross_attention(p["cross"], hx, memory, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv, head_dim=hd)
+    elif kind == "rglru":
+        y, new_cache = recurrent.rglru_decode(p["rglru"], h, cache)
+    elif kind == "rwkv":
+        y, new_cache = recurrent.rwkv6_decode(p["rwkv"], h, cache,
+                                              head_dim=cfg.rwkv_head_dim)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    h2 = _norm_apply(cfg, p["ln2"], x)
+    if cfg.mlp == "moe":
+        m, _ = moe.moe_apply(p["mlp"], h2, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             n_groups=cfg.moe_groups)
+    elif cfg.mlp == "gelu":
+        m = layers.gelu_mlp(p["mlp"], h2)
+    elif cfg.mlp == "rwkv_cmix":
+        xp = cache.get("cmix_prev") if kind == "rwkv" else None
+        m = recurrent.rwkv_cmix(p["mlp"], h2,
+                                x_prev=None if xp is None else xp[:, None].astype(h2.dtype))
+    else:
+        m = layers.swiglu(p["mlp"], h2)
+    if kind == "rwkv":
+        new_cache = dict(new_cache)
+        new_cache["cmix_prev"] = h2[:, 0].astype(jnp.bfloat16)
+    return x + m, new_cache
+
+
+def _decode_local(p, h, cache, length, cfg: ArchConfig):
+    """Local-window decode: ring-buffer cache of ``window`` slots."""
+    w = cache["k"].shape[1]
+    b = h.shape[0]
+    positions = length[:, None]
+    q, k, v = attention._project_qkv(p, h, cfg.n_heads, cfg.n_kv, cfg.head_dim_,
+                                     positions, cfg.use_rope)
+    slot = length % w
+    onehot = jax.nn.one_hot(slot, w, dtype=cache["k"].dtype)
+    newk = cache["k"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * k[:, 0:1].astype(cache["k"].dtype)
+    newv = cache["v"] * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * v[:, 0:1].astype(cache["v"].dtype)
+    kv_len = jnp.minimum(length + 1, w)
+    out = attention.multihead_attention(q, newk.astype(q.dtype), newv.astype(q.dtype),
+                                        causal=False, impl="xla", kv_len=kv_len)
+    proj = jnp.einsum("bsh,he->bse", out.reshape(b, 1, cfg.n_heads * cfg.head_dim_),
+                      p["wo"])
+    return proj, {"k": newk, "v": newv}
+
+
+def decode_step(params: dict, token: jnp.ndarray, cache: dict, cfg: ArchConfig,
+                memory: jnp.ndarray | None = None) -> tuple[jnp.ndarray, dict]:
+    """token (B,) one decode step → (logits (B,V) f32, new cache).
+
+    ``memory`` must be *already encoded* (the engine runs the encoder once at
+    prefill; decode never re-encodes)."""
+    b = token.shape[0]
+    length = cache["length"]
+    x = layers.embed(params["embed"], token[:, None]) * np.sqrt(cfg.d_model)
+    x = x.astype(jnp.bfloat16)
+    if not cfg.use_rope:
+        # sinusoidal position at the current slot
+        d = cfg.d_model
+        half = d // 2
+        i = jnp.arange(half, dtype=jnp.float32)
+        ang = length[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+        pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pos[:, None].astype(x.dtype)
+
+    repeats, tail = cfg.repeats_and_tail()
+    x = constrain_hidden(x)
+    new_blocks = []
+    if repeats > 0 and cfg.scan_layers:
+        def scan_body(x, per_repeat):
+            block_params, block_caches = per_repeat
+            new_caches = []
+            for pi, kind in enumerate(cfg.pattern):
+                x, nc = _decode_block(kind, block_params[pi], x, block_caches[pi],
+                                      length, cfg, memory)
+                x = constrain_hidden(x)
+                new_caches.append(nc)
+            return x, new_caches
+        x, new_blocks = jax.lax.scan(scan_body, x,
+                                     (params["blocks"], cache["blocks"]))
+    elif repeats > 0:
+        per_repeat_caches = []
+        for r in range(repeats):
+            caches_r = []
+            for pi, kind in enumerate(cfg.pattern):
+                x, nc = _decode_block(kind, _index_layer(params["blocks"][pi], r),
+                                      x, _index_layer(cache["blocks"][pi], r),
+                                      length, cfg, memory)
+                caches_r.append(nc)
+            per_repeat_caches.append(caches_r)
+        # restack: list over repeats of per-position caches → stacked trees
+        new_blocks = [
+            jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[per_repeat_caches[r][pi] for r in range(repeats)])
+            for pi in range(len(cfg.pattern))
+        ]
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        x, nc = _decode_block(cfg.pattern[i], p, x, cache["tail"][i], length, cfg, memory)
+        new_tail.append(nc)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    unemb = params.get("unembed", params["embed"])
+    logits = layers.unembed(unemb, x)[:, 0]
+    new_cache = {"blocks": new_blocks, "tail": new_tail, "length": length + 1}
+    return logits, new_cache
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: ArchConfig,
+            memory: jnp.ndarray | None = None):
+    """Prefill = forward pass producing last-position logits.  (The serving
+    engine then fills the cache via teacher-forced decode or chunked prefill;
+    for the dry-run cost model, prefill is the forward itself.)"""
+    logits, _ = forward(params, tokens, cfg, memory)
+    return logits[:, -1]

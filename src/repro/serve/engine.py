@@ -1,0 +1,116 @@
+"""Batched serving engine: continuous-batching prefill + decode.
+
+A static (B, S_max) KV footprint with per-slot dynamic lengths — the
+paged-lite layout the decode_attention kernel masks against.  Requests join
+free slots (prefill teacher-forces the prompt through ``decode_step`` so
+cache layout is identical to decode), then the engine steps all active slots
+in lockstep; finished slots free immediately (continuous batching).
+
+The engine is deliberately single-host here; the multi-pod story is the
+serve_step dry-run in ``launch/dryrun.py`` (cache sharded over mesh axes),
+which this engine's step function is lowered from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from ..data.tokenizer import EOS, PAD, HashTokenizer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_ids: list[int]
+    max_new_tokens: int = 16
+    out_ids: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Any, *, max_batch: int = 8,
+                 max_seq: int = 512, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.cache = model.cache_init(max_batch, max_seq)
+        self.slots: list[Request | None] = [None] * max_batch
+        self._pending: list[Request] = []
+        self._next_feed = np.zeros(max_batch, np.int64)     # token to feed next
+        self._prompt_pos = np.zeros(max_batch, np.int64)    # progress in prompt
+        self._decode = jax.jit(model.decode_step)
+        self.metrics = {"steps": 0, "tokens_out": 0, "prefill_tokens": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self._pending:
+                req = self._pending.pop(0)
+                self.slots[i] = req
+                self._reset_slot(i)
+                self._prompt_pos[i] = 0
+                self._next_feed[i] = req.prompt_ids[0]
+
+    def _reset_slot(self, i: int) -> None:
+        """Zero slot i's cache lanes (length gating makes stale data inert,
+        but zeroing keeps restarts reproducible)."""
+        def zero_lane(x):
+            # tail caches / length: (B, ...); scanned caches: (repeats, B, ...)
+            if x.ndim >= 1 and x.shape[0] == self.max_batch:
+                return x.at[i].set(jnp.zeros_like(x[i]))
+            if x.ndim >= 2 and x.shape[1] == self.max_batch:
+                return x.at[:, i].set(jnp.zeros_like(x[:, i]))
+            return x
+        self.cache = jax.tree.map(zero_lane, self.cache)
+        # per-slot length: cache["length"] is (B,)
+        self.cache["length"] = self.cache["length"].at[i].set(0)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One lockstep decode over all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        feed = jnp.asarray(self._next_feed, jnp.int32)
+        memory = None
+        if self.model.cfg.cross_memory_len:
+            memory = jnp.zeros((self.max_batch, self.model.cfg.cross_memory_len,
+                                self.model.cfg.d_model), jnp.bfloat16)
+        logits, self.cache = self._decode(self.params, feed, self.cache, memory)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+        self.metrics["steps"] += 1
+
+        for i in active:
+            req = self.slots[i]
+            self._prompt_pos[i] += 1
+            if self._prompt_pos[i] < len(req.prompt_ids):
+                # still prefilling: teacher-force the next prompt token
+                self._next_feed[i] = req.prompt_ids[self._prompt_pos[i]]
+                self.metrics["prefill_tokens"] += 1
+                continue
+            tok = int(next_tok[i])
+            req.out_ids.append(tok)
+            self.metrics["tokens_out"] += 1
+            self._next_feed[i] = tok
+            if tok == EOS or len(req.out_ids) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None            # continuous batching: free now
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self._pending:
+                return
+        raise TimeoutError("serving did not drain")

@@ -1,0 +1,142 @@
+"""Optimizers: AdamW and Adafactor, as pure (init, update) pairs over pytrees.
+
+Sharding posture (ZeRO-ish): optimizer states inherit the parameter sharding
+specs, so with params sharded P("data","model") the f32 moments shard the
+same way — no replicated optimizer memory.  Adafactor factors the second
+moment for the embedding-dominated archs (qwen3-moe, llama-90b, gemma3,
+recurrentgemma) where AdamW's 2×f32 states would not fit per-chip HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree, dtype=jnp.float32):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+# =============================================================================
+# AdamW
+# =============================================================================
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params),
+            "v": _tree_zeros_like(params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mhat = m / (1 - b1 ** cf)
+            vhat = v / (1 - b2 ** cf)
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (step + weight_decay * pf)
+            return pf.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# =============================================================================
+# Adafactor (factored second moment; no first moment by default)
+# =============================================================================
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0,
+              grad_clip: float = 1.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def st(x):
+            if _factored(x.shape):
+                return {
+                    "vr": jnp.zeros(x.shape[:-1], jnp.float32),          # row
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),  # col
+                }
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+        return {"v": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(g.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)[..., None]
+                    * vc[..., None, :])
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(vv)
+                nv = {"v": vv}
+            step = gf / jnp.maximum(denom, eps)
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * step - lr * weight_decay * pf
+            return pf.astype(p.dtype), nv
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        return new_p, {"v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# =============================================================================
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise ValueError(name)

@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def warmup_cosine(peak_lr: float = 3e-4, warmup_steps: int = 100,
+                  total_steps: int = 10_000, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        frac = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0, 1)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(np.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant(lr_value: float = 1e-3):
+    def lr(step):
+        return jnp.asarray(lr_value, jnp.float32)
+    return lr

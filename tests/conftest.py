@@ -1,0 +1,37 @@
+import os
+import sys
+
+# src-layout import path (tests run with PYTHONPATH=src, but be robust)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def eager_session():
+    """Fresh eager-mode session per test (pandas-semantics baseline)."""
+    from repro.core import EvalMode, Session, set_session
+    s = set_session(Session(mode=EvalMode.EAGER, default_row_parts=3))
+    yield s
+    s.close()
+
+
+@pytest.fixture
+def lazy_session():
+    from repro.core import EvalMode, Session, set_session
+    s = set_session(Session(mode=EvalMode.LAZY, default_row_parts=3))
+    yield s
+    s.close()
+
+
+@pytest.fixture
+def use_pallas_kernels(monkeypatch):
+    """Force the Pallas kernels (interpret mode on CPU) for this test."""
+    monkeypatch.setenv("REPRO_USE_KERNELS", "1")
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)

@@ -1,0 +1,173 @@
+"""Operator-level semantics vs independent python references (paper Table 1:
+ordered analogs of relational algebra + WINDOW + the 4 dataframe operators)."""
+import numpy as np
+import pytest
+
+from repro.core import DataFrame, Domain
+from repro.core import algebra as alg
+
+
+@pytest.fixture
+def df(eager_session):
+    return DataFrame({
+        "k": ["a", "b", "a", "c", "b", "a", None, "c"],
+        "v": [3, 1, 4, 1, 5, 9, 2, 6],
+        "w": [0.5, None, 1.5, 2.0, None, 3.0, 3.5, 4.0],
+    })
+
+
+def test_selection_preserves_order(df):
+    out = df[df["v"] > 2].collect()
+    assert out.col("v").to_pylist() == [3, 4, 5, 9, 6]
+    # null comparisons are False (w > 1 drops null rows)
+    out = df[df["w"] > 1].collect()
+    assert out.col("v").to_pylist() == [4, 1, 9, 2, 6]
+
+
+def test_projection(df):
+    out = df[["w", "k"]].collect()
+    assert out.col_labels.to_list() == ["w", "k"]
+    assert out.ncols == 2
+
+
+def test_union_ordered_by_left_then_right(eager_session):
+    a = DataFrame({"x": [1, 2]})
+    b = DataFrame({"x": [3, 4]})
+    assert a.append(b).collect().col("x").to_pylist() == [1, 2, 3, 4]
+    assert b.append(a).collect().col("x").to_pylist() == [3, 4, 1, 2]
+
+
+def test_difference(eager_session):
+    a = DataFrame({"x": [1, 2, 3, 2, 4]})
+    b = DataFrame({"x": [2, 4]})
+    assert a.difference(b).collect().col("x").to_pylist() == [1, 3]
+
+
+def test_cross_product_nested_order(eager_session):
+    a = DataFrame({"x": [1, 2]})
+    b = DataFrame({"y": [10, 20]})
+    out = a.cross(b).collect()
+    assert out.col("x").to_pylist() == [1, 1, 2, 2]
+    assert out.col("y").to_pylist() == [10, 20, 10, 20]
+
+
+def test_join_inner_left_order_ties_by_right(eager_session):
+    left = DataFrame({"k": ["a", "b", "a"], "lv": [1, 2, 3]})
+    right = DataFrame({"k": ["a", "a", "c"], "rv": [10, 20, 30]})
+    out = left.merge(right, on="k").collect()
+    # left order outer; both right "a" matches in right order
+    assert out.col("lv").to_pylist() == [1, 1, 3, 3]
+    assert out.col("rv").to_pylist() == [10, 20, 10, 20]
+
+
+def test_join_left_and_outer_nulls(eager_session):
+    left = DataFrame({"k": ["a", "b"], "lv": [1, 2]})
+    right = DataFrame({"k": ["a", "c"], "rv": [10, 30]})
+    lo = left.merge(right, on="k", how="left").collect()
+    assert lo.col("rv").to_pylist() == [10, None]
+    oo = left.merge(right, on="k", how="outer").collect()
+    assert oo.col("lv").to_pylist() == [1, 2, None]
+    assert oo.col("rv").to_pylist() == [10, None, 30]
+
+
+def test_drop_duplicates_keeps_first(eager_session):
+    d = DataFrame({"x": [1, 2, 1, 3, 2], "y": [0, 0, 0, 0, 0]})
+    assert d.drop_duplicates().collect().col("x").to_pylist() == [1, 2, 3]
+
+
+def test_groupby_sorted_key_order_and_null_keys_dropped(df):
+    out = df.groupby("k").agg({"v": ["sum", "count", "mean"],
+                               "w": ["min", "max"]}).collect()
+    assert out.col("k").to_pylist() == ["a", "b", "c"]
+    assert out.col("v_sum").to_pylist() == [16.0, 6.0, 7.0]
+    assert out.col("v_count").to_pylist() == [3, 2, 2]
+    # w has nulls: count excludes them; min/max over valid values only
+    assert out.col("w_min").to_pylist() == [0.5, None, 2.0]
+    assert out.col("w_max").to_pylist() == [3.0, None, 4.0]
+
+
+def test_groupby_global_aggregate(df):
+    assert df["v"].sum() == 31.0
+    assert df["v"].count() == 8
+    assert df["w"].count() == 6  # nulls excluded
+    assert df["v"].max() == 9.0
+
+
+def test_sort_stable(eager_session):
+    d = DataFrame({"k": [2, 1, 2, 1], "tag": [0, 1, 2, 3]})
+    out = d.sort_values("k").collect()
+    assert out.col("tag").to_pylist() == [1, 3, 0, 2]  # stable within key
+    out = d.sort_values("k", ascending=False).collect()
+    assert out.col("tag").to_pylist() == [0, 2, 1, 3]
+
+
+def test_rename(df):
+    out = df.rename(columns={"v": "value"}).collect()
+    assert "value" in out.col_labels.to_list()
+
+
+def test_window_cumsum_diff_shift(eager_session):
+    d = DataFrame({"v": [1, 2, 3, 4, 5, 6, 7]})
+    assert d.cumsum().collect().col("v").to_pylist() == [1, 3, 6, 10, 15, 21, 28]
+    assert d.diff().collect().col("v").to_pylist() == [None, 1, 1, 1, 1, 1, 1]
+    assert d.shift(2).collect().col("v").to_pylist() == [None, None, 1, 2, 3, 4, 5]
+    roll = d.rolling_sum(3).collect().col("v").to_pylist()
+    assert roll == [None, None, 6, 9, 12, 15, 18]
+
+
+def test_transpose_roundtrip_heterogeneous(eager_session):
+    d = DataFrame({"i": [1, 2, 3], "f": [1.5, 2.5, 3.5]})
+    tt = d.T.T.collect().induce()
+    assert tt.schema == (Domain.INT, Domain.FLOAT)
+    assert tt.to_pydict() == {"i": [1, 2, 3], "f": [1.5, 2.5, 3.5]}
+
+
+def test_transpose_swaps_labels(eager_session):
+    d = DataFrame({"a": [1, 2], "b": [3, 4]}, row_labels=["r0", "r1"])
+    t = d.T.collect()
+    assert t.row_labels.to_list() == ["a", "b"]
+    assert t.col_labels.to_list() == ["r0", "r1"]
+    assert t.col("r0").to_pylist() == [1, 3]
+
+
+def test_to_from_labels_inverse(eager_session):
+    d = DataFrame({"k": ["x", "y", "z"], "v": [1, 2, 3]})
+    rt = d.set_index("k").reset_index("k").collect()
+    assert rt.to_pydict() == {"k": ["x", "y", "z"], "v": [1, 2, 3]}
+
+
+def test_from_labels_schema_induction_on_labels(eager_session):
+    # positional labels become an int column (paper: labels interpreted via S)
+    d = DataFrame({"v": [5, 6]})
+    out = d.reset_index("idx").collect().induce()
+    assert out.col("idx").to_pylist() == [0, 1]
+    assert out.schema[0] is Domain.INT
+
+
+def test_map_one_to_many_columns(eager_session):
+    from repro.core import get_dummies
+    d = DataFrame({"c": ["p", "q", "p"], "v": [1, 2, 3]})
+    out = get_dummies(d, ["c"]).collect()
+    assert out.col("c_p").to_pylist() == [1, 0, 1]
+    assert out.col("c_q").to_pylist() == [0, 1, 0]
+    assert out.col("v").to_pylist() == [1, 2, 3]
+
+
+def test_agg_union_composition(eager_session):
+    # paper §3.4: agg == one GROUPBY per function + UNION in listed order
+    d = DataFrame({"v": [1.0, 2.0, 3.0], "u": [4.0, 5.0, 6.0]})
+    out = d.agg(["sum", "min"]).collect()
+    assert out.col("v").to_pylist() == [6.0, 1.0]
+    assert out.col("u").to_pylist() == [15.0, 4.0]
+
+
+def test_pivot(eager_session):
+    d = DataFrame({
+        "year": [2001, 2001, 2002, 2002],
+        "month": ["jan", "feb", "jan", "feb"],
+        "sales": [100, 110, 150, 200],
+    })
+    out = d.pivot(index="year", columns="month", values="sales").collect()
+    assert out.row_labels.to_list() == [2001, 2002]
+    assert out.col("jan").to_pylist() == [100, 150]
+    assert out.col("feb").to_pylist() == [110, 200]

@@ -1,0 +1,49 @@
+"""Approximate / progressive execution (paper §6.1.3)."""
+import numpy as np
+
+from repro.core.approx import first_k_groups, progressive_aggregate
+from repro.core.frame import Frame
+from repro.core.partition import PartitionedFrame
+
+
+def _pf(n=10_000, parts=8, seed=0):
+    rng = np.random.default_rng(seed)
+    f = Frame.from_pydict({
+        "v": rng.standard_normal(n).tolist(),
+        "k": rng.choice(["a", "b", "c", "d"], n).tolist(),
+    })
+    return PartitionedFrame.from_frame(f, row_parts=parts), f
+
+
+def test_progressive_mean_converges_with_shrinking_ci():
+    pf, f = _pf()
+    ests = list(progressive_aggregate(pf, "v", "mean"))
+    assert len(ests) == pf.row_parts
+    widths = [e.ci_high - e.ci_low for e in ests[:-1]]
+    assert widths[0] >= widths[-1]            # CI shrinks as rows accumulate
+    exact = float(np.mean(np.asarray(f.col("v").data)))
+    assert abs(ests[-1].value - exact) < 1e-5
+    assert ests[-1].final
+
+
+def test_progressive_sum_final_exact():
+    pf, f = _pf(seed=3)
+    *_, last = progressive_aggregate(pf, "v", "sum")
+    exact = float(np.sum(np.asarray(f.col("v").data)))
+    np.testing.assert_allclose(last.value, exact, rtol=1e-4, atol=1e-3)
+
+
+def test_progressive_estimates_cover_truth():
+    pf, f = _pf(seed=7)
+    exact = float(np.mean(np.asarray(f.col("v").data)))
+    ests = list(progressive_aggregate(pf, "v", "mean"))
+    covered = sum(1 for e in ests if e.ci_low <= exact <= e.ci_high)
+    # 95% CIs on correlated prefixes: expect most, not all, to cover
+    assert covered >= pf.row_parts - 3
+    assert abs(ests[-1].value - exact) < 1e-4            # final is exact
+
+
+def test_first_k_groups_input_order():
+    f = Frame.from_pydict({"k": ["x", "y", "x", "z", "w"]})
+    pf = PartitionedFrame.from_frame(f, row_parts=2)
+    assert first_k_groups(pf, "k", 3) == ["x", "y", "z"]

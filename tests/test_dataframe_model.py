@@ -1,0 +1,84 @@
+"""Data model tests: schema induction S(·), labels, the (A, R, C, D) tuple,
+transpose recovery, point updates (paper §3.2–3.3)."""
+import numpy as np
+import pytest
+
+from repro.core.dtypes import Domain, induce_schema, parse_column
+from repro.core.frame import Frame
+from repro.core.labels import CodedLabels, RangeLabels, labels_from_values
+
+
+class TestSchemaInduction:
+    def test_most_specific_domain(self):
+        assert induce_schema(["1", "2", "3"]) is Domain.INT
+        assert induce_schema(["1.5", "2"]) is Domain.FLOAT
+        assert induce_schema(["true", "false", "yes"]) is Domain.BOOL
+        assert induce_schema(["apple", "1"]) is Domain.STR
+        assert induce_schema([1, 2, None]) is Domain.INT
+        assert induce_schema([None, None]) is Domain.UNSPECIFIED
+
+    def test_parse_column_nulls(self):
+        p = parse_column(["1", None, "3"])
+        assert p.domain is Domain.INT
+        assert p.mask is not None
+        assert list(np.asarray(p.mask)) == [True, False, True]
+
+    def test_parse_fallback_to_str(self):
+        p = parse_column(["1", "x"], Domain.INT)  # doesn't parse as int
+        assert p.domain is Domain.STR
+        assert p.dictionary == ("1", "x")
+
+    def test_dictionary_first_occurrence_order(self):
+        p = parse_column(["b", "a", "b", "c"])
+        assert p.dictionary == ("b", "a", "c")
+        assert list(np.asarray(p.data)) == [0, 1, 0, 2]
+
+
+class TestLabels:
+    def test_range_labels_cheap_ops(self):
+        r = RangeLabels(10)
+        assert r.position_of(7) == 7
+        assert isinstance(r.take(np.arange(3, 8)), RangeLabels)
+        assert r.take(np.arange(3, 8)).to_list() == [3, 4, 5, 6, 7]
+
+    def test_range_concat_contiguous(self):
+        a, b = RangeLabels(5), RangeLabels(5, start=5)
+        assert isinstance(a.concat(b), RangeLabels)
+        assert len(a.concat(b)) == 10
+
+    def test_coded_labels_duplicates_and_nulls(self):
+        l = labels_from_values(["x", "y", "x", None])
+        assert isinstance(l, CodedLabels)
+        assert l.to_list() == ["x", "y", "x", None]
+        assert l.position_of("x") == 0  # first occurrence
+
+
+class TestFrame:
+    def test_shape_and_schema(self):
+        f = Frame.from_pydict({"a": [1, 2], "b": ["x", "y"], "c": [1.5, 2.5]})
+        assert f.shape == (2, 3)
+        assert f.schema == (Domain.INT, Domain.STR, Domain.FLOAT)
+
+    def test_iloc_point_update(self):
+        f = Frame.from_pydict({"a": ["p", "q"]})
+        g = f.iloc_set(1, 0, "r")
+        assert g.col("a").to_pylist() == ["p", "r"]
+        assert f.col("a").to_pylist() == ["p", "q"]  # immutable original
+
+    def test_matrix_check(self):
+        assert Frame.from_pydict({"a": [1, 2], "b": [1.0, 2.0]}).is_matrix()
+        assert not Frame.from_pydict({"a": ["x", "y"], "b": [1, 2]}).is_matrix()
+
+    def test_concat_rows_unifies_dictionaries(self):
+        a = Frame.from_pydict({"k": ["x", "y"]})
+        b = Frame.from_pydict({"k": ["z", "x"]})
+        c = a.concat_rows(b)
+        assert c.col("k").to_pylist() == ["x", "y", "z", "x"]
+
+    def test_row_domains_recovery_metadata(self):
+        f = Frame.from_pydict({"a": [1, 2], "b": [1.5, 2.5]})
+        # slicing rows of a frame with row_domains keeps them aligned
+        g = Frame(f.columns, f.row_labels, f.col_labels,
+                  row_domains=(Domain.INT, Domain.FLOAT))
+        h = g.take_rows(np.asarray([1]))
+        assert h.row_domains == (Domain.FLOAT,)

@@ -1,0 +1,135 @@
+"""THE distribution invariant (paper §4.2): executing any algebra plan on a
+block-partitioned frame must equal executing it on a single partition.
+Property-based via hypothesis: random frames × random operator pipelines ×
+random grid shapes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algebra as alg
+from repro.core.frame import Frame
+from repro.core.partition import PartitionedFrame
+from repro.core.physical import run_node
+
+
+def _mk_frame(keys, vals, floats):
+    return Frame.from_pydict({
+        "k": keys,
+        "v": vals,
+        "f": floats,
+    })
+
+
+def _run(frame: Frame, row_parts: int, build):
+    pf = PartitionedFrame.from_frame(frame, row_parts=row_parts)
+    src = alg.Source("f0", nrows=frame.nrows, ncols=frame.ncols)
+
+    class _Exec:
+        def __init__(self, pf):
+            self.pf = pf
+
+        def eval(self, node):
+            if node.op == "source":
+                return self.pf
+            return run_node(node, [self.eval(c) for c in node.children])
+
+    return _Exec(pf).eval(build(src)).to_frame().to_pydict()
+
+
+keys_st = st.lists(st.sampled_from(["a", "b", "c", "d"]), min_size=1, max_size=40)
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=keys_st, parts=st.integers(1, 5), data=st.data())
+def test_groupby_partition_invariant(keys, parts, data):
+    n = len(keys)
+    vals = data.draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+    floats = data.draw(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                                min_size=n, max_size=n))
+    f = _mk_frame(keys, vals, floats)
+
+    def build(src):
+        return alg.GroupBy(src, ("k",), [("v", "sum", "vs"), ("v", "count", "vc"),
+                                         ("f", "max", "fm")])
+
+    a = _run(f, 1, build)
+    b = _run(f, parts, build)
+    assert a["k"] == b["k"]
+    np.testing.assert_allclose(a["vs"], b["vs"], rtol=1e-5, atol=1e-5)
+    assert a["vc"] == b["vc"]
+    np.testing.assert_allclose(a["fm"], b["fm"], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=keys_st, parts=st.integers(1, 5), thresh=st.integers(-40, 40),
+       data=st.data())
+def test_selection_map_window_pipeline_invariant(keys, parts, thresh, data):
+    n = len(keys)
+    vals = data.draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+    floats = data.draw(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                                min_size=n, max_size=n))
+    f = _mk_frame(keys, vals, floats)
+
+    def build(src):
+        sel = alg.Selection(src, alg.col("v") >= alg.lit(thresh))
+        win = alg.Window(sel, "cumsum", cols=("v",))
+        return alg.Projection(win, ("k", "v"))
+
+    a = _run(f, 1, build)
+    b = _run(f, parts, build)
+    assert a["k"] == b["k"]
+    np.testing.assert_allclose(a["v"], b["v"], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(parts=st.integers(1, 5), rows=st.integers(1, 30), cols=st.integers(1, 6))
+def test_transpose_partition_invariant(parts, rows, cols):
+    rng = np.random.default_rng(rows * 31 + cols)
+    mat = rng.standard_normal((rows, cols)).astype(np.float32)
+    import jax.numpy as jnp
+    from repro.core.dtypes import Domain
+    f = Frame.from_matrix(jnp.asarray(mat), Domain.FLOAT)
+
+    def build(src):
+        return alg.Transpose(src)
+
+    a = _run(f, 1, build)
+    b = _run(f, parts, build)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(parts=st.integers(1, 4), periods=st.integers(1, 3), data=st.data())
+def test_diff_shift_halo_invariant(parts, periods, data):
+    n = data.draw(st.integers(2, 40))
+    vals = data.draw(st.lists(st.floats(-5, 5, allow_nan=False, width=32),
+                              min_size=n, max_size=n))
+    f = Frame.from_pydict({"v": vals})
+
+    def build_diff(src):
+        return alg.Window(src, "diff", cols=("v",), periods=periods)
+
+    a = _run(f, 1, build_diff)
+    b = _run(f, parts, build_diff)
+    assert len(a["v"]) == len(b["v"])
+    for x, y in zip(a["v"], b["v"]):
+        if x is None or y is None:
+            assert x == y
+        else:
+            assert abs(x - y) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(parts=st.integers(1, 4), k=st.integers(1, 10), data=st.data())
+def test_limit_prefix_invariant(parts, k, data):
+    n = data.draw(st.integers(1, 30))
+    vals = data.draw(st.lists(st.integers(-9, 9), min_size=n, max_size=n))
+    f = Frame.from_pydict({"v": vals})
+
+    def build(src):
+        return alg.Limit(src, k)
+
+    a = _run(f, 1, build)
+    b = _run(f, parts, build)
+    assert a["v"] == b["v"] == vals[:k]

@@ -1,0 +1,127 @@
+"""Rewrite rules (paper §5): each rule must (a) fire on its pattern and
+(b) preserve semantics vs the unrewritten plan."""
+import numpy as np
+import pytest
+
+from repro.core import DataFrame, EvalMode, Session, set_session
+from repro.core import algebra as alg
+from repro.core.rewrite import infer_columns, optimize
+
+
+@pytest.fixture
+def sess():
+    s = set_session(Session(mode=EvalMode.EAGER, default_row_parts=2,
+                            optimize=False))  # compare plans manually
+    yield s
+    s.close()
+
+
+def _eval(sess, node):
+    return sess.executor.evaluate(node).to_frame().to_pydict()
+
+
+def test_r1_double_transpose_eliminated(sess):
+    d = DataFrame({"a": [1.0, 2.0], "b": [3.0, 4.0]})
+    plan = alg.Transpose(alg.Transpose(d._node))
+    opt = optimize(plan)
+    assert opt.op == "source"
+    assert _eval(sess, plan) == _eval(sess, opt)
+
+
+def test_r2_transpose_sort_transpose_to_column_sort(sess):
+    d = DataFrame({"a": [3.0, 1.0], "b": [1.0, 2.0], "c": [2.0, 3.0]},
+                  row_labels=["r0", "r1"])
+    plan = alg.Transpose(alg.Sort(alg.Transpose(d._node), ("r0",), True))
+    opt = optimize(plan)
+    assert opt.op == "column_sort"
+    got, want = _eval(sess, opt), _eval(sess, plan)
+    assert list(got.keys()) == list(want.keys()) == ["b", "c", "a"]
+    for k in got:
+        np.testing.assert_allclose(got[k], want[k])
+
+
+def test_r3_transpose_selection_transpose_to_column_filter(sess):
+    d = DataFrame({"a": [3.0, 1.0], "b": [1.0, 2.0], "c": [2.0, 3.0]},
+                  row_labels=["r0", "r1"])
+    plan = alg.Transpose(alg.Selection(alg.Transpose(d._node),
+                                       alg.col("r0") > alg.lit(1.5)))
+    opt = optimize(plan)
+    assert opt.op == "column_filter"
+    got, want = _eval(sess, opt), _eval(sess, plan)
+    assert list(got.keys()) == ["a", "c"]
+    for k in got:
+        np.testing.assert_allclose(got[k], [float(v) for v in want[k]])
+
+
+def test_r4_selection_fusion(sess):
+    d = DataFrame({"v": [1, 2, 3, 4, 5]})
+    plan = alg.Selection(alg.Selection(d._node, alg.col("v") > alg.lit(1)),
+                         alg.col("v") < alg.lit(5))
+    opt = optimize(plan)
+    assert opt.op == "selection" and opt.children[0].op == "source"
+    assert _eval(sess, opt) == _eval(sess, plan) == {"v": [2, 3, 4]}
+
+
+def test_r5_selection_through_union(sess):
+    a = DataFrame({"v": [1, 5]})
+    b = DataFrame({"v": [2, 6]})
+    plan = alg.Selection(alg.Union(a._node, b._node), alg.col("v") > alg.lit(3))
+    opt = optimize(plan)
+    assert opt.op == "union"
+    assert _eval(sess, opt) == _eval(sess, plan) == {"v": [5, 6]}
+
+
+def test_r7_cross_filter_to_join(sess):
+    a = DataFrame({"x": [1, 2, 3], "p": [7, 8, 9]})
+    b = DataFrame({"y": [2, 3, 4]})
+    plan = alg.Selection(alg.Join(a._node, b._node, on=None, how="inner"),
+                         alg.BinExpr("==", alg.col("x"), alg.col("y")))
+    opt = optimize(plan, sess.executor._source_columns)
+    assert opt.op == "join" and opt.params["left_on"] == ("x",)
+    assert _eval(sess, opt) == _eval(sess, plan)
+
+
+def test_r8_map_fusion(sess):
+    d = DataFrame({"v": [1.0, 2.0]})
+
+    def plus1(cols, frame):
+        from repro.core.frame import Column, Frame
+        from repro.core.labels import labels_from_values
+        from repro.core.dtypes import Domain
+        c = cols["v"]
+        return Frame([Column(c.data + 1.0, Domain.FLOAT)], frame.row_labels,
+                     labels_from_values(["v"]))
+
+    def times2(cols, frame):
+        from repro.core.frame import Column, Frame
+        from repro.core.labels import labels_from_values
+        from repro.core.dtypes import Domain
+        c = cols["v"]
+        return Frame([Column(c.data * 2.0, Domain.FLOAT)], frame.row_labels,
+                     labels_from_values(["v"]))
+
+    u1 = alg.Udf.wrap(plus1, name="plus1", elementwise=True)
+    u2 = alg.Udf.wrap(times2, name="times2", elementwise=True)
+    plan = alg.Map(alg.Map(d._node, u1), u2)
+    opt = optimize(plan)
+    assert opt.op == "map" and opt.children[0].op == "source"  # fused
+    assert _eval(sess, opt) == _eval(sess, plan) == {"v": [4.0, 6.0]}
+
+
+def test_r10_r11_limit_rules(sess):
+    d = DataFrame({"v": list(range(100))})
+    plan = alg.Limit(alg.Limit(d._node, 10), 5)
+    opt = optimize(plan)
+    assert opt.op == "limit" and opt.params["k"] == 5
+    plan2 = alg.Limit(alg.Projection(d._node, ("v",)), 3)
+    opt2 = optimize(plan2)
+    assert opt2.op == "projection" and opt2.children[0].op == "limit"
+    assert _eval(sess, opt2) == {"v": [0, 1, 2]}
+
+
+def test_infer_columns_through_static_ops(sess):
+    d = DataFrame({"a": [1], "b": [2]})
+    n = alg.Rename(alg.Projection(d._node, ("a", "b")), {"a": "x"})
+    cols = infer_columns(n, sess.executor._source_columns)
+    assert cols == ["x", "b"]
+    assert infer_columns(alg.Transpose(d._node), sess.executor._source_columns) is None

@@ -1,0 +1,95 @@
+"""Evaluation modes (paper §6.1) + sharing/reuse (§6.2): opportunistic
+background computation, prefix computation for head(k), materialization
+cache, multi-query dedupe."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DataFrame, EvalMode, Session, set_session
+from repro.core import algebra as alg
+
+
+def test_lazy_defers_eager_computes():
+    s = set_session(Session(mode=EvalMode.LAZY, default_row_parts=2))
+    try:
+        d = DataFrame({"v": list(range(1000))})
+        filtered = d[d["v"] > 10]
+        assert s.executor.stats.evaluated_nodes == 0  # nothing ran yet
+        out = filtered.collect()
+        assert out.nrows == 989
+        assert s.executor.stats.evaluated_nodes > 0
+    finally:
+        s.close()
+
+
+def test_opportunistic_background_computation():
+    s = set_session(Session(mode=EvalMode.OPPORTUNISTIC, default_row_parts=2))
+    try:
+        d = DataFrame({"v": list(range(2000))})
+        filtered = d[d["v"] % 1 == 0]  # statement scheduled in background
+        deadline = time.monotonic() + 5.0
+        node = s.executor.optimized(filtered._node)
+        while time.monotonic() < deadline:
+            if node.cache_key() in s.executor.cache:
+                break
+            time.sleep(0.01)
+        assert node.cache_key() in s.executor.cache, "background eval never landed"
+        # the inspect is then a cache hit
+        before = s.executor.stats.cache_hits
+        filtered.collect()
+        assert s.executor.stats.cache_hits > before
+    finally:
+        s.close()
+
+
+def test_prefix_computation_head(lazy_session):
+    s = lazy_session
+    d = DataFrame({"v": list(range(100_000)), "w": [float(i % 5) for i in range(100_000)]})
+    sel = d[d["v"] > 50]
+    out = sel.head(4)
+    assert out.col("v").to_pylist() == [51, 52, 53, 54]
+    assert s.executor.stats.prefix_evals >= 1
+    # prefix path must not have evaluated the full plan
+    full_key = s.executor.optimized(sel._node).cache_key()
+    assert full_key not in s.executor.cache
+
+
+def test_prefix_geometric_backoff_selective_filter(lazy_session):
+    s = lazy_session
+    # only the last rows pass the filter: prefix must back off to the full scan
+    d = DataFrame({"v": list(range(20_000))})
+    sel = d[d["v"] >= 19_998]
+    out = sel.head(2)
+    assert out.col("v").to_pylist() == [19998, 19999]
+
+
+def test_reuse_cache_and_mqo_shared_subplans(lazy_session):
+    s = lazy_session
+    d = DataFrame({"k": ["a", "b"] * 500, "v": list(range(1000))})
+    base = d[d["v"] > 10]                       # shared sub-expression
+    q1 = base.groupby("k").agg({"v": "sum"})
+    q2 = base.groupby("k").agg({"v": "mean"})
+    q1.collect()
+    evaluated_before = s.executor.stats.evaluated_nodes
+    q2.collect()                                # shares SELECTION result
+    # q2 only evaluates its groupby node, not the selection chain again
+    assert s.executor.stats.cache_hits >= 1
+    assert s.executor.stats.evaluated_nodes - evaluated_before <= 2
+
+
+def test_cache_budget_eviction():
+    s = set_session(Session(mode=EvalMode.LAZY, default_row_parts=2,
+                            cache_budget_bytes=50_000))
+    try:
+        d = DataFrame({"v": list(range(30_000))})
+        for off in range(6):
+            d[d["v"] > off].collect()
+        assert s.executor.cache_bytes() <= 50_000 * 3  # sources exempt; bounded
+    finally:
+        s.close()
+
+
+def test_tail(lazy_session):
+    d = DataFrame({"v": list(range(1000))})
+    assert d.tail(3).col("v").to_pylist() == [997, 998, 999]

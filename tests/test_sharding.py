@@ -1,0 +1,101 @@
+"""Sharding policy: spec construction rules (divisibility degradation, TP
+pairing, EP/FSDP placement) — pure metadata, no device games."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as shlib
+from repro.models import model as model_lib
+
+
+class _FakeMesh:
+    """Duck-typed mesh: only .shape and .axis_names are consulted."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+
+
+def _specs_for(arch):
+    cfg = get_config(arch)
+    shapes = model_lib.params_specs(cfg)
+    return cfg, shapes, shlib.param_specs(cfg, shapes, MESH)
+
+
+def _flat(specs, shapes):
+    fs = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    fp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    return [("/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path),
+             leaf.shape, spec) for (path, leaf), spec in zip(fs, fp)]
+
+
+def test_divisibility_everywhere():
+    for arch in ("yi-6b", "qwen3-moe-235b-a22b", "whisper-base", "rwkv6-1.6b"):
+        cfg, shapes, specs = _specs_for(arch)
+        for name, shape, spec in _flat(specs, shapes):
+            assert len(spec) <= len(shape), (name, shape, spec)
+            for dim, entry in zip(shape, tuple(spec)):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                size = 1
+                for a in axes:
+                    size *= MESH.shape[a]
+                assert dim % size == 0, (arch, name, shape, spec)
+
+
+def test_tp_pairing_dense():
+    cfg, shapes, specs = _specs_for("yi-6b")
+    flat = dict((n, (s, sp)) for n, s, sp in _flat(specs, shapes))
+    wq = [v for k, v in flat.items() if k.endswith("attn/wq")][0]
+    wo = [v for k, v in flat.items() if k.endswith("attn/wo")][0]
+    # stacked over repeats: leading None, then (in,out)
+    assert tuple(wq[1])[-1] == "model"       # column-parallel out
+    assert tuple(wo[1])[-2] == "model"       # row-parallel in
+
+
+def test_moe_expert_parallel():
+    cfg, shapes, specs = _specs_for("qwen3-moe-235b-a22b")
+    flat = dict((n, (s, sp)) for n, s, sp in _flat(specs, shapes))
+    wg = [v for k, v in flat.items() if k.endswith("mlp/w_gate")][0]
+    assert tuple(wg[1])[1] == "model"        # experts dim sharded (EP)
+
+
+def test_fsdp_toggle_by_size():
+    assert shlib.use_fsdp(get_config("qwen3-moe-235b-a22b"), MESH)
+    assert shlib.use_fsdp(get_config("llama-3.2-vision-90b"), MESH)
+    assert not shlib.use_fsdp(get_config("whisper-base"), MESH)
+    assert not shlib.use_fsdp(get_config("rwkv6-1.6b"), MESH)
+
+
+def test_opt_state_specs_follow_params():
+    from repro.train import optimizer as opt_lib
+    cfg = get_config("yi-6b")
+    pshapes = model_lib.params_specs(cfg)
+    pspecs = shlib.param_specs(cfg, pshapes, MESH)
+    opt = opt_lib.get_optimizer("adamw")
+    oshapes = jax.eval_shape(opt.init, pshapes)
+    ospecs = shlib.opt_state_specs(pspecs, pshapes, oshapes)
+    # the m-moment of wq shards like wq itself
+    fm = _flat(ospecs["m"], oshapes["m"])
+    fp = _flat(pspecs, pshapes)
+    dm = {n: sp for n, _, sp in fm}
+    dp = {n: sp for n, _, sp in fp}
+    for n in dp:
+        assert dm[n] == dp[n], n
+
+
+def test_adafactor_factored_specs_drop_reduced_dim():
+    from repro.train import optimizer as opt_lib
+    cfg = get_config("gemma3-12b")   # adafactor arch
+    pshapes = model_lib.params_specs(cfg)
+    pspecs = shlib.param_specs(cfg, pshapes, MESH)
+    opt = opt_lib.get_optimizer("adafactor")
+    oshapes = jax.eval_shape(opt.init, pshapes)
+    ospecs = shlib.opt_state_specs(pspecs, pshapes, oshapes)
+    flat = _flat(ospecs, oshapes)
+    for name, shape, spec in flat:
+        assert len(tuple(spec)) == len(shape), (name, shape, spec)

@@ -1,0 +1,91 @@
+"""End-to-end behaviour: the paper's Figure-1 workflow (data ingest →
+cleaning → wrangling → analysis) through the pandas-flavoured API, plus the
+Fig.-6 operator mix at a partitioned scale."""
+import numpy as np
+import pytest
+
+from repro.core import DataFrame, EvalMode, Session, get_dummies, set_session
+from repro.data.synthetic import taxi_like_frame
+
+
+@pytest.fixture
+def sess():
+    s = set_session(Session(mode=EvalMode.EAGER, default_row_parts=2))
+    yield s
+    s.close()
+
+
+def test_figure1_workflow_end_to_end(sess):
+    # In[1]: ingest (scraped table: products as columns)
+    products = DataFrame({
+        "iPhone 11 Pro": ["5.8-inch", "12MP", "120MP", "Yes"],
+        "iPhone 11 Pro Max": ["6.5-inch", "12MP", "12MP", "Yes"],
+        "iPhone XR": ["6.1-inch", "12MP", "7MP", "No"],
+        "iPhone 8 Plus": ["5.5-inch", "12MP", "7MP", "No"],
+    }, row_labels=["Display", "Camera", "Front Camera", "Wireless Charging"])
+
+    # C1: ordered point update fixes the 120MP data-entry error
+    products.iloc[2, 0] = "12MP"
+    assert products.iloc[2, 0] == "12MP"
+
+    # C2: matrix-like transpose → products become rows
+    pt = products.T
+    f = pt.collect()
+    assert f.row_labels.to_list()[0] == "iPhone 11 Pro"
+    assert f.col_labels.to_list() == ["Display", "Camera", "Front Camera",
+                                      "Wireless Charging"]
+
+    # C3: column transformation via map (Yes/No → 1/0); S(·) induces int
+    pt["Wireless Charging"] = pt["Wireless Charging"].map(
+        lambda v: 1 if v == "Yes" else 0)
+    f = pt.collect().induce()
+    assert f.col("Wireless Charging").to_pylist() == [1, 1, 0, 0]
+    assert f.schema[-1].value == "int"
+
+    # C4: second dataset (prices/ratings)
+    prices = DataFrame({
+        "model": ["iPhone 11 Pro", "iPhone 11 Pro Max", "iPhone XR",
+                  "iPhone 8 Plus"],
+        "price": [999, 1099, 599, 449],
+        "rating": [4.5, 4.6, 4.4, 4.3],
+    })
+
+    # A1: one-hot encode the categorical Display column
+    one_hot = get_dummies(pt.reset_index("model"), ["Display"])
+    assert any(c.startswith("Display_") for c in one_hot.columns)
+
+    # A2: join on model names
+    joined = one_hot.merge(prices, on="model")
+    assert joined.shape[0] == 4
+
+    # A3: covariance over the numeric (matrix) sub-frame
+    num = joined[[c for c in joined.columns
+                  if c not in ("model", "Camera", "Front Camera")]]
+    cov = num.cov()
+    assert cov.shape[0] == cov.shape[1] == num.shape[1]
+    mat, _ = cov.as_matrix()
+    np.testing.assert_allclose(np.asarray(mat), np.asarray(mat).T, atol=1e-4)
+
+
+def test_fig6_operator_mix_partitioned(sess):
+    frame = taxi_like_frame(20_000, seed=1)
+    df = DataFrame(frame)
+
+    # map: null-scrub over the float columns
+    filled = df.fillna(0.0)
+    assert filled.shape == (20_000, 8)
+
+    # groupby(n)
+    g = df.groupby("passenger_count").count().collect()
+    assert g.nrows <= 6
+    assert sum(g.col("payment_type").to_pylist()) == 20_000
+
+    # groupby(1)
+    total = df["f0"].count()
+    assert 19_000 < total <= 20_000  # ~1% nulls
+
+    # transpose on the numeric sub-frame + map (paper's transpose benchmark)
+    num = df[[f"f{i}" for i in range(6)]]
+    t = num.T
+    back = t.T.collect()
+    assert back.shape == (20_000, 6)
