@@ -7,6 +7,8 @@
   reuse         paper §6.2: session materialization/reuse
   approx        paper §6.1.3: progressive aggregation to ±1%
   roofline      deliverable (g): table from the dry-run artifacts
+  fusion        paper §5: fused row-local pipelines vs per-node evaluation
+                (also writes BENCH_fusion.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 """
@@ -33,8 +35,9 @@ def main() -> None:
     ap.add_argument("--only", default="all")
     args, _ = ap.parse_known_args()
 
-    from . import (bench_approx, bench_fig6, bench_opportunistic,
-                   bench_reuse, bench_rewrite, bench_roofline)
+    from . import (bench_approx, bench_fig6, bench_fusion,
+                   bench_opportunistic, bench_reuse, bench_rewrite,
+                   bench_roofline)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -42,6 +45,7 @@ def main() -> None:
         "reuse": bench_reuse.run,
         "approx": bench_approx.run,
         "roofline": bench_roofline.run,
+        "fusion": bench_fusion.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

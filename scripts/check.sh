@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + fused-pipeline benchmark smoke run.
+# Usage: scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+# fused-vs-unfused sanity at small size (also refreshes BENCH_fusion.json;
+# full-size numbers: python -m benchmarks.run --only fusion)
+python -m benchmarks.bench_fusion --smoke

@@ -32,8 +32,8 @@ __all__ = [
     "Node", "Source", "Selection", "Projection", "Union", "Difference",
     "Join", "DropDuplicates", "GroupBy", "Sort", "Rename", "Window",
     "Transpose", "Map", "ToLabels", "FromLabels", "Limit",
-    "ColumnSort", "ColumnFilter",
-    "AGG_FUNCS", "WINDOW_FUNCS", "prefix_safe",
+    "ColumnSort", "ColumnFilter", "Stage", "FusedPipeline",
+    "AGG_FUNCS", "WINDOW_FUNCS", "prefix_safe", "fusible", "FUSIBLE_OPS",
 ]
 
 AGG_FUNCS = ("sum", "count", "mean", "min", "max", "any", "all", "var", "std")
@@ -133,7 +133,10 @@ class Lit(Expr):
         return frozenset()
 
     def key(self) -> tuple:
-        return ("lit", self.value)
+        # type name included: 1 == 1.0 == True in Python, but int/float/bool
+        # literals evaluate differently (integer arithmetic stays exact), so
+        # their plans must not collide in the executor/predicate caches
+        return ("lit", type(self.value).__name__, self.value)
 
     def __repr__(self):
         return f"lit({self.value!r})"
@@ -274,6 +277,8 @@ def _freeze(obj):
     if isinstance(obj, Expr):
         return obj.key()
     if isinstance(obj, Udf):
+        return obj.key()
+    if isinstance(obj, Stage):
         return obj.key()
     return obj
 
@@ -470,12 +475,83 @@ class ColumnFilter(Node):
         super().__init__([child], predicate=predicate)
 
 
+# ---- fusion-target node (paper §5 "Pipelining"; Cylon local-pattern fusion) --
+class Stage:
+    """One row-local operator folded into a :class:`FusedPipeline`.
+
+    Carries the original node's ``op`` and *live* params (Expr / Udf objects —
+    the physical runner needs them), while hashing by the same frozen key the
+    source node would have used, so fused plans stay structurally hashable for
+    the executor's materialization cache."""
+
+    __slots__ = ("op", "params", "_key")
+
+    def __init__(self, op: str, params: dict):
+        self.op = op
+        self.params = dict(params)
+        self._key = ("stage", op, _freeze(self.params))
+
+    def key(self) -> tuple:
+        return self._key
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, Stage) and other._key == self._key
+
+    def __repr__(self):
+        return f"stage:{self.op}"
+
+
+class FusedPipeline(Node):
+    """A maximal chain of row-local operators compiled into one per-block
+    program (paper §5: ordered semantics still admit pipelined execution of
+    row-local chains).  ``stages`` run bottom-up — ``stages[0]`` consumes the
+    child's output.  Evaluated as a single pass per row partition with no
+    intermediate ``PartitionedFrame``s and one cache entry for the group."""
+
+    op = "fused_pipeline"
+    schema_kind = "inferred"
+    touches = "both"
+
+    def __init__(self, child: Node, stages: Sequence[Stage]):
+        super().__init__([child], stages=tuple(stages))
+
+    @property
+    def stages(self) -> tuple:
+        return self.params["stages"]
+
+    def __repr__(self):
+        return ("fused_pipeline[" + "∘".join(s.op for s in reversed(self.stages))
+                + f"]<-[{self.children[0].op}]")
+
+
+# Row-local, order-preserving unary operators whose physical implementation is
+# a pure per-row-block transform: legal to fuse into one per-partition program.
+# LIMIT is deliberately excluded (its k applies to the *global* row order, not
+# per block); non-elementwise MAPs run on the whole frame and cannot fuse.
+FUSIBLE_OPS = ("map", "selection", "projection", "rename")
+
+
+def fusible(node: Node) -> bool:
+    """True if ``node`` may join a fused row-local pipeline."""
+    if node.op not in FUSIBLE_OPS or len(node.children) != 1:
+        return False
+    if node.op == "map":
+        return node.params["udf"].elementwise
+    return True
+
+
 # =============================================================================
 # Prefix-safety analysis (§6.1.2): can LIMIT(k) be answered from an input
 # prefix?  True for order-preserving, row-local operators.
 # =============================================================================
 _PREFIX_SAFE = {"selection", "projection", "map", "rename", "union", "limit",
-                "from_labels", "to_labels", "source", "window"}
+                "from_labels", "to_labels", "source", "window",
+                "fused_pipeline"}
+# fused_pipeline: fusible ops are all row-local/order-preserving, so a fused
+# group inherits prefix-safety by construction.
 # window is prefix-safe for forward windows (cumsum/…): row i depends only on
 # rows ≤ i.  GROUPBY/SORT/JOIN/TRANSPOSE/DIFFERENCE/DROP-DUPLICATES are
 # blocking (paper: "it is hard to produce the first k tuples of a GROUP BY or

@@ -18,7 +18,11 @@ Also implements:
   policy of Helix [69] approximated greedily;
 * multi-query sharing (§6.2.1): common sub-expressions across concurrently
   scheduled statements dedupe through the cache *and* through an in-flight
-  table, so a sub-plan running in the background is joined, never recomputed.
+  table, so a sub-plan running in the background is joined, never recomputed;
+* pipeline fusion (§5): after rule rewriting, maximal chains of row-local
+  operators collapse into ``FusedPipeline`` groups (``rewrite.fuse_pipelines``)
+  evaluated as one physical sweep with a single cache entry per group —
+  ``ExecStats.fused_groups`` / ``fused_stage_ops`` attribute the win.
 """
 from __future__ import annotations
 
@@ -58,6 +62,8 @@ class ExecStats:
     prefix_evals: int = 0
     rewrites_applied: int = 0
     background_tasks: int = 0
+    fused_groups: int = 0       # FusedPipeline nodes formed across plans
+    fused_stage_ops: int = 0    # operator nodes absorbed into fused groups
 
 
 class Executor:
@@ -71,6 +77,13 @@ class Executor:
         self.stats = ExecStats()
         self._lock = threading.Lock()
         self._inflight: dict[tuple, _fut.Future] = {}
+        # plan keys already counted in fusion stats (bounded FIFO: stats-only
+        # bookkeeping must not grow with the life of a session)
+        self._fused_seen: dict[tuple, None] = {}
+        self._fused_seen_max = 4096
+        # optimized-plan key → fused plan: re-evaluating a cached statement
+        # must not pay the fusion walk again (bounded FIFO like the above)
+        self._fuse_memo: dict[tuple, alg.Node] = {}
         self._bg = _fut.ThreadPoolExecutor(max_workers=background_workers,
                                            thread_name_prefix="repro-bg")
 
@@ -92,12 +105,41 @@ class Executor:
             self.stats.rewrites_applied += 1
         return out
 
+    def fused(self, node: alg.Node) -> alg.Node:
+        """Fusion pass (paper §5 pipelining): collapse row-local chains into
+        FusedPipeline groups — one physical sweep and one cache entry each.
+        Disabled together with ``optimize`` so the per-node path stays
+        available as the comparison baseline."""
+        if not self.optimize:
+            return node
+        in_key = node.cache_key()
+        with self._lock:
+            hit = self._fuse_memo.get(in_key)
+        if hit is not None:
+            return hit
+        out, fs = rewrite.fuse_pipelines(node)
+        with self._lock:
+            while len(self._fuse_memo) >= self._fused_seen_max:
+                self._fuse_memo.pop(next(iter(self._fuse_memo)))
+            self._fuse_memo[in_key] = out
+            if fs.groups:   # count each distinct plan once: re-evaluating a
+                key = out.cache_key()   # cached plan is not new fusion work
+                if key not in self._fused_seen:
+                    while len(self._fused_seen) >= self._fused_seen_max:
+                        self._fused_seen.pop(next(iter(self._fused_seen)))
+                    self._fused_seen[key] = None
+                    self.stats.fused_groups += fs.groups
+                    self.stats.fused_stage_ops += fs.fused_ops
+        return out
+
+    def _prepared(self, node: alg.Node) -> alg.Node:
+        return self.fused(self.optimized(node))
+
     # ------------------------------------------------------------------
     # synchronous evaluation (with cache + in-flight dedupe)
     # ------------------------------------------------------------------
     def evaluate(self, node: alg.Node) -> PartitionedFrame:
-        node = self.optimized(node)
-        return self._eval(node)
+        return self._eval(self._prepared(node))
 
     def _eval(self, node: alg.Node) -> PartitionedFrame:
         key = node.cache_key()
@@ -181,7 +223,7 @@ class Executor:
     def submit(self, node: alg.Node) -> _fut.Future:
         """Schedule evaluation in the background; returns a future.  The
         user-facing handle keeps composing; an inspect call joins it."""
-        node = self.optimized(node)
+        node = self._prepared(node)
         self.stats.background_tasks += 1
         return self._bg.submit(self._eval, node)
 
@@ -190,7 +232,7 @@ class Executor:
     # ------------------------------------------------------------------
     def evaluate_prefix(self, node: alg.Node, k: int) -> PartitionedFrame:
         """Produce (at least) the first k result rows cheaply when legal."""
-        node = self.optimized(node)
+        node = self._prepared(node)
         key = node.cache_key()
         with self._lock:
             ent = self.cache.get(key)

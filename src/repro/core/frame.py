@@ -18,8 +18,10 @@ Representation (DESIGN.md §3 — hardware adaptation):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,6 +36,16 @@ from .dtypes import (
 from .labels import CodedLabels, Labels, RangeLabels, labels_from_values
 
 __all__ = ["Column", "Frame"]
+
+
+@functools.lru_cache(maxsize=None)
+def _host_exec() -> bool:
+    """On the CPU backend a per-column device gather/concat is pure dispatch
+    overhead (~15× the cost of the host memcpy it performs): row takes then
+    run as host numpy views that re-enter the device lazily.  TPU keeps the
+    device path.  Probed lazily so importing the library doesn't force jax
+    backend initialization (users may still select a platform afterwards)."""
+    return jax.default_backend() == "cpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,9 +79,13 @@ class Column:
                 out.append(float(data[i]))
         return out
 
-    def valid_mask(self) -> jnp.ndarray:
+    def valid_mask(self) -> jnp.ndarray | np.ndarray:
         if self.mask is not None:
             return self.mask
+        if _host_exec():
+            # host ones: allocating on device is a ~50µs dispatch per call on
+            # CPU; consumers promote lazily when a device op needs it
+            return np.ones(self.data.shape[0], dtype=np.bool_)
         return jnp.ones(self.data.shape[0], dtype=jnp.bool_)
 
     def value_at(self, i: int):
@@ -87,10 +103,12 @@ class Column:
         return float(v)
 
     def take(self, idx) -> "Column":
-        if isinstance(self.data, np.ndarray):   # host view: numpy fancy index
+        if isinstance(self.data, np.ndarray) or _host_exec():
+            # host view: numpy fancy index (CPU jax arrays expose their buffer
+            # to np.asarray at memcpy cost, far below a device dispatch)
             idx_np = np.asarray(idx)
             return Column(
-                self.data[idx_np], self.domain,
+                np.asarray(self.data)[idx_np], self.domain,
                 None if self.mask is None else np.asarray(self.mask)[idx_np],
                 self.dictionary)
         idx = jnp.asarray(idx)
@@ -294,8 +312,8 @@ class Frame:
             a, b = _unify_pair(a, b)
             mask = None
             if a.mask is not None or b.mask is not None:
-                mask = jnp.concatenate([a.valid_mask(), b.valid_mask()])
-            cols.append(Column(jnp.concatenate([a.data, b.data]), a.domain, mask, a.dictionary))
+                mask = _concat_arrays(a.valid_mask(), b.valid_mask())
+            cols.append(Column(_concat_arrays(a.data, b.data), a.domain, mask, a.dictionary))
         rd = None
         if (self.row_domains is not None and other.row_domains is not None
                 and len(self.row_domains) == self.nrows
@@ -364,6 +382,16 @@ class Frame:
             if c.mask is not None:
                 total += c.mask.size
         return total
+
+
+def _concat_arrays(a, b):
+    """Row-axis concat: on host for the CPU backend or pure host views (a
+    device concatenate is a dispatch per call; zero-copy repartition regroups
+    want a plain memcpy).  A device array on an accelerator backend stays on
+    device — mixed host/device pairs promote the host side up, not down."""
+    if _host_exec() or (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)):
+        return np.concatenate([np.asarray(a), np.asarray(b)])
+    return jnp.concatenate([jnp.asarray(a), jnp.asarray(b)])
 
 
 def _set_valid(col: Column, r: int) -> jnp.ndarray | None:

@@ -7,6 +7,11 @@ Two physical forms:
 * ``RangeLabels`` — the default positional labels 0..m-1.  O(1) metadata; this
   is what keeps "billions of columns" after a TRANSPOSE cheap (the transposed
   frame's column labels are the old positional row labels).
+* ``IntLabels`` — arbitrary integer labels as a host numpy vector.  This is
+  what a filtered/gathered ``RangeLabels`` becomes: ``take``/``concat`` are
+  vectorized numpy ops, never a per-row Python loop (the row-local fused
+  pipelines filter blocks on every selection — label bookkeeping must not
+  dominate the actual filter).
 * ``CodedLabels`` — arbitrary labels dictionary-encoded: int32 codes (host
   numpy; labels are metadata and never need the device) + host code table.
 
@@ -22,7 +27,7 @@ import numpy as np
 
 from .dtypes import Domain
 
-__all__ = ["Labels", "RangeLabels", "CodedLabels", "labels_from_values"]
+__all__ = ["Labels", "RangeLabels", "IntLabels", "CodedLabels", "labels_from_values"]
 
 
 class Labels:
@@ -84,7 +89,8 @@ class RangeLabels(Labels):
         # A contiguous take of a range stays a range (keeps metadata O(1)).
         if idx.size and np.array_equal(idx, np.arange(idx[0], idx[0] + idx.size)):
             return RangeLabels(int(idx.size), self.start + int(idx[0]))
-        return labels_from_values([self.start + int(i) for i in idx])
+        # non-contiguous (filter/gather): stay vectorized — no per-row Python
+        return IntLabels(self.start + idx.astype(np.int64))
 
     def concat(self, other: Labels) -> Labels:
         if (
@@ -92,6 +98,9 @@ class RangeLabels(Labels):
             and other.start == self.start + self.length
         ):
             return RangeLabels(self.length + other.length, self.start)
+        if isinstance(other, (RangeLabels, IntLabels)):
+            mine = np.arange(self.start, self.start + self.length, dtype=np.int64)
+            return IntLabels(mine).concat(other)
         return super().concat(other)
 
     def position_of(self, label: Any) -> int:
@@ -103,6 +112,49 @@ class RangeLabels(Labels):
 
     def positions_of(self, labels: Iterable[Any]) -> list[int]:
         return [self.position_of(l) for l in labels]
+
+    @property
+    def domain(self) -> Domain:
+        return Domain.INT
+
+
+class IntLabels(Labels):
+    """Arbitrary integer labels backed by a host numpy vector — the vectorized
+    form a ``RangeLabels`` collapses to after a filter or gather.  All label
+    algebra (take / concat) is O(1) Python + one numpy op."""
+
+    __slots__ = ("values",)
+
+    def __init__(self, values: np.ndarray):
+        self.values = np.asarray(values, dtype=np.int64)
+
+    def __len__(self) -> int:
+        return int(self.values.shape[0])
+
+    def to_list(self) -> list:
+        return self.values.tolist()
+
+    def take(self, idx: np.ndarray) -> Labels:
+        return IntLabels(self.values[np.asarray(idx)])
+
+    def concat(self, other: Labels) -> Labels:
+        if isinstance(other, IntLabels):
+            return IntLabels(np.concatenate([self.values, other.values]))
+        if isinstance(other, RangeLabels):
+            return IntLabels(np.concatenate([
+                self.values,
+                np.arange(other.start, other.start + other.length, dtype=np.int64)]))
+        return super().concat(other)
+
+    def position_of(self, label: Any) -> int:
+        if isinstance(label, (int, np.integer)):
+            hits = np.nonzero(self.values == int(label))[0]
+            if hits.size:
+                return int(hits[0])
+        raise KeyError(label)
+
+    # positions_of: inherit the base class's one-pass dict index — a per-label
+    # nonzero scan would be O(k·n) on post-transpose many-column frames
 
     @property
     def domain(self) -> Domain:

@@ -19,6 +19,14 @@ shard_map — see ``physical.py`` and ``launch/dryrun.py``.
 The headline trick (paper §4.2 "Supporting billions of columns"): TRANSPOSE is
 a *grid* transpose — each block is transposed locally (a Pallas kernel on
 TPU), then the grid metadata is swapped.  No global shuffle.
+
+Repartitioning is **zero-copy** where the data layout allows it: scheme
+changes re-slice/re-group the existing blocks by metadata instead of
+round-tripping through a full ``to_frame()`` concat + re-split.  Column
+regrouping never touches data (columns are independent arrays, so merging and
+splitting column blocks is pure metadata).  Row regrouping concatenates only
+the block *segments* that actually cross a target boundary; a source block
+that lands wholly inside one target group is passed through by identity.
 """
 from __future__ import annotations
 
@@ -68,6 +76,31 @@ def _split_sizes(n: int, parts: int) -> list[int]:
     parts = max(1, min(parts, n)) if n > 0 else 1
     base, rem = divmod(n, parts)
     return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+def _segments(src_sizes: list[int], tgt_sizes: list[int]) -> list[list[tuple[int, int, int]]]:
+    """Map a source block layout onto a target layout: for each target group,
+    the covering ``(src_block, lo, hi)`` half-open local ranges.  A segment
+    spanning a whole source block signals an identity pass-through."""
+    out: list[list[tuple[int, int, int]]] = []
+    bi, off = 0, 0
+    for t in tgt_sizes:
+        need, segs = t, []
+        while need > 0 and bi < len(src_sizes):
+            avail = src_sizes[bi] - off
+            if avail == 0:
+                bi += 1
+                off = 0
+                continue
+            take = min(need, avail)
+            segs.append((bi, off, off + take))
+            off += take
+            need -= take
+            if off == src_sizes[bi]:
+                bi += 1
+                off = 0
+        out.append(segs)
+    return out
 
 
 class PartitionedFrame:
@@ -163,13 +196,71 @@ class PartitionedFrame:
     # repartitioning (the paper's scheme changes between operators)
     # ------------------------------------------------------------------
     def repartition(self, row_parts: int | None = None, col_parts: int | None = None) -> "PartitionedFrame":
+        """Change the grid scheme without a full-frame materialization.
+
+        Column regrouping is pure metadata (zero-copy); row regrouping copies
+        only the segments that cross target-group boundaries and forwards
+        boundary-aligned blocks by identity.  Never calls ``to_frame()``.
+        """
         rp = row_parts if row_parts is not None else self.row_parts
         cp = col_parts if col_parts is not None else self.col_parts
-        if rp == self.row_parts and cp == self.col_parts:
-            return self
-        # Concatenate then re-split.  (A production TPU path reshards with a
-        # collective-permute; on host this is a copy.)
-        return PartitionedFrame.from_frame(self.to_frame(), rp, cp)
+        out = self
+        if cp != out.col_parts:
+            out = out._regroup_cols(cp)
+        if rp != out.row_parts:
+            out = out._regroup_rows(rp)
+        return out
+
+    def _regroup_cols(self, col_parts: int) -> "PartitionedFrame":
+        """Re-split column blocks per row stripe.  Zero-copy: ``concat_cols``
+        merges column lists and ``take_cols`` picks column objects — no device
+        array is touched."""
+        tgt = _split_sizes(self.ncols, col_parts)
+        segs = _segments(self.col_sizes, tgt)
+        grid: list[list[Frame]] = []
+        for stripe in self.parts:
+            row: list[Frame] = []
+            for seglist in segs:
+                pieces = []
+                for (bj, lo, hi) in seglist:
+                    blk = stripe[bj]
+                    pieces.append(blk if (lo == 0 and hi == blk.ncols)
+                                  else blk.take_cols(range(lo, hi)))
+                if not pieces:
+                    cell = stripe[0].take_cols([])
+                else:
+                    cell = pieces[0]
+                    for p in pieces[1:]:
+                        cell = cell.concat_cols(p)
+                row.append(cell)
+            grid.append(row)
+        return PartitionedFrame(grid)
+
+    def _regroup_rows(self, row_parts: int) -> "PartitionedFrame":
+        """Re-split row blocks per column block.  Segments that cover a whole
+        source block pass through by identity; partial segments slice only
+        their own rows; merged groups concatenate only their own segments —
+        no full-frame concat ever happens."""
+        tgt = _split_sizes(self.nrows, row_parts)
+        segs = _segments(self.row_sizes, tgt)
+        grid: list[list[Frame]] = []
+        for seglist in segs:
+            row: list[Frame] = []
+            for j in range(self.col_parts):
+                pieces = []
+                for (bi, lo, hi) in seglist:
+                    blk = self.parts[bi][j]
+                    pieces.append(blk if (lo == 0 and hi == blk.nrows)
+                                  else blk.take_rows(np.arange(lo, hi)))
+                if not pieces:
+                    cell = self.parts[0][j].take_rows(np.arange(0))
+                else:
+                    cell = pieces[0]
+                    for p in pieces[1:]:
+                        cell = cell.concat_rows(p)
+                row.append(cell)
+            grid.append(row)
+        return PartitionedFrame(grid)
 
     # ------------------------------------------------------------------
     # grid transpose (metadata swap; per-block op supplied by caller)

@@ -17,10 +17,23 @@ Each logical operator picks a partitioning scheme per the paper's §4.2 table:
 The same operator bodies double as the shard_map shard-level programs for the
 TPU mesh (see ``launch/dryrun.py`` — the pipeline dry-run lowers MAP/GROUPBY/
 WINDOW over the production mesh with psums standing in for the combines).
+
+Fused pipelines (paper §5 "Pipelining")
+---------------------------------------
+``FUSED_PIPELINE`` executes a whole chain of row-local operators (elementwise
+MAP, SELECTION, PROJECTION, RENAME) as **one** per-row-partition program on
+the shared pool: a single sweep over each block with column values staying on
+device between stages, no intermediate ``PartitionedFrame``s, and one pool
+dispatch for the whole chain instead of one per operator.  Runs of
+consecutive structured-``Expr`` selections additionally collapse into a
+single jit-compiled mask program (one XLA executable per predicate chain,
+cached across blocks), so a k-predicate chain costs one device dispatch and
+one filter instead of k of each.
 """
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Any, Callable, Sequence
 
 import jax
@@ -30,7 +43,7 @@ import numpy as np
 from . import algebra as alg
 from .dtypes import Domain, common_storage, parse_column, storage_dtype
 from .frame import Column, Frame
-from .labels import CodedLabels, Labels, RangeLabels, labels_from_values
+from .labels import CodedLabels, IntLabels, Labels, RangeLabels, labels_from_values
 from .partition import PartitionedFrame, get_pool
 from ..kernels import ops as kops
 
@@ -47,16 +60,21 @@ def _col_values(frame: Frame, name: Any) -> tuple[jnp.ndarray, jnp.ndarray, Colu
     return c.data, c.valid_mask(), c
 
 
-def eval_expr(expr: alg.Expr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Vectorized evaluation → (values, valid_mask) device arrays."""
+def _eval_expr_core(expr: alg.Expr, getcol: Callable, nrows: int,
+                    bin_hook: Callable | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The one expression interpreter, shared by the interpreted per-frame
+    path (``eval_expr``) and the jit-traced fused-predicate path
+    (``_eval_expr_env``) so the two can never diverge.
+
+    ``getcol(name) → (values, mask)``; ``bin_hook(BinExpr) → result | None``
+    lets the frame path intercept coded-column comparisons (host code-table
+    translation that cannot run under jit)."""
     if isinstance(expr, alg.ColRef):
-        data, mask, _ = _col_values(frame, expr.name)
-        return data, mask
+        return getcol(expr.name)
     if isinstance(expr, alg.Lit):
-        m = frame.nrows
-        return jnp.full((m,), expr.value), jnp.ones((m,), jnp.bool_)
+        return jnp.full((nrows,), expr.value), jnp.ones((nrows,), jnp.bool_)
     if isinstance(expr, alg.UnaryExpr):
-        v, mask = eval_expr(expr.operand, frame)
+        v, mask = _eval_expr_core(expr.operand, getcol, nrows, bin_hook)
         if expr.op == "~":
             return ~v.astype(jnp.bool_), mask
         if expr.op == "isna":
@@ -65,8 +83,33 @@ def eval_expr(expr: alg.Expr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
             return mask, jnp.ones_like(mask)
         raise ValueError(expr.op)
     if isinstance(expr, alg.BinExpr):
-        return _eval_bin(expr, frame)
+        if bin_hook is not None:
+            hit = bin_hook(expr)
+            if hit is not None:
+                return hit
+        lv, lm = _eval_expr_core(expr.left, getcol, nrows, bin_hook)
+        rv, rm = _eval_expr_core(expr.right, getcol, nrows, bin_hook)
+        return _bin_numeric(expr.op, lv, lm, rv, rm)
     raise TypeError(expr)
+
+
+def eval_expr(expr: alg.Expr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized evaluation → (values, valid_mask) device arrays."""
+    def getcol(name):
+        data, mask, _ = _col_values(frame, name)
+        return data, mask
+
+    def bin_hook(e: alg.BinExpr):
+        # coded-column vs literal comparisons translate to code-space
+        if isinstance(e.left, alg.ColRef) and isinstance(e.right, alg.Lit):
+            c = frame.col(e.left.name)
+            if c.domain.is_coded and e.op in ("==", "!="):
+                code = _lit_to_code(c, e.right.value)
+                v = c.data == code if e.op == "==" else c.data != code
+                return v, c.valid_mask()
+        return None
+
+    return _eval_expr_core(expr, getcol, frame.nrows, bin_hook)
 
 
 def _lit_to_code(column: Column, value: Any) -> int:
@@ -74,27 +117,35 @@ def _lit_to_code(column: Column, value: Any) -> int:
     key = str(value)
     return table.index(key) if key in table else -2  # -2 never matches
 
-def _eval_bin(expr: alg.BinExpr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
-    # coded-column vs literal comparisons translate to code-space
-    if isinstance(expr.left, alg.ColRef) and isinstance(expr.right, alg.Lit):
-        c = frame.col(expr.left.name)
-        if c.domain.is_coded and expr.op in ("==", "!="):
-            code = _lit_to_code(c, expr.right.value)
-            v = c.data == code if expr.op == "==" else c.data != code
-            return v, c.valid_mask()
-    lv, lm = eval_expr(expr.left, frame)
-    rv, rm = eval_expr(expr.right, frame)
+
+def _bin_numeric(op: str, lv, lm, rv, rm) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Binary op over (values, mask) pairs.  int⊕int stays in integer dtypes
+    for ``+ - * % //`` and comparisons — a float32 round-trip corrupts values
+    above 2²⁴ (int32 storage holds up to 2³¹−1).  Like numpy/pandas integer
+    dtypes, ``+ - *`` wrap on int32 overflow; ``% //`` by zero yield null."""
     mask = lm & rm
-    op = expr.op
     if op in ("&", "|"):
         lb, rb = lv.astype(jnp.bool_), rv.astype(jnp.bool_)
         return (lb & rb if op == "&" else lb | rb), mask
+    both_int = (jnp.issubdtype(lv.dtype, jnp.integer)
+                and jnp.issubdtype(rv.dtype, jnp.integer))
+    if op in ("+", "-", "*", "%", "//") and both_int:
+        if op in ("%", "//"):
+            # int division by 0 is XLA-defined garbage (unlike float inf/nan):
+            # mark those rows null instead of surfacing a plausible integer
+            mask = mask & (rv != 0)
+        out = {"+": lv + rv, "-": lv - rv, "*": lv * rv,
+               "%": jnp.mod(lv, rv), "//": jnp.floor_divide(lv, rv)}[op]
+        return out, mask
     if op in ("+", "-", "*", "/", "%", "//"):
         lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
         out = {"+": lf + rf, "-": lf - rf, "*": lf * rf, "/": lf / rf,
                "%": jnp.mod(lf, rf), "//": jnp.floor_divide(lf, rf)}[op]
         return out, mask
-    lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
+    if both_int:
+        lf, rf = lv, rv
+    else:
+        lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
     out = {
         "==": lf == rf, "!=": lf != rf, "<": lf < rf,
         "<=": lf <= rf, ">": lf > rf, ">=": lf >= rf,
@@ -127,11 +178,13 @@ def _selection(pf: PartitionedFrame, predicate) -> PartitionedFrame:
     return PartitionedFrame(rows)
 
 
+def _project_block(frame: Frame, cols: Sequence[Any]) -> Frame:
+    return frame.take_cols(frame.col_labels.positions_of(cols))
+
+
 def _projection(pf: PartitionedFrame, cols: Sequence[Any]) -> PartitionedFrame:
     f = pf.repartition(col_parts=1)
-    def proj(frame: Frame) -> Frame:
-        return frame.take_cols(frame.col_labels.positions_of(cols))
-    return f.map_blockwise(proj)
+    return f.map_blockwise(lambda frame: _project_block(frame, cols))
 
 
 def _union(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
@@ -747,32 +800,33 @@ def _transpose_coded(f: Frame) -> Frame:
 
 
 # ---- MAP ------------------------------------------------------------------
-def _map(pf: PartitionedFrame, udf: alg.Udf) -> PartitionedFrame:
-    def apply(frame: Frame) -> Frame:
-        f = frame.induce()
-        cols_in = {n: c for n, c in zip(f.col_labels.to_list(), f.columns)}
-        out = udf.fn(cols_in, f)
-        if isinstance(out, Frame):
-            return out
-        # dict {label: Column | array | (array, mask)} preserving row count
-        names, cols = [], []
-        for name, v in out.items():
-            names.append(name)
-            if isinstance(v, Column):
-                cols.append(v)
-            elif isinstance(v, tuple):
-                data, mask = v
-                cols.append(Column(jnp.asarray(data), _infer_dom(data), mask, None))
-            else:
-                arr = jnp.asarray(v)
-                cols.append(Column(arr, _infer_dom(arr), None, None))
-        return Frame(cols, f.row_labels, labels_from_values(names))
+def _apply_udf_block(frame: Frame, udf: alg.Udf) -> Frame:
+    """Run a Udf over one block (also the per-stage body of fused pipelines)."""
+    f = frame.induce()
+    cols_in = {n: c for n, c in zip(f.col_labels.to_list(), f.columns)}
+    out = udf.fn(cols_in, f)
+    if isinstance(out, Frame):
+        return out
+    # dict {label: Column | array | (array, mask)} preserving row count
+    names, cols = [], []
+    for name, v in out.items():
+        names.append(name)
+        if isinstance(v, Column):
+            cols.append(v)
+        elif isinstance(v, tuple):
+            data, mask = v
+            cols.append(Column(jnp.asarray(data), _infer_dom(data), mask, None))
+        else:
+            arr = jnp.asarray(v)
+            cols.append(Column(arr, _infer_dom(arr), None, None))
+    return Frame(cols, f.row_labels, labels_from_values(names))
 
+
+def _map(pf: PartitionedFrame, udf: alg.Udf) -> PartitionedFrame:
     if udf.elementwise:
-        if udf.deps is None:
-            return pf.repartition(col_parts=1).map_blockwise(apply)
-        return pf.repartition(col_parts=1).map_blockwise(apply)
-    return PartitionedFrame.from_frame(apply(pf.to_frame()))
+        return pf.repartition(col_parts=1).map_blockwise(
+            lambda f: _apply_udf_block(f, udf))
+    return PartitionedFrame.from_frame(_apply_udf_block(pf.to_frame(), udf))
 
 
 def _infer_dom(arr) -> Domain:
@@ -805,7 +859,7 @@ def _from_labels(pf: PartitionedFrame, label: Any) -> PartitionedFrame:
         (frame, start) = args
         f = frame
         vals = f.row_labels.to_list()
-        c = _host_column(vals, None if not isinstance(f.row_labels, RangeLabels) else Domain.INT)
+        c = _host_column(vals, Domain.INT if isinstance(f.row_labels, (RangeLabels, IntLabels)) else None)
         new = Frame([c] + list(f.columns),
                     RangeLabels(f.nrows, start),
                     labels_from_values([label]).concat(f.col_labels))
@@ -815,12 +869,14 @@ def _from_labels(pf: PartitionedFrame, label: Any) -> PartitionedFrame:
     return PartitionedFrame([[b] for b in out])
 
 
+def _rename_block(frame: Frame, mapping: dict) -> Frame:
+    names = [mapping.get(n, n) for n in frame.col_labels.to_list()]
+    return Frame(frame.columns, frame.row_labels, labels_from_values(names), frame.row_domains)
+
+
 def _rename(pf: PartitionedFrame, mapping_items) -> PartitionedFrame:
     mapping = dict(mapping_items)
-    def ren(frame: Frame) -> Frame:
-        names = [mapping.get(n, n) for n in frame.col_labels.to_list()]
-        return Frame(frame.columns, frame.row_labels, labels_from_values(names), frame.row_domains)
-    return pf.map_blockwise(ren)
+    return pf.map_blockwise(lambda frame: _rename_block(frame, mapping))
 
 
 def _limit(pf: PartitionedFrame, k: int, tail: bool) -> PartitionedFrame:
@@ -887,10 +943,111 @@ def _column_filter(pf: PartitionedFrame, predicate: alg.Expr) -> PartitionedFram
 
 
 # =============================================================================
+# FUSED PIPELINE (paper §5): one per-block program for a row-local chain
+# =============================================================================
+def _eval_expr_env(expr: alg.Expr, env: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``eval_expr`` over a plain {name: (values, mask)} environment — the
+    jit-traceable entry used by compiled predicate chains (no Frame objects,
+    no coded columns; callers gate on that).  Same interpreter core as
+    ``eval_expr``, so fused and unfused predicates cannot diverge."""
+    nrows = next(iter(env.values()))[0].shape[0]
+    return _eval_expr_core(expr, env.__getitem__, nrows)
+
+
+# Compiled predicate-chain programs, keyed by the combined expression's
+# structural key.  One XLA executable evaluates the whole chain → bool keep
+# mask; jit's own shape cache handles the (±1-row) block-size variants.
+# Bounded FIFO: predicates with varying literals each get a distinct key, so
+# an unbounded dict would leak one compiled program per literal seen.
+_PRED_JIT: dict[tuple, Callable] = {}
+_PRED_JIT_LOCK = threading.Lock()
+_PRED_JIT_MAX = 256
+
+
+def _compiled_predicate(expr: alg.Expr, refs: tuple) -> Callable:
+    key = expr.key()
+    with _PRED_JIT_LOCK:
+        fn = _PRED_JIT.get(key)
+        if fn is None:
+            def prog(datas, masks):
+                env = {r: (d, m) for r, d, m in zip(refs, datas, masks)}
+                v, mask = _eval_expr_env(expr, env)
+                return v.astype(jnp.bool_) & mask
+            while len(_PRED_JIT) >= _PRED_JIT_MAX:
+                _PRED_JIT.pop(next(iter(_PRED_JIT)))
+            fn = _PRED_JIT[key] = jax.jit(prog)
+    return fn
+
+
+def _fused_selection_mask(preds: Sequence[alg.Expr], frame: Frame) -> np.ndarray:
+    """keep-mask for a run of structured predicates, as ONE device program.
+
+    ANDing before filtering is exact: predicates are row-local, so a row
+    removed by an earlier selection contributes False to the conjunction
+    regardless of its later-predicate value."""
+    combined = preds[0]
+    for p in preds[1:]:
+        combined = alg.BinExpr("&", combined, p)
+    refs = tuple(sorted(combined.refs(), key=repr))
+    if not refs:
+        return _predicate_mask(frame, combined)
+    try:
+        cols = [frame.col(r) for r in refs]
+    except KeyError:
+        return _predicate_mask(frame, combined)
+    if any(c.domain.is_coded for c in cols):
+        # coded columns need host code-table translation → interpreted path
+        return _predicate_mask(frame, combined)
+    fn = _compiled_predicate(combined, refs)
+    keep = fn([c.data for c in cols], [c.valid_mask() for c in cols])
+    return np.asarray(keep)
+
+
+def _run_fused(pf: PartitionedFrame, stages: Sequence[alg.Stage]) -> PartitionedFrame:
+    """Execute a fused row-local chain: one sweep per row partition, values
+    staying on device across stages, one pool dispatch for the whole chain."""
+    pf1 = pf.repartition(col_parts=1)
+
+    def run_block(frame: Frame) -> Frame:
+        cur = frame
+        i = 0
+        while i < len(stages):
+            st = stages[i]
+            if st.op == "selection":
+                # coalesce a run of structured-Expr selections → one jit mask
+                preds = []
+                while (i < len(stages) and stages[i].op == "selection"
+                       and isinstance(stages[i].params["predicate"], alg.Expr)):
+                    preds.append(stages[i].params["predicate"])
+                    i += 1
+                if preds:
+                    cur = cur.filter_rows(_fused_selection_mask(preds, cur))
+                else:  # opaque Udf predicate
+                    cur = cur.filter_rows(_predicate_mask(cur, st.params["predicate"]))
+                    i += 1
+            elif st.op == "map":
+                cur = _apply_udf_block(cur, st.params["udf"])
+                i += 1
+            elif st.op == "projection":
+                cur = _project_block(cur, st.params["cols"])
+                i += 1
+            elif st.op == "rename":
+                cur = _rename_block(cur, dict(st.params["mapping"]))
+                i += 1
+            else:
+                raise ValueError(f"non-fusible stage {st.op}")
+        return cur
+
+    return pf1.map_blockwise(run_block)
+
+
+# =============================================================================
 # dispatcher
 # =============================================================================
 def run_node(node: alg.Node, inputs: list[PartitionedFrame]) -> PartitionedFrame:
     op = node.op
+    if op == "fused_pipeline":
+        return _run_fused(inputs[0], node.params["stages"])
     if op == "selection":
         return _selection(inputs[0], node.params["predicate"])
     if op == "projection":

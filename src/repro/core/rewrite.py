@@ -24,14 +24,21 @@ rules that *do* hold, plus dataframe-specific transpose eliminations:
 
 Rules apply bottom-up to a fixpoint.  Column-name inference threads through
 static-schema operators so R6/R7 only fire when provably safe.
+
+After rule rewriting, a separate **fusion pass** (``fuse_pipelines``) collapses
+maximal chains of row-local operators (elementwise MAP, SELECTION, PROJECTION,
+RENAME) into single ``FusedPipeline`` nodes, which the physical layer executes
+as one per-partition program — the paper's §5 pipelining argument made
+explicit in the plan language.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Sequence
 
 from . import algebra as alg
 
-__all__ = ["optimize", "infer_columns", "rebuild"]
+__all__ = ["optimize", "infer_columns", "rebuild", "fuse_pipelines", "FusionStats"]
 
 
 # -----------------------------------------------------------------------------
@@ -185,6 +192,11 @@ def _(n, ch):
 @_ctor("column_filter")
 def _(n, ch):
     return alg.ColumnFilter(ch[0], n.params["predicate"])
+
+
+@_ctor("fused_pipeline")
+def _(n, ch):
+    return alg.FusedPipeline(ch[0], n.params["stages"])
 
 
 def rebuild(node: alg.Node, children: Sequence[alg.Node]) -> alg.Node:
@@ -372,3 +384,66 @@ def optimize(node: alg.Node, source_columns: Callable[[str], list | None] | None
         cur = rewrite_tree(cur)
         passes += 1
     return cur
+
+
+# -----------------------------------------------------------------------------
+# fusion pass (paper §5 pipelining; runs after rule rewriting, before physical)
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass
+class FusionStats:
+    """What the fusion pass did to one plan — surfaced through ``ExecStats``
+    so fused-vs-unfused benchmark wins are attributable."""
+
+    groups: int = 0       # FusedPipeline nodes created
+    fused_ops: int = 0    # original operator nodes absorbed into groups
+
+
+def fuse_pipelines(node: alg.Node) -> tuple[alg.Node, FusionStats]:
+    """Collapse maximal chains of row-local operators into ``FusedPipeline``
+    nodes (fixpoint by construction: one top-down sweep finds every maximal
+    chain, and fused nodes are themselves not fusible into longer chains).
+
+    Only chains of **two or more** operators fuse — a lone SELECTION keeps its
+    own node (and cache identity), so single-statement plans are unchanged and
+    sub-plan reuse across queries still hits the cache.  A fused group gets
+    one cache entry keyed on the whole chain instead of one per node.
+
+    A sub-plan referenced by more than one parent **within** the plan is a
+    fusion barrier: absorbing it into each branch's chain would re-execute the
+    shared work per branch, where the per-node path evaluates it once and
+    serves the other branches from the cache.
+    """
+    stats = FusionStats()
+
+    # structural reference counts: how many parent edges point at each
+    # (structurally-identified) sub-plan — shared nodes must keep their own
+    # node/cache identity, so chains may not absorb them mid-run
+    refs: dict[alg.Node, int] = {}
+    for n in node.walk():
+        for c in n.children:
+            refs[c] = refs.get(c, 0) + 1
+
+    memo: dict[alg.Node, alg.Node] = {}
+
+    def visit(n: alg.Node) -> alg.Node:
+        hit = memo.get(n)
+        if hit is not None:
+            return hit
+        out = None
+        if alg.fusible(n):
+            chain = [n]                      # top-down collection
+            tail = n.children[0]
+            while alg.fusible(tail) and refs.get(tail, 0) <= 1:
+                chain.append(tail)
+                tail = tail.children[0]
+            if len(chain) >= 2:
+                stats.groups += 1
+                stats.fused_ops += len(chain)
+                stages = tuple(alg.Stage(m.op, m.params) for m in reversed(chain))
+                out = alg.FusedPipeline(visit(tail), stages)
+        if out is None:
+            out = rebuild(n, [visit(c) for c in n.children])
+        memo[n] = out
+        return out
+
+    return visit(node), stats

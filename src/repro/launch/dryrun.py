@@ -29,7 +29,8 @@ from ..train import optimizer as opt_lib  # noqa: E402
 from ..train import schedule as sched_lib  # noqa: E402
 from ..train.trainer import make_train_step  # noqa: E402
 from . import sharding as shlib  # noqa: E402
-from .hlo_analysis import Roofline, analyze_hlo, collective_bytes  # noqa: E402
+from .hlo_analysis import (Roofline, analyze_hlo, collective_bytes,  # noqa: E402
+                           xla_cost_analysis)
 from .mesh import dp_axes, make_production_mesh  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -165,9 +166,7 @@ def _decode_artifacts(cfg, shape, mesh):
 # =============================================================================
 def _cost_dict(compiled) -> dict:
     try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
+        ca = xla_cost_analysis(compiled)   # list/dict normalized across jax versions
         return {k: float(v) for k, v in ca.items()
                 if isinstance(v, (int, float)) and np.isfinite(float(v))}
     except Exception as e:

@@ -275,6 +275,19 @@ def analyze_hlo(hlo_text: str, default_trip: int = 1) -> HloStats:
     return stats
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a dict (or a per-device list of dicts); newer jax
+    returns a **list** with one entry for the executable.  Always hand back a
+    plain dict (empty when XLA reports nothing) so callers can index by key.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 # Backwards-compatible shim for collective-only callers.
 @dataclasses.dataclass
 class CollectiveStats:

@@ -1,0 +1,283 @@
+"""Fused blockwise pipelines (paper §5 "Pipelining") + zero-copy repartition.
+
+Invariants:
+  * fused execution of a row-local chain is **byte-identical** to the unfused
+    per-node path, over 1×1 and multi-block grids;
+  * the fusion pass only forms groups of ≥ 2 operators and never crosses a
+    blocking operator (groupby/sort/...);
+  * row-only / col-only repartitioning performs no full-frame concat
+    (``to_frame`` is never called) and preserves row order and labels;
+  * int⊕int expression arithmetic keeps integer dtypes (no float32 round-trip
+    corrupting values above 2²⁴).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import algebra as alg
+from repro.core import rewrite
+from repro.core.executor import Executor
+from repro.core.frame import Column, Frame
+from repro.core.dtypes import Domain
+from repro.core.partition import PartitionedFrame
+from repro.core.physical import eval_expr
+
+
+def _mk_frame(n=97):
+    rng = np.random.default_rng(7)
+    return Frame.from_pydict({
+        "k": [("a", "b", "c")[i % 3] for i in range(n)],
+        "v": rng.integers(-50, 50, n).tolist(),
+        "f": rng.standard_normal(n).astype(np.float32).tolist(),
+        "g": rng.standard_normal(n).astype(np.float32).tolist(),
+    }, row_labels=[f"r{i}" for i in range(n)])
+
+
+def _scale_udf():
+    def fn(cols, frame):
+        out = dict(cols)
+        c = cols["f"]
+        out["f"] = Column(c.data * 2.0 + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+    return alg.Udf(name="scale_f", fn=fn, deps=frozenset(["f"]), elementwise=True)
+
+
+def _chain(src):
+    m = alg.Map(src, _scale_udf())
+    s = alg.Selection(m, alg.col("v") > alg.lit(0))
+    p = alg.Projection(s, ("k", "v", "f"))
+    return alg.Rename(p, {"f": "F"})
+
+
+@pytest.mark.parametrize("row_parts,col_parts", [(1, 1), (3, 1), (4, 2), (1, 2)])
+def test_fused_chain_matches_per_node_path(row_parts, col_parts):
+    f = _mk_frame()
+    pf = PartitionedFrame.from_frame(f, row_parts=row_parts, col_parts=col_parts)
+    store = {"f0": pf}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    plan = _chain(src)
+
+    fused_ex = Executor(store, optimize=True)
+    plain_ex = Executor(store, optimize=False)
+    a = fused_ex.evaluate(plan).to_frame()
+    b = plain_ex.evaluate(plan).to_frame()
+
+    assert fused_ex.stats.fused_groups >= 1, "chain never fused"
+    assert a.row_labels.to_list() == b.row_labels.to_list()
+    assert a.col_labels.to_list() == b.col_labels.to_list() == ["k", "v", "F"]
+    ad, bd = a.to_pydict(), b.to_pydict()
+    assert ad["k"] == bd["k"]
+    assert ad["v"] == bd["v"]
+    # float column must be byte-identical: same op order on device either way
+    np.testing.assert_array_equal(np.asarray(ad["F"], dtype=np.float32),
+                                  np.asarray(bd["F"], dtype=np.float32))
+
+
+def test_fused_chain_with_udf_predicate_and_multiple_selections():
+    f = _mk_frame(64)
+    pf = PartitionedFrame.from_frame(f, row_parts=3)
+    store = {"f0": pf}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    pred = alg.Udf(name="even_v", elementwise=True, deps=frozenset(["v"]),
+                   fn=lambda cols, frame: np.asarray(cols["v"].data) % 2 == 0)
+    plan = alg.Selection(alg.Selection(alg.Map(src, _scale_udf()), pred),
+                         alg.col("f") > alg.lit(0.0))
+
+    fused_ex = Executor(store, optimize=False)  # keep both selections distinct
+    fused_plan, fs = rewrite.fuse_pipelines(plan)
+    assert fused_plan.op == "fused_pipeline" and fs.fused_ops == 3
+    a = fused_ex._eval(fused_plan).to_frame().to_pydict()
+    b = fused_ex._eval(plan).to_frame().to_pydict()
+    assert list(a.keys()) == list(b.keys())
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_fusion_pass_structure():
+    src = alg.Source("f0", nrows=10, ncols=3)
+    sel = alg.Selection(src, alg.col("v") > alg.lit(0))
+    # single row-local op: NOT fused (keeps its own cache identity)
+    out, fs = rewrite.fuse_pipelines(sel)
+    assert out is sel or out == sel
+    assert fs.groups == 0
+
+    # blocking operator splits chains
+    g = alg.GroupBy(alg.Rename(sel, {"v": "w"}), ("k",), [("w", "sum", "ws")])
+    top = alg.Projection(alg.Selection(g, alg.col("ws") > alg.lit(1)), ("k",))
+    out, fs = rewrite.fuse_pipelines(top)
+    assert fs.groups == 2 and fs.fused_ops == 4
+    assert out.op == "fused_pipeline"
+    assert out.children[0].op == "groupby"
+    assert out.children[0].children[0].op == "fused_pipeline"
+    # stages run bottom-up
+    assert [s.op for s in out.stages] == ["selection", "projection"]
+
+    # non-elementwise maps never fuse
+    whole = alg.Udf(name="whole", fn=lambda c, f: f, elementwise=False)
+    plan = alg.Selection(alg.Map(src, whole), alg.col("v") > alg.lit(0))
+    _, fs = rewrite.fuse_pipelines(plan)
+    assert fs.groups == 0
+
+    # limit never joins a fused group
+    plan = alg.Limit(alg.Selection(alg.Rename(src, {"a": "b"}),
+                                   alg.col("v") > alg.lit(0)), 5)
+    out, fs = rewrite.fuse_pipelines(plan)
+    assert out.op == "limit" and fs.groups == 1 and fs.fused_ops == 2
+
+
+def test_shared_subplan_is_a_fusion_barrier():
+    """A sub-plan referenced by two branches keeps its own node identity so
+    the per-node cache still dedupes it (fusing it into both chains would
+    re-execute the shared work per branch)."""
+    src = alg.Source("f0", nrows=50, ncols=2)
+    sel = alg.Selection(src, alg.col("v") > alg.lit(4))
+    b1 = alg.Rename(alg.Projection(sel, ("v",)), {"v": "a"})
+    b2 = alg.Rename(alg.Projection(sel, ("w",)), {"w": "b"})
+    plan = alg.Union(b1, b2)
+
+    fused, fs = rewrite.fuse_pipelines(plan)
+    assert fs.groups == 2 and fs.fused_ops == 4  # shared selection not absorbed
+    assert sum(1 for n in fused.walk() if n.op == "selection") == 1
+    for g in (n for n in fused.walk() if n.op == "fused_pipeline"):
+        assert g.children[0].op == "selection"
+
+    f = Frame.from_pydict({"v": list(range(50)), "w": [i * 10 for i in range(50)]})
+    store = {"f0": PartitionedFrame.from_frame(f, row_parts=3)}
+    ex = Executor(store, optimize=True)
+    out = ex.evaluate(plan).to_frame().to_pydict()
+    assert ex.stats.cache_hits >= 1  # second branch served from the cache
+    assert out == Executor(store, optimize=False).evaluate(plan).to_frame().to_pydict()
+
+
+def test_fused_group_has_single_cache_entry():
+    f = _mk_frame(60)
+    pf = PartitionedFrame.from_frame(f, row_parts=2)
+    store = {"f0": pf}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    plan = _chain(src)
+    ex = Executor(store, optimize=True)
+    ex.evaluate(plan)
+    # source + fused group = 2 entries; the per-node path would cache 5
+    non_source = [k for k in ex.cache if k[0] != "source"]
+    assert len(non_source) == 1
+    assert non_source[0][0] == "fused_pipeline"
+    # second evaluation is a pure cache hit on the fused key
+    before = ex.stats.cache_hits
+    ex.evaluate(plan)
+    assert ex.stats.cache_hits == before + 1
+
+
+def test_fused_prefix_head():
+    f = _mk_frame(90)
+    pf = PartitionedFrame.from_frame(f, row_parts=3)
+    store = {"f0": pf}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    plan = _chain(src)
+    ex = Executor(store, optimize=True)
+    got = ex.evaluate_prefix(plan, 4).to_frame().head(4).to_pydict()
+    want_full = Executor(store, optimize=False).evaluate(plan).to_frame().head(4).to_pydict()
+    assert got["v"] == want_full["v"]
+    assert ex.stats.prefix_evals == 1
+
+
+# -----------------------------------------------------------------------------
+# zero-copy repartition
+# -----------------------------------------------------------------------------
+def _count_to_frame(monkeypatch):
+    calls = {"n": 0}
+    orig = PartitionedFrame.to_frame
+
+    def counting(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(PartitionedFrame, "to_frame", counting)
+    return calls
+
+
+@pytest.mark.parametrize("src_parts,dst_parts", [(4, 2), (2, 4), (3, 5), (5, 1)])
+def test_row_repartition_no_full_concat(monkeypatch, src_parts, dst_parts):
+    f = _mk_frame(83)
+    pf = PartitionedFrame.from_frame(f, row_parts=src_parts)
+    calls = _count_to_frame(monkeypatch)
+    out = pf.repartition(row_parts=dst_parts)
+    assert calls["n"] == 0, "row-only repartition must not concat the full frame"
+    assert out.row_parts == dst_parts
+    g = out.to_frame()
+    assert g.to_pydict() == f.to_pydict()
+    assert g.row_labels.to_list() == f.row_labels.to_list()
+
+
+def test_col_repartition_is_metadata_only(monkeypatch):
+    f = _mk_frame(40)
+    pf = PartitionedFrame.from_frame(f, row_parts=2, col_parts=2)
+    calls = _count_to_frame(monkeypatch)
+    out = pf.repartition(col_parts=1)
+    assert calls["n"] == 0
+    # column regroup re-uses the very Column objects: zero-copy
+    assert out.parts[0][0].columns[0] is pf.parts[0][0].columns[0]
+    assert out.to_frame().to_pydict() == f.to_pydict()
+
+
+def test_row_repartition_identity_blocks_pass_through(monkeypatch):
+    f = _mk_frame(60)
+    base = PartitionedFrame.from_frame(f, row_parts=1)
+    # hand-build aligned stripes: [20, 10, 10, 20] → [30, 30]
+    idx = np.cumsum([20, 10, 10, 20])[:-1]
+    blocks = []
+    lo = 0
+    for hi in list(idx) + [60]:
+        blocks.append([base.parts[0][0].take_rows(np.arange(lo, hi))])
+        lo = hi
+    pf = PartitionedFrame(blocks)
+    calls = _count_to_frame(monkeypatch)
+    out = pf.repartition(row_parts=2)
+    assert calls["n"] == 0
+    assert out.row_sizes == [30, 30]
+    assert out.to_frame().to_pydict() == f.to_pydict()
+    # and a boundary-aligned regroup to the identical layout is `self`
+    assert pf.repartition(row_parts=4) is pf
+
+
+# -----------------------------------------------------------------------------
+# integer expression arithmetic keeps integer dtypes
+# -----------------------------------------------------------------------------
+def test_int_arithmetic_preserves_precision_above_2_24():
+    big = 20_000_001          # > 2**24: float32 cannot represent big+1 exactly
+    f = Frame.from_pydict({"v": [big, -7, 5]})
+    for expr, want in [
+        (alg.col("v") + alg.lit(1), [big + 1, -6, 6]),
+        (alg.col("v") - alg.lit(2), [big - 2, -9, 3]),
+        (alg.col("v") * alg.lit(2), [2 * big, -14, 10]),
+        (alg.col("v") % alg.lit(10), [1, 3, 5]),
+        (alg.col("v") // alg.lit(10), [2_000_000, -1, 0]),
+    ]:
+        v, m = eval_expr(expr, f)
+        assert jnp.issubdtype(v.dtype, jnp.integer), expr
+        assert np.asarray(v).tolist() == want
+    # comparisons on big ints don't collapse through float32 either
+    v, _ = eval_expr(alg.col("v") == alg.lit(big + 1), f)
+    assert not bool(np.asarray(v)[0])
+    # true division still promotes to float
+    v, _ = eval_expr(alg.col("v") / alg.lit(2), f)
+    assert jnp.issubdtype(v.dtype, jnp.floating)
+
+
+def test_int_and_float_literals_do_not_collide_in_caches():
+    """1 == 1.0 in Python, but the int path is exact where float32 rounds:
+    plans differing only in literal *type* must have distinct cache keys."""
+    assert alg.lit(1).key() != alg.lit(1.0).key()
+    assert alg.lit(1).key() != alg.lit(True).key()
+
+    big = 2 ** 24
+    f = Frame.from_pydict({"v": [big]})
+    store = {"f0": PartitionedFrame.from_frame(f)}
+    src = alg.Source("f0", nrows=1, ncols=1)
+    pa = alg.Selection(src, (alg.col("v") + alg.lit(1.0)) == alg.lit(float(big)))
+    pb = alg.Selection(src, (alg.col("v") + alg.lit(1)) == alg.lit(big))
+    assert pa.cache_key() != pb.cache_key()
+    ex = Executor(store, optimize=True)
+    got_a = ex.evaluate(pa).nrows   # float32: 2**24 + 1 rounds back to 2**24
+    got_b = ex.evaluate(pb).nrows   # exact int: no match
+    assert (got_a, got_b) == (1, 0)

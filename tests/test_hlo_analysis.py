@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import Roofline, analyze_hlo
+from repro.launch.hlo_analysis import Roofline, analyze_hlo, xla_cost_analysis
 
 
 def test_matmul_flops_match_cost_analysis():
@@ -16,7 +16,7 @@ def test_matmul_flops_match_cost_analysis():
                 jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
     s = analyze_hlo(c.as_text())
     assert s.flops == 2 * m * k * n
-    assert s.flops == c.cost_analysis()["flops"]
+    assert s.flops == xla_cost_analysis(c)["flops"]
 
 
 def test_scan_loop_trip_multiplier():
@@ -31,7 +31,7 @@ def test_scan_loop_trip_multiplier():
     assert s.flops == 12 * 2 * 128 ** 3
     assert s.unresolved_loops == 0
     # XLA's own number counts the body once — the very bug we correct
-    assert c.cost_analysis()["flops"] < s.flops
+    assert xla_cost_analysis(c)["flops"] < s.flops
 
 
 def test_nested_loops_multiply():

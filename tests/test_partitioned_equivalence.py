@@ -4,7 +4,9 @@ Property-based via hypothesis: random frames × random operator pipelines ×
 random grid shapes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import algebra as alg
 from repro.core.frame import Frame
