@@ -13,12 +13,12 @@ from repro.data.synthetic import taxi_like_frame
 from ._util import Reporter
 
 
-def run(rep: Reporter) -> None:
+def run(rep: Reporter, smoke: bool = False) -> None:
     from repro.core.approx import progressive_aggregate
 
-    n = 1_000_000
+    n = 20_000 if smoke else 1_000_000
     frame = taxi_like_frame(n, seed=4)
-    pf = PartitionedFrame.from_frame(frame, row_parts=32)
+    pf = PartitionedFrame.from_frame(frame, row_parts=8 if smoke else 32)
 
     t0 = time.perf_counter()
     exact = None

@@ -20,6 +20,7 @@ from repro.data.synthetic import numeric_matrix_frame, taxi_like_frame
 from ._util import Reporter, time_us
 
 _SCALES = (100_000, 1_000_000)
+_SMOKE_SCALES = (5_000,)
 
 
 def _exec(pf: PartitionedFrame, node_fn) -> PartitionedFrame:
@@ -52,9 +53,9 @@ def _fillna_udf():
     return alg.Udf.wrap(fn, name="bench_fillna", elementwise=True)
 
 
-def run(rep: Reporter) -> None:
+def run(rep: Reporter, smoke: bool = False) -> None:
     cores = os.cpu_count() or 4
-    for n in _SCALES:
+    for n in (_SMOKE_SCALES if smoke else _SCALES):
         frame = taxi_like_frame(n, seed=0)
         single = PartitionedFrame.from_frame(frame, row_parts=1)
         multi = PartitionedFrame.from_frame(frame, row_parts=cores)

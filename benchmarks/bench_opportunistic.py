@@ -17,17 +17,17 @@ _N = 600_000
 _THINK_S = 0.35
 
 
-def _workflow(mode: str) -> tuple[float, float]:
+def _workflow(mode: str, n: int = _N, think_s: float = _THINK_S) -> tuple[float, float]:
     """Returns (statement_latency_s, inspect_latency_s) summed over steps."""
     s = set_session(Session(mode=mode, default_row_parts=8))
     try:
-        data = {"v": list(range(_N)), "w": [float(i % 97) for i in range(_N)]}
+        data = {"v": list(range(n)), "w": [float(i % 97) for i in range(n)]}
         t0 = time.perf_counter()
         df = DataFrame(data)
         q = df[df["v"] % 3 == 0]
         q2 = q.cumsum(cols=["w"])
         stmt_s = time.perf_counter() - t0
-        time.sleep(_THINK_S)          # the user thinks / types
+        time.sleep(think_s)           # the user thinks / types
         t1 = time.perf_counter()
         q2.head(5)                    # then inspects
         inspect_s = time.perf_counter() - t1
@@ -36,9 +36,11 @@ def _workflow(mode: str) -> tuple[float, float]:
         s.close()
 
 
-def run(rep: Reporter) -> None:
+def run(rep: Reporter, smoke: bool = False) -> None:
+    n = 20_000 if smoke else _N
+    think = 0.05 if smoke else _THINK_S
     for mode in (EvalMode.EAGER, EvalMode.LAZY, EvalMode.OPPORTUNISTIC):
-        stmt_s, inspect_s = _workflow(mode)
+        stmt_s, inspect_s = _workflow(mode, n, think)
         rep.add(f"opportunistic/{mode}/statement", stmt_s * 1e6,
                 f"inspect_us={inspect_s * 1e6:.0f}")
         rep.add(f"opportunistic/{mode}/inspect", inspect_s * 1e6,
@@ -47,7 +49,7 @@ def run(rep: Reporter) -> None:
     # prefix computation: head(5) on a selective plan, lazy session
     s = set_session(Session(mode=EvalMode.LAZY, default_row_parts=16))
     try:
-        df = DataFrame({"v": list(range(_N))})
+        df = DataFrame({"v": list(range(n))})
         q = df[df["v"] > 100]
         t0 = time.perf_counter()
         q.head(5)

@@ -16,12 +16,12 @@ _N = 400_000
 _Q = 5
 
 
-def _session_run(optimize_reuse: bool) -> float:
+def _session_run(optimize_reuse: bool, n: int = _N) -> float:
     s = set_session(Session(mode=EvalMode.LAZY, default_row_parts=8,
                             cache_budget_bytes=(1 << 30) if optimize_reuse else 0))
     try:
-        df = DataFrame({"k": [i % 50 for i in range(_N)],
-                        "v": [float(i % 997) for i in range(_N)]})
+        df = DataFrame({"k": [i % 50 for i in range(n)],
+                        "v": [float(i % 997) for i in range(n)]})
         base = df[df["v"] > 3.0].sort_values("v")   # shared sub-expression
         t0 = time.perf_counter()
         for q in range(_Q):
@@ -31,9 +31,10 @@ def _session_run(optimize_reuse: bool) -> float:
         s.close()
 
 
-def run(rep: Reporter) -> None:
-    cold = _session_run(optimize_reuse=False)
-    warm = _session_run(optimize_reuse=True)
+def run(rep: Reporter, smoke: bool = False) -> None:
+    n = 20_000 if smoke else _N
+    cold = _session_run(optimize_reuse=False, n=n)
+    warm = _session_run(optimize_reuse=True, n=n)
     rep.add("reuse/session_no_cache", cold * 1e6, f"queries={_Q}")
     rep.add("reuse/session_with_cache", warm * 1e6,
             f"speedup={cold / warm:.2f}x")

@@ -24,8 +24,8 @@ def _exec(pf, node):
     return ev(node)
 
 
-def run(rep: Reporter) -> None:
-    rows, cols = 50_000, 64
+def run(rep: Reporter, smoke: bool = False) -> None:
+    rows, cols = (2_000, 16) if smoke else (50_000, 64)
     frame = numeric_matrix_frame(rows, cols, seed=1)
     pf = PartitionedFrame.from_frame(frame, row_parts=8)
     src = alg.Source("bench", rows, cols)

@@ -50,7 +50,7 @@ def markdown_table(cells: list[dict]) -> str:
     return "\n".join(rows)
 
 
-def run(rep: Reporter) -> None:
+def run(rep: Reporter, smoke: bool = False) -> None:
     cells = load_cells("single")
     if not cells:
         rep.add("roofline/no_dryrun_artifacts", 0.0,
@@ -65,6 +65,8 @@ def run(rep: Reporter) -> None:
         rep.add(name, rl["step_s"] * 1e6,
                 f"bottleneck={rl['bottleneck']} useful={rl['useful_flops_fraction']:.3f} "
                 f"frac={rl['roofline_fraction']:.4f}")
+    if smoke:
+        return   # don't overwrite the recorded table from a sanity run
     out = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
     with open(out, "w") as f:
         f.write(markdown_table(cells))

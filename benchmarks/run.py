@@ -9,8 +9,12 @@
   roofline      deliverable (g): table from the dry-run artifacts
   fusion        paper §5: fused row-local pipelines vs per-node evaluation
                 (also writes BENCH_fusion.json)
+  blocking_fusion  barrier fusion through GROUPBY/SORT/JOIN/WINDOW
+                (also writes BENCH_blocking_fusion.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
+``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
+the CI gate (scripts/check.sh) uses it so each bench at least executes.
 """
 from __future__ import annotations
 
@@ -33,11 +37,13 @@ from ._util import Reporter
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny row counts, no JSON overwrite (CI sanity mode)")
     args, _ = ap.parse_known_args()
 
-    from . import (bench_approx, bench_fig6, bench_fusion,
-                   bench_opportunistic, bench_reuse, bench_rewrite,
-                   bench_roofline)
+    from . import (bench_approx, bench_blocking_fusion, bench_fig6,
+                   bench_fusion, bench_opportunistic, bench_reuse,
+                   bench_rewrite, bench_roofline)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -46,18 +52,23 @@ def main() -> None:
         "approx": bench_approx.run,
         "roofline": bench_roofline.run,
         "fusion": bench_fusion.run,
+        "blocking_fusion": bench_blocking_fusion.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}
 
     rep = Reporter()
     print("name,us_per_call,derived")
+    failures = []
     for name, fn in picked.items():
         try:
-            fn(rep)
+            fn(rep, smoke=args.smoke)
         except Exception as e:  # keep the harness going; record the failure
             rep.add(f"{name}/ERROR", 0.0, repr(e)[:120])
+            failures.append(name)
     sys.stdout.flush()
+    if args.smoke and failures:   # the CI gate must notice a broken bench
+        raise SystemExit(f"smoke failures: {', '.join(failures)}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 gate: full test suite + fused-pipeline benchmark smoke run.
+# Tier-1 gate: full test suite + benchmark smoke run (every bench suite
+# executes at tiny sizes; no JSON/artifact overwrite).
 # Usage: scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -7,6 +8,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
-# fused-vs-unfused sanity at small size (also refreshes BENCH_fusion.json;
-# full-size numbers: python -m benchmarks.run --only fusion)
-python -m benchmarks.bench_fusion --smoke
+# full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
+python -m benchmarks.run --smoke

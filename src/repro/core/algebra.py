@@ -33,7 +33,9 @@ __all__ = [
     "Join", "DropDuplicates", "GroupBy", "Sort", "Rename", "Window",
     "Transpose", "Map", "ToLabels", "FromLabels", "Limit",
     "ColumnSort", "ColumnFilter", "Stage", "FusedPipeline",
+    "FusedGroupBy", "FusedSort", "FusedJoin", "FusedWindow",
     "AGG_FUNCS", "WINDOW_FUNCS", "prefix_safe", "fusible", "FUSIBLE_OPS",
+    "BARRIER_FUSED_OPS",
 ]
 
 AGG_FUNCS = ("sum", "count", "mean", "min", "max", "any", "all", "var", "std")
@@ -527,6 +529,108 @@ class FusedPipeline(Node):
                 + f"]<-[{self.children[0].op}]")
 
 
+# ---- barrier-fused nodes (fusion *through* blocking operators) ---------------
+# A blocking operator (GROUPBY/SORT/JOIN/WINDOW) is a materialization boundary,
+# but the row-local work adjacent to it is not: the producer chain feeding a
+# GROUPBY is per-block work that can run inside the same per-partition program
+# as the partial aggregation, and the consumer chain after a SORT/JOIN can
+# filter/project the gather *index* before the payload gather.  These nodes are
+# the rewrite targets of ``rewrite.fuse_pipelines``'s barrier pass.
+class FusedGroupBy(Node):
+    """GROUPBY with its row-local producer chain absorbed: ``stages`` run
+    bottom-up on each row block inside the same per-partition program that
+    computes the ``segment_reduce`` partial aggregates — one dispatch per
+    partition for the whole pre-shuffle stage."""
+
+    op = "fused_groupby"
+    order = "new"
+    touches = "both"
+
+    def __init__(self, child: Node, stages: Sequence[Stage],
+                 keys: Sequence[Any], aggs: Sequence[tuple]):
+        super().__init__([child], stages=tuple(stages), keys=tuple(keys),
+                         aggs=tuple(tuple(a) for a in aggs))
+
+    @property
+    def stages(self) -> tuple:
+        return self.params["stages"]
+
+
+class FusedSort(Node):
+    """SORT with its row-local consumer chain absorbed: leading structured
+    selections filter the permutation *index* before the payload gather (the
+    materialized frame is built once, post-filter), a leading projection prunes
+    the gathered columns, and any remaining stages run on the gathered blocks."""
+
+    op = "fused_sort"
+    order = "new"
+    touches = "both"
+
+    def __init__(self, child: Node, by: Sequence[Any], ascending: bool,
+                 stages: Sequence[Stage]):
+        super().__init__([child], by=tuple(by), ascending=ascending,
+                         stages=tuple(stages))
+
+    @property
+    def stages(self) -> tuple:
+        return self.params["stages"]
+
+
+class FusedJoin(Node):
+    """JOIN with its row-local consumer chain absorbed: leading structured
+    selections are evaluated on a gather of only the predicate's columns and
+    filter the (lidx, ridx) match indices before the payload gather."""
+
+    op = "fused_join"
+    touches = "both"
+
+    def __init__(self, left: Node, right: Node, on, how, left_on, right_on,
+                 stages: Sequence[Stage]):
+        super().__init__(
+            [left, right],
+            on=tuple(on) if on is not None else None,
+            left_on=tuple(left_on) if left_on is not None else None,
+            right_on=tuple(right_on) if right_on is not None else None,
+            how=how,
+            stages=tuple(stages),
+        )
+
+    @property
+    def stages(self) -> tuple:
+        return self.params["stages"]
+
+
+class FusedWindow(Node):
+    """WINDOW with adjacent row-local chains absorbed.  ``pre_stages`` run in
+    the same per-block program as the local scan; ``post_stages`` run in the
+    same per-block program as the carry application — carry composition at
+    partition seams is preserved because the carry combine happens between the
+    two, exactly where the unfused path placed it."""
+
+    op = "fused_window"
+    touches = "both"
+
+    def __init__(self, child: Node, func: str, cols: Sequence[Any] | None,
+                 size: int | None, periods: int,
+                 pre_stages: Sequence[Stage], post_stages: Sequence[Stage]):
+        assert func in WINDOW_FUNCS, func
+        super().__init__([child], func=func, cols=tuple(cols) if cols else None,
+                         size=size, periods=periods,
+                         pre_stages=tuple(pre_stages),
+                         post_stages=tuple(post_stages))
+
+    @property
+    def pre_stages(self) -> tuple:
+        return self.params["pre_stages"]
+
+    @property
+    def post_stages(self) -> tuple:
+        return self.params["post_stages"]
+
+
+BARRIER_FUSED_OPS = ("fused_groupby", "fused_sort", "fused_join", "fused_window")
+
+
 # Row-local, order-preserving unary operators whose physical implementation is
 # a pure per-row-block transform: legal to fuse into one per-partition program.
 # LIMIT is deliberately excluded (its k applies to the *global* row order, not
@@ -549,13 +653,16 @@ def fusible(node: Node) -> bool:
 # =============================================================================
 _PREFIX_SAFE = {"selection", "projection", "map", "rename", "union", "limit",
                 "from_labels", "to_labels", "source", "window",
-                "fused_pipeline"}
+                "fused_pipeline", "fused_window"}
 # fused_pipeline: fusible ops are all row-local/order-preserving, so a fused
 # group inherits prefix-safety by construction.
 # window is prefix-safe for forward windows (cumsum/…): row i depends only on
-# rows ≤ i.  GROUPBY/SORT/JOIN/TRANSPOSE/DIFFERENCE/DROP-DUPLICATES are
-# blocking (paper: "it is hard to produce the first k tuples of a GROUP BY or
-# SORT without examining the entire data first").
+# rows ≤ i — and fused_window adds only row-local pre/post stages, so it
+# inherits the same property (barrier-fusing a window must not disable §6.1.2
+# prefix evaluation).  fused_groupby/fused_sort/fused_join stay blocking like
+# the operators they absorb.  GROUPBY/SORT/JOIN/TRANSPOSE/DIFFERENCE/
+# DROP-DUPLICATES are blocking (paper: "it is hard to produce the first k
+# tuples of a GROUP BY or SORT without examining the entire data first").
 
 
 def prefix_safe(node: Node) -> bool:

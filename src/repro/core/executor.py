@@ -56,14 +56,47 @@ class CacheEntry:
 
 @dataclass
 class ExecStats:
+    """Counter semantics (one source of truth — mirrors ``rewrite.FusionStats``,
+    asserted in tests and benches):
+
+      * ``fused_groups``          — FusedPipeline nodes in final plans;
+      * ``barrier_fused_groups``  — barrier-fused nodes (FusedGroupBy /
+                                    FusedSort / FusedJoin / FusedWindow);
+      * ``producer_stage_ops``    — operator nodes absorbed as producer stages
+                                    of a barrier node (GROUPBY pre-aggregation
+                                    sweep, WINDOW pre-stages);
+      * ``consumer_stage_ops``    — operator nodes absorbed as consumer stages
+                                    (SORT/JOIN post-gather chain, WINDOW
+                                    post-stages);
+      * ``fused_stage_ops``       — operator nodes absorbed into ANY fused
+                                    construct.  Invariant::
+
+                                      fused_stage_ops ==
+                                          (ops in FusedPipeline groups)
+                                          + producer_stage_ops
+                                          + consumer_stage_ops
+
+      * ``gather_rows``           — payload rows gathered by SORT/JOIN result
+                                    materialization (fused-consumer paths
+                                    gather strictly fewer rows than unfused
+                                    ones under selective chains).
+
+    Each distinct plan is counted once — re-evaluating a cached statement is
+    not new fusion work.
+    """
+
     evaluated_nodes: int = 0
     cache_hits: int = 0
     inflight_joins: int = 0
     prefix_evals: int = 0
     rewrites_applied: int = 0
     background_tasks: int = 0
-    fused_groups: int = 0       # FusedPipeline nodes formed across plans
-    fused_stage_ops: int = 0    # operator nodes absorbed into fused groups
+    fused_groups: int = 0
+    fused_stage_ops: int = 0
+    barrier_fused_groups: int = 0
+    producer_stage_ops: int = 0
+    consumer_stage_ops: int = 0
+    gather_rows: int = 0
 
 
 class Executor:
@@ -81,9 +114,25 @@ class Executor:
         # bookkeeping must not grow with the life of a session)
         self._fused_seen: dict[tuple, None] = {}
         self._fused_seen_max = 4096
-        # optimized-plan key → fused plan: re-evaluating a cached statement
-        # must not pay the fusion walk again (bounded FIFO like the above)
-        self._fuse_memo: dict[tuple, alg.Node] = {}
+        # session statement history (MQO-aware fusion boundaries, §6.2.1):
+        # candidate barrier key (a statement's optimized or prepared form) →
+        # the statement's prepared key.  A candidate only acts as a fusion
+        # barrier while its prepared result is actually materialized (cache)
+        # or in flight — splitting a fused group buys nothing when there is
+        # no shared result to reuse, and the fluent API records every
+        # intermediate expression as a statement.
+        self._history: dict[tuple, tuple] = {}
+        self._history_max = 2048
+        # optimized-plan key → (active history snapshot, fused plan): re-
+        # evaluating a cached statement must not pay the fusion walk again
+        # (bounded FIFO); the snapshot guards against stale fusion when a
+        # history statement's materialization status changes
+        self._fuse_memo: dict[tuple, tuple[frozenset, alg.Node]] = {}
+        # raw-plan key → optimized plan: the fluent API prepares AND records
+        # every statement, so the fixpoint rewrite walk must not run twice
+        # per plan (bounded FIFO; sources are append-only so schemas are
+        # stable).  Also keeps stats.rewrites_applied at once per plan.
+        self._opt_memo: dict[tuple, alg.Node] = {}
         self._bg = _fut.ThreadPoolExecutor(max_workers=background_workers,
                                            thread_name_prefix="repro-bg")
 
@@ -100,37 +149,72 @@ class Executor:
     def optimized(self, node: alg.Node) -> alg.Node:
         if not self.optimize:
             return node
+        key = node.cache_key()
+        with self._lock:
+            hit = self._opt_memo.get(key)
+        if hit is not None:
+            return hit
         out = rewrite.optimize(node, self._source_columns)
         if out is not node:
             self.stats.rewrites_applied += 1
+        with self._lock:
+            while len(self._opt_memo) >= self._fused_seen_max:
+                self._opt_memo.pop(next(iter(self._opt_memo)))
+            self._opt_memo[key] = out
         return out
 
     def fused(self, node: alg.Node) -> alg.Node:
-        """Fusion pass (paper §5 pipelining): collapse row-local chains into
-        FusedPipeline groups — one physical sweep and one cache entry each.
-        Disabled together with ``optimize`` so the per-node path stays
+        """Fusion pass (paper §5 pipelining + barrier fusion): collapse
+        row-local chains into FusedPipeline groups and fuse them through
+        blocking-operator boundaries — one physical sweep and one cache entry
+        each.  Disabled together with ``optimize`` so the per-node path stays
         available as the comparison baseline."""
         if not self.optimize:
             return node
         in_key = node.cache_key()
         with self._lock:
             hit = self._fuse_memo.get(in_key)
-        if hit is not None:
-            return hit
-        out, fs = rewrite.fuse_pipelines(node)
+            history = frozenset(
+                k for k, prep in self._history.items()
+                if prep in self.cache or prep in self._inflight)
+        if hit is not None and hit[0] == history:
+            return hit[1]
+        out, fs = rewrite.fuse_pipelines(node, history)
         with self._lock:
             while len(self._fuse_memo) >= self._fused_seen_max:
                 self._fuse_memo.pop(next(iter(self._fuse_memo)))
-            self._fuse_memo[in_key] = out
-            if fs.groups:   # count each distinct plan once: re-evaluating a
-                key = out.cache_key()   # cached plan is not new fusion work
-                if key not in self._fused_seen:
-                    while len(self._fused_seen) >= self._fused_seen_max:
+            self._fuse_memo[in_key] = (history, out)
+            if fs.groups or fs.barrier_groups:
+                key = out.cache_key()   # count each distinct plan once: re-
+                if key not in self._fused_seen:   # evaluating a cached plan
+                    while len(self._fused_seen) >= self._fused_seen_max:  # is
                         self._fused_seen.pop(next(iter(self._fused_seen)))
-                    self._fused_seen[key] = None
+                    self._fused_seen[key] = None  # not new fusion work
                     self.stats.fused_groups += fs.groups
                     self.stats.fused_stage_ops += fs.fused_ops
+                    self.stats.barrier_fused_groups += fs.barrier_groups
+                    self.stats.producer_stage_ops += fs.producer_ops
+                    self.stats.consumer_stage_ops += fs.consumer_ops
         return out
+
+    def note_statement(self, node: alg.Node) -> None:
+        """Record a session statement in the fusion history (MQO §6.2.1):
+        while this statement's result is materialized (or in flight), later
+        plans refuse to absorb its sub-plan into a bigger fused group, so the
+        cached result keeps serving as a shared prefix.  Fusion is
+        deterministic, so the split sub-plan re-fuses to this statement's
+        prepared cache key.  Call AFTER the statement is prepared/submitted —
+        a statement must not act as a fusion barrier against itself."""
+        if not self.optimize:
+            return
+        opt = self.optimized(node)
+        prep_key = self.fused(opt).cache_key()
+        with self._lock:
+            for k in (opt.cache_key(), prep_key):
+                if k not in self._history:
+                    while len(self._history) >= self._history_max:
+                        self._history.pop(next(iter(self._history)))
+                    self._history[k] = prep_key
 
     def _prepared(self, node: alg.Node) -> alg.Node:
         return self.fused(self.optimized(node))
@@ -178,7 +262,7 @@ class Executor:
                 result = self.frames[node.params["frame_id"]]
             else:
                 inputs = [self._eval(c) for c in node.children]
-                result = physical.run_node(node, inputs)
+                result = physical.run_node(node, inputs, self.stats)
             dt = time.monotonic() - t0
             self.stats.evaluated_nodes += 1
             self._store(key, result, dt)

@@ -28,11 +28,29 @@ dispatch for the whole chain instead of one per operator.  Runs of
 consecutive structured-``Expr`` selections additionally collapse into a
 single jit-compiled mask program (one XLA executable per predicate chain,
 cached across blocks), so a k-predicate chain costs one device dispatch and
-one filter instead of k of each.
+one filter instead of k of each.  Runs of consecutive elementwise MAPs are
+likewise jit-traced as one XLA program per (udf-chain, schema), with a
+per-chain fallback to eager dispatch when tracing fails or diverges.
+
+Barrier-fused operators (fusion THROUGH the blocking boundary)
+--------------------------------------------------------------
+``FUSED_GROUPBY`` runs the row-local producer chain inside the groupby's own
+per-block programs: one dispatch per partition stages the sweep and extracts
+key spans, and (for dense INT keys) one dispatch per partition computes codes
+plus every ``segment_reduce`` partial as a single compiled program — no
+materialization boundary between the chain and the pre-shuffle stage.
+``FUSED_SORT`` / ``FUSED_JOIN`` run the row-local consumer chain against the
+permutation / match *index*: leading structured selections filter the index
+before the payload gather and a leading projection prunes the gathered
+columns, so the materialized frame is built once, post-filter, instead of
+gathered-then-filtered.  ``FUSED_WINDOW`` folds pre-stages into the local-scan
+block program and post-stages into the carry-application block program, with
+the carry combine between them exactly where the unfused path placed it.
 """
 from __future__ import annotations
 
 import functools
+import os
 import threading
 from typing import Any, Callable, Sequence
 
@@ -284,8 +302,10 @@ def _drop_duplicates(pf: PartitionedFrame, subset) -> PartitionedFrame:
 
 
 # ---- JOIN -------------------------------------------------------------------
-def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict) -> PartitionedFrame:
-    lf, rf = left.to_frame().induce(), right.to_frame().induce()
+def _join_indices(lf: Frame, rf: Frame, params: dict):
+    """Build the match indices: (lidx, ridx, lvalid, rvalid, drop_right).
+    No payload row is gathered here — that happens in ``_assemble_join``, and
+    the fused-consumer path filters these indices first."""
     how = params["how"]
     on = params["on"]
     left_on = params["left_on"] or on
@@ -295,8 +315,7 @@ def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict) -> Part
         ml, mr = lf.nrows, rf.nrows
         lidx = np.repeat(np.arange(ml), mr)
         ridx = np.tile(np.arange(mr), ml)
-        out = _assemble_join(lf, rf, lidx, ridx, None, None, drop_right=())
-        return PartitionedFrame.from_frame(out)
+        return lidx, ridx, None, None, ()
 
     lids, rids = _keys_to_ids(_row_keys(lf, left_on), _row_keys(rf, right_on))
     groups: dict[int, list[int]] = {}
@@ -330,18 +349,92 @@ def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict) -> Part
     lvalid[np.asarray(lnull, dtype=np.int64)] = False
 
     drop_right = tuple(right_on) if on is not None else ()
+    return lidx, ridx, lvalid, rvalid, drop_right
+
+
+def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict,
+          stats=None) -> PartitionedFrame:
+    lf, rf = left.to_frame().induce(), right.to_frame().induce()
+    lidx, ridx, lvalid, rvalid, drop_right = _join_indices(lf, rf, params)
+    if stats is not None:
+        stats.gather_rows += int(lidx.shape[0])
     out = _assemble_join(lf, rf, lidx, ridx, lvalid, rvalid, drop_right)
     return PartitionedFrame.from_frame(out)
 
 
-def _assemble_join(lf: Frame, rf: Frame, lidx, ridx, lvalid, rvalid, drop_right) -> Frame:
-    lpart = lf.take_rows(lidx)
-    keep_r = [j for j, n in enumerate(rf.col_labels.to_list()) if n not in drop_right]
+def _gather_join_cols(lf: Frame, rf: Frame, lidx, ridx, lvalid, rvalid,
+                      drop_right, names: Sequence[Any]) -> Frame:
+    """Gather ONLY the named columns of the (virtual) join result — the
+    predicate's working set, not the payload.  Left columns shadow right ones
+    on name collision, matching ``_assemble_join``'s concat order."""
+    lnames = set(lf.col_labels.to_list())
+    rnames = {n for n in rf.col_labels.to_list() if n not in drop_right}
+    cols, out_names = [], []
+    for n in names:
+        if n in lnames:
+            c, side_valid = lf.col(n).take(lidx), lvalid
+        elif n in rnames:
+            c, side_valid = rf.col(n).take(ridx), rvalid
+        else:
+            raise KeyError(n)
+        if side_valid is not None and not side_valid.all():
+            vm = jnp.asarray(c.valid_mask()) & jnp.asarray(side_valid)
+            c = Column(c.data, c.domain, vm, c.dictionary)
+        cols.append(c)
+        out_names.append(n)
+    return Frame(cols, RangeLabels(int(lidx.shape[0])), labels_from_values(out_names))
+
+
+def _fused_join(left: PartitionedFrame, right: PartitionedFrame, params: dict,
+                stages: Sequence[alg.Stage], stats=None) -> PartitionedFrame:
+    """Consumer fusion into JOIN: leading structured selections run against a
+    gather of only the predicate's columns and filter the (lidx, ridx) match
+    indices; the payload gather then builds only the surviving rows (and only
+    the projected columns)."""
+    lf, rf = left.to_frame().induce(), right.to_frame().induce()
+    lidx, ridx, lvalid, rvalid, drop_right = _join_indices(lf, rf, params)
+    preds, proj, rest = _split_consumer_stages(stages)
+    row_labels = None
+    if preds and lidx.shape[0]:
+        refs = sorted(frozenset().union(*[p.refs() for p in preds]), key=repr)
+        mini = _gather_join_cols(lf, rf, lidx, ridx, lvalid, rvalid,
+                                 drop_right, refs)
+        keep = np.asarray(_fused_selection_mask(preds, mini), dtype=bool)
+        # the unfused path filters AFTER the join resets its index: surviving
+        # rows keep their position in the unfiltered join result as label
+        row_labels = RangeLabels(int(lidx.shape[0])).take(np.nonzero(keep)[0])
+        lidx, ridx = lidx[keep], ridx[keep]
+        lvalid = lvalid[keep] if lvalid is not None else None
+        rvalid = rvalid[keep] if rvalid is not None else None
+    if stats is not None:
+        stats.gather_rows += int(lidx.shape[0])
+    keep_cols = frozenset(proj) if proj is not None else None
+    out = _assemble_join(lf, rf, lidx, ridx, lvalid, rvalid, drop_right,
+                         keep_cols=keep_cols, row_labels=row_labels)
+    if proj is not None:
+        out = out.take_cols(out.col_labels.positions_of(proj))
+    pfo = PartitionedFrame.from_frame(out)
+    if rest:
+        pfo = pfo.map_blockwise(lambda b: _run_stages_block(b, rest))
+    return pfo
+
+
+def _assemble_join(lf: Frame, rf: Frame, lidx, ridx, lvalid, rvalid, drop_right,
+                   keep_cols: frozenset | None = None, row_labels=None) -> Frame:
+    lsrc = lf
+    if keep_cols is not None:
+        lsrc = lf.take_cols([j for j, n in enumerate(lf.col_labels.to_list())
+                             if n in keep_cols])
+    lpart = lsrc.take_rows(lidx)
+    keep_r = [j for j, n in enumerate(rf.col_labels.to_list())
+              if n not in drop_right and (keep_cols is None or n in keep_cols)]
     rpart = rf.take_cols(keep_r).take_rows(ridx)
     lpart = _mask_all(lpart, lvalid)
     rpart = _mask_all(rpart, rvalid)
     out = lpart.concat_cols(rpart)
-    return Frame(out.columns, RangeLabels(out.nrows), out.col_labels)  # reset index
+    if row_labels is None:
+        row_labels = RangeLabels(out.nrows)   # reset index
+    return Frame(out.columns, row_labels, out.col_labels)
 
 
 def _mask_all(frame: Frame, valid: np.ndarray | None) -> Frame:
@@ -364,7 +457,11 @@ def _groupby(pf: PartitionedFrame, keys: Sequence[Any], aggs: Sequence[tuple]) -
     """
     pf = pf.repartition(col_parts=1)
     row_blocks = [row[0].induce() for row in pf.parts]
+    return _groupby_blocks(row_blocks, keys, aggs)
 
+
+def _groupby_blocks(row_blocks: list[Frame], keys: Sequence[Any],
+                    aggs: Sequence[tuple]) -> PartitionedFrame:
     # ---- dense small-range INT key: no host factorization ------------------
     # (paper's groupby(n) benchmark shape: "passenger_count"-like keys).
     # codes = v - min, computed per block in parallel; empty groups dropped
@@ -450,56 +547,40 @@ def _dense_int_key(row_blocks: list[Frame], keys) -> tuple[int, int] | None:
     return vmin, g
 
 
-def _groupby_with_codes(row_blocks: list[Frame], keys, aggs, codes_per_block,
-                        G: int, rep_sorted=None, key_values=None,
-                        drop_empty: bool = False) -> PartitionedFrame:
-    # ---- per-block partials (parallel; MXU segment_reduce) ------------------
+def _agg_need(aggs) -> list[tuple[Any, str]]:
+    """The (column, base-statistic) partial vectors an agg list requires."""
     need: list[tuple[Any, str]] = []
     for col_label, func, _ in aggs:
         for base in _bases_for(func):
             if (col_label, base) not in need:
                 need.append((col_label, base))
-    need_main = tuple(need)
+    return need
 
-    def block_partial(args) -> dict:
-        block, codes = args
-        codes_dev = jnp.asarray(codes)
-        out = {}
-        if drop_empty:
-            # group presence = #rows with a valid key code (independent of
-            # value nulls) so empty dense-range slots drop after the combine
-            ones = jnp.ones(block.nrows, jnp.float32)
-            out[("__presence__", "sum")] = kops.segment_reduce(
-                ones, codes_dev, G, "sum")
-        for col_label, base in need_main:
-            c = block.col(col_label)
-            v = c.data.astype(jnp.float32)
-            valid = c.valid_mask()
-            if base == "count":
-                out[(col_label, base)] = kops.segment_reduce(
-                    valid.astype(jnp.float32), codes_dev, G, "sum")
-            elif base == "sum":
-                out[(col_label, base)] = kops.segment_reduce(
-                    jnp.where(valid, v, 0.0), codes_dev, G, "sum")
-            elif base == "sumsq":
-                out[(col_label, base)] = kops.segment_reduce(
-                    jnp.where(valid, v * v, 0.0), codes_dev, G, "sum")
-            elif base == "min":
-                out[(col_label, base)] = kops.segment_reduce(
-                    jnp.where(valid, v, jnp.finfo(jnp.float32).max), codes_dev, G, "min")
-            elif base == "max":
-                out[(col_label, base)] = kops.segment_reduce(
-                    jnp.where(valid, v, jnp.finfo(jnp.float32).min), codes_dev, G, "max")
-        return out
 
-    if drop_empty:
-        need.append(("__presence__", "sum"))
+_PRESENCE = ("__presence__", "sum")
 
-    partials = list(get_pool().map(block_partial, list(zip(row_blocks, codes_per_block))))
 
-    # ---- combine (G-sized, tiny vs data) ------------------------------------
+def _block_partial(block: Frame, codes, G: int, need: Sequence[tuple],
+                   presence: bool) -> dict:
+    """Per-block partial aggregates as ONE compiled program
+    (``kernels.ops.segment_reduce_multi``): null masking, squaring, presence
+    (so empty dense-range slots drop after the combine), and one
+    ``segment_reduce`` per reduce op with same-op columns batched (M, C)."""
+    outs = kops.segment_reduce_multi(
+        [block.col(col_label).data for col_label, _ in need],
+        [block.col(col_label).mask for col_label, _ in need],
+        codes, bases=[base for _, base in need], num_segments=G,
+        presence=presence)
+    result = {key: outs[i] for i, key in enumerate(need)}
+    if presence:
+        result[_PRESENCE] = outs[len(need)]
+    return result
+
+
+def _combine_partials(partials: Sequence[dict], want: Sequence[tuple]) -> dict:
+    """Tree combine of per-block partials (G-sized, tiny vs data)."""
     combined: dict[tuple, jnp.ndarray] = {}
-    for key in need:
+    for key in want:
         base = key[1]
         parts = [p[key] for p in partials]
         acc = parts[0]
@@ -511,8 +592,29 @@ def _groupby_with_codes(row_blocks: list[Frame], keys, aggs, codes_per_block,
             else:
                 acc = jnp.maximum(acc, nxt)
         combined[key] = acc
+    return combined
 
-    # ---- finalize -----------------------------------------------------------
+
+def _groupby_with_codes(row_blocks: list[Frame], keys, aggs, codes_per_block,
+                        G: int, rep_sorted=None, key_values=None,
+                        drop_empty: bool = False) -> PartitionedFrame:
+    # ---- per-block partials (parallel; MXU segment_reduce) ------------------
+    need = _agg_need(aggs)
+
+    def block_partial(args) -> dict:
+        block, codes = args
+        return _block_partial(block, codes, G, need, presence=drop_empty)
+
+    partials = list(get_pool().map(block_partial, list(zip(row_blocks, codes_per_block))))
+    want = need + [_PRESENCE] if drop_empty else need
+    combined = _combine_partials(partials, want)
+    return _finalize_groupby(combined, row_blocks[0] if row_blocks else None,
+                             keys, aggs, G, rep_sorted, key_values, drop_empty)
+
+
+def _finalize_groupby(combined: dict, template: Frame | None, keys, aggs,
+                      G: int, rep_sorted=None, key_values=None,
+                      drop_empty: bool = False) -> PartitionedFrame:
     out_cols: list[Column] = []
     out_names: list[Any] = []
     # key columns first (representative decoded values, sorted order)
@@ -520,7 +622,6 @@ def _groupby_with_codes(row_blocks: list[Frame], keys, aggs, codes_per_block,
         out_cols.append(_host_column(list(key_values), Domain.INT))
         out_names.append(keys[0])
     elif keys:
-        template = row_blocks[0]
         for kpos, kname in enumerate(keys):
             src = template.col(kname)
             vals = [r[kpos] for r in rep_sorted]
@@ -574,43 +675,177 @@ def _host_column(values: list, domain: Domain) -> Column:
     return Column(p.data, p.domain, p.mask, p.dictionary)
 
 
+# ---- FUSED GROUPBY: producer chain inside the partial-aggregation program ----
+def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
+                   keys: Sequence[Any], aggs: Sequence[tuple]) -> PartitionedFrame:
+    """Producer fusion into GROUPBY (Cylon-style local-pattern fusion into the
+    shuffle stage): the row-local chain runs inside the groupby's own
+    per-block programs instead of materializing between the two.
+
+    Pass A (one dispatch per partition) runs the whole producer sweep and
+    extracts the block's key span — cheap host stats, no aggregation yet, so
+    nothing is computed speculatively.  The spans agree on ONE global dense
+    range, and pass B (one dispatch per partition) computes codes against it
+    plus all ``segment_reduce`` partials in a single compiled program
+    (``kernels.ops.segment_reduce_multi``) — a global static G means one XLA
+    executable shared by every block and every query on the same schema,
+    where per-block local ranges would recompile per distinct span.  Keys
+    that don't qualify (non-INT, multi-key, range > 65536) fall back to the
+    general factorization over the staged blocks — the producer sweep still
+    ran fused, in one pool round instead of one per operator."""
+    pf1 = pf.repartition(col_parts=1)
+    blocks = [row[0] for row in pf1.parts]
+    single_key = len(keys) == 1
+
+    def stage_block(block: Frame):
+        f = _run_stages_block(block, stages).induce()
+        info = None
+        if single_key:
+            try:
+                c = f.col(keys[0])
+            except KeyError:
+                c = None
+            if c is not None and c.domain is Domain.INT:
+                v = np.asarray(c.data, dtype=np.int64)
+                if c.mask is not None:
+                    v = v[np.asarray(c.mask)]
+                info = (int(v.min()), int(v.max())) if v.size else "empty"
+        return f, info
+
+    results = list(get_pool().map(stage_block, blocks))
+    staged = [r[0] for r in results]
+    infos = [r[1] for r in results]
+
+    spans = [i for i in infos if isinstance(i, tuple)]
+    if single_key and spans and all(i is not None for i in infos):
+        gmin = min(i[0] for i in spans)
+        G = max(i[1] for i in spans) - gmin + 1
+        if G <= 65536:
+            need = _agg_need(aggs)
+
+            def partial_block(f: Frame) -> dict:
+                c = f.col(keys[0])
+                codes = np.asarray(c.data, dtype=np.int64) - gmin
+                if c.mask is not None:
+                    codes = np.where(np.asarray(c.mask), codes, -1)
+                return _block_partial(f, codes.astype(np.int32), G, need,
+                                      presence=True)
+
+            partials = list(get_pool().map(partial_block, staged))
+            combined = _combine_partials(partials, need + [_PRESENCE])
+            return _finalize_groupby(combined, staged[0], keys, aggs, G,
+                                     key_values=[gmin + i for i in range(G)],
+                                     drop_empty=True)
+
+    # general path over the staged blocks: factorization needs a global view,
+    # but the whole producer sweep still ran as one fused pool round
+    return _groupby_blocks(staged, keys, aggs)
+
+
 # ---- SORT ---------------------------------------------------------------
-def _sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool) -> PartitionedFrame:
-    f = pf.to_frame().induce()
+def _sort_perm(f: Frame, by: Sequence[Any], ascending: bool) -> np.ndarray:
+    """The sort permutation: position i of the result comes from row idx[i]."""
     key_cols = []
     for v in _sort_rank_keys(f, by):
         # nulls (NaN) sort last regardless of direction
         v = np.where(np.isnan(v), np.inf if ascending else -np.inf, v)
         key_cols.append(v)
     if ascending:
-        idx = np.lexsort(tuple(reversed(key_cols)))   # stable; first key primary
-    else:
-        idx = np.lexsort(tuple(-k for k in reversed(key_cols)))
+        return np.lexsort(tuple(reversed(key_cols)))   # stable; first key primary
+    return np.lexsort(tuple(-k for k in reversed(key_cols)))
+
+
+def _sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
+          stats=None) -> PartitionedFrame:
+    f = pf.to_frame().induce()
+    idx = _sort_perm(f, by, ascending)
+    if stats is not None:
+        stats.gather_rows += int(idx.shape[0])
     return PartitionedFrame.from_frame(f.take_rows(idx))
 
 
-# ---- WINDOW -------------------------------------------------------------
-def _window(pf: PartitionedFrame, func: str, cols, size, periods) -> PartitionedFrame:
-    pf = pf.repartition(col_parts=1)
-    template = pf.parts[0][0].induce()
-    names = template.col_labels.to_list()
-    targets = list(cols) if cols else [n for n, c in zip(names, template.columns)
-                                       if c.domain.is_numeric]
+def _split_consumer_stages(stages: Sequence[alg.Stage]):
+    """Split a consumer chain into (pushable predicates, gather projection,
+    remaining stages).  Leading structured-``Expr`` selections are evaluated
+    against the *pre-gather* frame (row-local predicates are permutation-
+    invariant) and filter the gather index; an immediately following
+    projection prunes the gathered columns.  Everything after the first
+    MAP/RENAME (value/name changes) runs post-gather."""
+    preds: list[alg.Expr] = []
+    i = 0
+    while (i < len(stages) and stages[i].op == "selection"
+           and isinstance(stages[i].params["predicate"], alg.Expr)):
+        preds.append(stages[i].params["predicate"])
+        i += 1
+    proj = None
+    if i < len(stages) and stages[i].op == "projection":
+        proj = stages[i].params["cols"]
+        i += 1
+    return preds, proj, stages[i:]
 
-    if func in ("cumsum", "cummax", "cummin"):
-        return _window_scan_blocks(pf, func, targets)
+
+def _fused_sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
+                stages: Sequence[alg.Stage], stats=None) -> PartitionedFrame:
+    """Consumer fusion into SORT: selections filter the permutation *index*
+    before the payload gather, so the materialized frame is built once,
+    post-filter, instead of gathered-then-filtered."""
+    f = pf.to_frame().induce()
+    idx = _sort_perm(f, by, ascending)
+    preds, proj, rest = _split_consumer_stages(stages)
+    if preds:
+        # evaluate on the UNSORTED frame (row-local ⇒ permutation-invariant):
+        # no gather happens before the filter
+        keep = np.asarray(_fused_selection_mask(preds, f), dtype=bool)
+        idx = idx[keep[idx]]
+    g = f.take_cols(f.col_labels.positions_of(proj)) if proj is not None else f
+    if stats is not None:
+        stats.gather_rows += int(idx.shape[0])
+    out = PartitionedFrame.from_frame(g.take_rows(idx))
+    if rest:
+        out = out.map_blockwise(lambda b: _run_stages_block(b, rest))
+    return out
+
+
+# ---- WINDOW -------------------------------------------------------------
+def _window_targets(frame: Frame, cols) -> list:
+    if cols:
+        return list(cols)
+    return [n for n, c in zip(frame.col_labels.to_list(), frame.columns)
+            if c.domain.is_numeric]
+
+
+def _window(pf: PartitionedFrame, func: str, cols, size, periods,
+            pre: Sequence[alg.Stage] = (), post: Sequence[alg.Stage] = ()) -> PartitionedFrame:
+    """WINDOW, optionally with fused row-local chains: ``pre`` stages run in
+    the same per-block program as the local scan, ``post`` stages in the same
+    per-block program as the carry application (the carry combine sits between
+    the two, exactly where the unfused path placed it)."""
+    pf = pf.repartition(col_parts=1)
+
+    if func in ("cumsum", "cummax", "cummin", "cumprod"):
+        # cumprod: per-block scan + multiplicative carry (kept exact — no
+        # log-space trick)
+        return _window_scan_blocks(pf, func, cols, pre, post)
+
+    # halo/rolling paths need the staged blocks before the halo tails are
+    # built; the producer chain still runs as ONE fused pool round
+    if pre:
+        pf = pf.map_blockwise(lambda b: _run_stages_block(b, pre))
+    template = pf.parts[0][0].induce()
+    targets = _window_targets(template, cols)
+
     if func in ("diff", "shift"):
-        return _window_halo(pf, func, targets, periods)
+        return _window_halo(pf, func, targets, periods, post)
     if func in ("rolling_sum", "rolling_mean"):
         assert size is not None, "rolling window requires size"
         # rolling(w) = cumsum − shift(cumsum, w); first w−1 rows are null
         csum = _window_scan_blocks(pf, "cumsum", targets)
         shifted = _window_halo(csum, "shift", targets, size)
-        return _rolling_combine(csum, shifted, targets, size, mean=(func == "rolling_mean"))
-    if func == "cumprod":
-        # via linear_scan: h_t = x_t * h_{t-1}  (a = x, b = 0, h0 = 1) → use
-        # log-space cumsum? keep exact: per-block scan + multiplicative carry
-        return _window_scan_blocks(pf, "cumprod", targets)
+        out = _rolling_combine(csum, shifted, targets, size,
+                               mean=(func == "rolling_mean"))
+        if post:
+            out = out.map_blockwise(lambda b: _run_stages_block(b, post))
+        return out
     raise ValueError(func)
 
 
@@ -623,10 +858,32 @@ def _apply_cols(frame: Frame, targets, fn: Callable[[Column], Column]) -> Frame:
     return Frame(cols, frame.row_labels, frame.col_labels, frame.row_domains)
 
 
-def _window_scan_blocks(pf: PartitionedFrame, func: str, targets) -> PartitionedFrame:
-    blocks = [row[0].induce() for row in pf.parts]
+def _carry_combine(func: str, a, b):
+    if func == "cumsum":
+        return a + b
+    if func == "cummax":
+        return jnp.maximum(a, b)
+    if func == "cummin":
+        return jnp.minimum(a, b)
+    return a * b   # cumprod
 
-    def local(block: Frame) -> Frame:
+
+def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
+                        pre: Sequence[alg.Stage] = (),
+                        post: Sequence[alg.Stage] = ()) -> PartitionedFrame:
+    """Blocked scan with cross-block carry composition, in two parallel
+    per-block passes: (pre-stages + local scan + block total), then a tiny
+    host-side exclusive combine of the totals, then (carry application +
+    post-stages).  The scan ops are associative and commutative over the
+    identity-filled values, so exclusive-combining the *local* totals is
+    bitwise the same carry the old serial tail-chaining produced — and the
+    carry application now runs block-parallel instead of serially."""
+    blocks = [row[0] for row in pf.parts]
+
+    def local(block: Frame):
+        f = _run_stages_block(block, pre).induce() if pre else block.induce()
+        targets = _window_targets(f, cols)
+
         def scan_col(c: Column) -> Column:
             v = jnp.where(c.valid_mask(), c.data.astype(jnp.float32),
                           _scan_identity(func))
@@ -635,48 +892,51 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, targets) -> Partitioned
             else:
                 out = kops.window_scan(v, func)
             return Column(out.astype(jnp.float32), Domain.FLOAT, c.mask, None)
-        return _apply_cols(block, targets, scan_col)
+
+        scanned = _apply_cols(f, targets, scan_col)
+        totals = ({n: scanned.col(n).data[-1] for n in targets}
+                  if scanned.nrows else {})
+        return scanned, totals, targets
 
     locals_ = list(get_pool().map(local, blocks))
 
-    # cross-block carry composition: exclusive combine of block totals
-    out_blocks: list[Frame] = []
-    carries: dict[Any, float | jnp.ndarray] = {}
-    for bi, (orig, loc) in enumerate(zip(blocks, locals_)):
-        if bi == 0:
-            out_blocks.append(loc)
-        else:
-            cols = list(loc.columns)
-            names = loc.col_labels.to_list()
+    # exclusive combine of block totals → per-block carries (host, tiny)
+    carries: list[dict] = []
+    acc: dict[Any, Any] = {}
+    for _scanned, totals, _targets in locals_:
+        carries.append(dict(acc))
+        for n, t in totals.items():
+            acc[n] = t if n not in acc else _carry_combine(func, acc[n], t)
+
+    if not post and not any(carries):
+        return PartitionedFrame([[item[0]] for item in locals_])
+
+    def apply(args):
+        (scanned, _totals, targets), carry = args
+        if carry:
+            cols_ = list(scanned.columns)
+            names = scanned.col_labels.to_list()
             for j, n in enumerate(names):
-                if n in targets and n in carries:
-                    cr = carries[n]
-                    v = cols[j].data
-                    if func == "cumsum":
-                        v = v + cr
-                    elif func == "cummax":
-                        v = jnp.maximum(v, cr)
-                    elif func == "cummin":
-                        v = jnp.minimum(v, cr)
-                    elif func == "cumprod":
-                        v = v * cr
-                    cols[j] = Column(v, cols[j].domain, cols[j].mask, None)
-            out_blocks.append(Frame(cols, loc.row_labels, loc.col_labels, loc.row_domains))
-        # update carries from the *combined* block tails
-        last = out_blocks[-1]
-        for n in targets:
-            if last.nrows:
-                carries[n] = last.col(n).data[-1]
-    return PartitionedFrame([[b] for b in out_blocks])
+                if n in targets and n in carry:
+                    v = _carry_combine(func, cols_[j].data, carry[n])
+                    cols_[j] = Column(v, cols_[j].domain, cols_[j].mask, None)
+            scanned = Frame(cols_, scanned.row_labels, scanned.col_labels,
+                            scanned.row_domains)
+        return _run_stages_block(scanned, post) if post else scanned
+
+    out = list(get_pool().map(apply, list(zip(locals_, carries))))
+    return PartitionedFrame([[b] for b in out])
 
 
 def _scan_identity(func: str):
     return {"cumsum": 0.0, "cummax": -jnp.inf, "cummin": jnp.inf, "cumprod": 1.0}[func]
 
 
-def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int) -> PartitionedFrame:
+def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int,
+                 post: Sequence[alg.Stage] = ()) -> PartitionedFrame:
     """diff/shift via a ``periods``-row halo — the running tail of everything
-    before the block (a single block may be shorter than ``periods``)."""
+    before the block (a single block may be shorter than ``periods``).
+    ``post`` stages run inside the same per-block program."""
     blocks = [row[0].induce() for row in pf.parts]
     halos: list[Frame | None] = [None]
     running: Frame | None = None
@@ -711,7 +971,8 @@ def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int) -> Part
         for j, n in enumerate(names):
             if n in targets:
                 cols[j] = do(n)
-        return Frame(cols, block.row_labels, block.col_labels, block.row_domains)
+        got = Frame(cols, block.row_labels, block.col_labels, block.row_domains)
+        return _run_stages_block(got, post) if post else got
 
     out = list(get_pool().map(local, list(zip(blocks, halos))))
     return PartitionedFrame([[b] for b in out])
@@ -1003,51 +1264,203 @@ def _fused_selection_mask(preds: Sequence[alg.Expr], frame: Frame) -> np.ndarray
     return np.asarray(keep)
 
 
+# Compiled map-run programs: a run of consecutive elementwise MAP stages
+# traced as ONE XLA program per (udf chain, input schema).  Value None marks a
+# chain that failed to trace (host-side numpy, data-dependent structure, ...)
+# or whose traced output diverged from the eager path on the probe block —
+# those chains stay on eager per-stage dispatch.  Bounded FIFO like _PRED_JIT.
+_MAP_JIT: dict[tuple, tuple | None] = {}
+_MAP_JIT_LOCK = threading.Lock()
+_MAP_JIT_MAX = 128
+_MAP_JIT_MISS = object()
+
+
+def _run_map_stages_eager(frame: Frame, udfs: Sequence[alg.Udf]) -> Frame:
+    cur = frame
+    for u in udfs:
+        cur = _apply_udf_block(cur, u)
+    return cur
+
+
+def _jit_udfs_enabled() -> bool:
+    """Same dispatch policy as ``kernels.ops.use_pallas``: on CPU the host
+    numpy eager path is the tuned one (a per-block XLA dispatch plus the
+    pass-through column round-trips costs more than the memcpy-level work it
+    replaces); on an accelerator the one-program-per-chain form wins.  Set
+    ``REPRO_JIT_UDFS=1`` to force jit-traced map runs anywhere, ``=0`` to
+    force eager anywhere."""
+    flag = os.environ.get("REPRO_JIT_UDFS", "")
+    if flag == "0":
+        return False
+    if flag:
+        return True
+    return jax.default_backend() != "cpu"
+
+
+def _map_run_program(udfs: Sequence[alg.Udf], names: tuple, domains: tuple):
+    """jit-traced whole-chain map run over a plain (datas, masks) environment.
+    Output metadata (names/domains/mask-presence) is captured at trace time —
+    static for an elementwise chain, or the trace fails and we fall back."""
+    meta: dict = {}
+
+    def prog(datas, masks):
+        n = int(datas[0].shape[0])
+        cols = [Column(d, dom, m, None)
+                for d, dom, m in zip(datas, domains, masks)]
+        f = Frame(cols, RangeLabels(n), labels_from_values(list(names)))
+        for u in udfs:
+            f = _apply_udf_block(f, u)
+        meta["names"] = f.col_labels.to_list()
+        meta["domains"] = tuple(c.domain for c in f.columns)
+        return (tuple(c.data for c in f.columns),
+                tuple(c.mask for c in f.columns))
+
+    return jax.jit(prog), meta
+
+
+def _frames_bit_equal(a: Frame, b: Frame) -> bool:
+    if a.col_labels.to_list() != b.col_labels.to_list():
+        return False
+    if a.row_labels.to_list() != b.row_labels.to_list():
+        return False
+    for ca, cb in zip(a.columns, b.columns):
+        if ca.domain is not cb.domain:
+            return False
+        va, vb = np.asarray(ca.valid_mask()), np.asarray(cb.valid_mask())
+        if not np.array_equal(va, vb):
+            return False
+        da, db = np.asarray(ca.data), np.asarray(cb.data)
+        if da.dtype != db.dtype:
+            return False
+        if not np.array_equal(np.where(va, da, 0), np.where(vb, db, 0)):
+            return False
+    return True
+
+
+def _run_map_stages(frame: Frame, udfs: Sequence[alg.Udf]) -> Frame:
+    """Run a consecutive run of elementwise MAP stages over one block as one
+    XLA program when the chain traces; per-chain eager fallback otherwise.
+    The first block through a chain is executed BOTH ways and compared — the
+    compiled program is only adopted if it reproduces the eager result
+    bit-for-bit, so fused and unfused plans can never diverge."""
+    f = frame.induce()
+    if not _jit_udfs_enabled():
+        return _run_map_stages_eager(f, udfs)
+    names = f.col_labels.to_list()
+    domains = tuple(c.domain for c in f.columns)
+    if any(d.is_coded for d in domains):
+        return _run_map_stages_eager(f, udfs)
+    key = (tuple(u.key() for u in udfs), tuple(names), domains,
+           tuple(c.mask is None for c in f.columns))
+    try:
+        hash(key)
+    except TypeError:   # unhashable labels
+        return _run_map_stages_eager(f, udfs)
+
+    with _MAP_JIT_LOCK:
+        entry = _MAP_JIT.get(key, _MAP_JIT_MISS)
+    if entry is None:
+        return _run_map_stages_eager(f, udfs)
+
+    datas = [c.data for c in f.columns]
+    masks = [c.mask for c in f.columns]
+
+    if entry is not _MAP_JIT_MISS:
+        fn, meta = entry
+        out_datas, out_masks = fn(datas, masks)
+        cols = [Column(d, dom, m, None)
+                for d, dom, m in zip(out_datas, meta["domains"], out_masks)]
+        return Frame(cols, f.row_labels, labels_from_values(meta["names"]))
+
+    # probe: trace, run, and verify against the eager path on this block
+    eager = _run_map_stages_eager(f, udfs)
+    entry = None
+    try:
+        fn, meta = _map_run_program(udfs, tuple(names), domains)
+        out_datas, out_masks = fn(datas, masks)
+        cols = [Column(d, dom, m, None)
+                for d, dom, m in zip(out_datas, meta["domains"], out_masks)]
+        traced = Frame(cols, f.row_labels, labels_from_values(meta["names"]))
+        if _frames_bit_equal(eager, traced):
+            entry = (fn, meta)
+    except Exception:
+        entry = None
+    with _MAP_JIT_LOCK:
+        while len(_MAP_JIT) >= _MAP_JIT_MAX:
+            _MAP_JIT.pop(next(iter(_MAP_JIT)))
+        _MAP_JIT[key] = entry
+    return eager
+
+
+def _run_stages_block(frame: Frame, stages: Sequence[alg.Stage]) -> Frame:
+    """Execute a row-local stage chain over ONE block: the shared per-block
+    program body of FusedPipeline and of every barrier-fused operator."""
+    cur = frame
+    i = 0
+    while i < len(stages):
+        st = stages[i]
+        if st.op == "selection":
+            # coalesce a run of structured-Expr selections → one jit mask
+            preds = []
+            while (i < len(stages) and stages[i].op == "selection"
+                   and isinstance(stages[i].params["predicate"], alg.Expr)):
+                preds.append(stages[i].params["predicate"])
+                i += 1
+            if preds:
+                cur = cur.filter_rows(_fused_selection_mask(preds, cur))
+            else:  # opaque Udf predicate
+                cur = cur.filter_rows(_predicate_mask(cur, st.params["predicate"]))
+                i += 1
+        elif st.op == "map":
+            # coalesce a run of elementwise maps → one jit-traced program
+            udfs = []
+            while i < len(stages) and stages[i].op == "map":
+                udfs.append(stages[i].params["udf"])
+                i += 1
+            cur = _run_map_stages(cur, udfs)
+        elif st.op == "projection":
+            cur = _project_block(cur, st.params["cols"])
+            i += 1
+        elif st.op == "rename":
+            cur = _rename_block(cur, dict(st.params["mapping"]))
+            i += 1
+        else:
+            raise ValueError(f"non-fusible stage {st.op}")
+    return cur
+
+
 def _run_fused(pf: PartitionedFrame, stages: Sequence[alg.Stage]) -> PartitionedFrame:
     """Execute a fused row-local chain: one sweep per row partition, values
     staying on device across stages, one pool dispatch for the whole chain."""
     pf1 = pf.repartition(col_parts=1)
-
-    def run_block(frame: Frame) -> Frame:
-        cur = frame
-        i = 0
-        while i < len(stages):
-            st = stages[i]
-            if st.op == "selection":
-                # coalesce a run of structured-Expr selections → one jit mask
-                preds = []
-                while (i < len(stages) and stages[i].op == "selection"
-                       and isinstance(stages[i].params["predicate"], alg.Expr)):
-                    preds.append(stages[i].params["predicate"])
-                    i += 1
-                if preds:
-                    cur = cur.filter_rows(_fused_selection_mask(preds, cur))
-                else:  # opaque Udf predicate
-                    cur = cur.filter_rows(_predicate_mask(cur, st.params["predicate"]))
-                    i += 1
-            elif st.op == "map":
-                cur = _apply_udf_block(cur, st.params["udf"])
-                i += 1
-            elif st.op == "projection":
-                cur = _project_block(cur, st.params["cols"])
-                i += 1
-            elif st.op == "rename":
-                cur = _rename_block(cur, dict(st.params["mapping"]))
-                i += 1
-            else:
-                raise ValueError(f"non-fusible stage {st.op}")
-        return cur
-
-    return pf1.map_blockwise(run_block)
+    return pf1.map_blockwise(lambda f: _run_stages_block(f, stages))
 
 
 # =============================================================================
 # dispatcher
 # =============================================================================
-def run_node(node: alg.Node, inputs: list[PartitionedFrame]) -> PartitionedFrame:
+def run_node(node: alg.Node, inputs: list[PartitionedFrame],
+             stats=None) -> PartitionedFrame:
+    """Dispatch one plan node.  ``stats`` (duck-typed ``ExecStats``) receives
+    physical-level counters — currently ``gather_rows``, the payload rows
+    gathered by SORT/JOIN materialization (the fused-consumer paths gather
+    strictly fewer rows than their unfused counterparts on selective chains)."""
     op = node.op
     if op == "fused_pipeline":
         return _run_fused(inputs[0], node.params["stages"])
+    if op == "fused_groupby":
+        return _fused_groupby(inputs[0], node.params["stages"],
+                              node.params["keys"], node.params["aggs"])
+    if op == "fused_sort":
+        return _fused_sort(inputs[0], node.params["by"], node.params["ascending"],
+                           node.params["stages"], stats)
+    if op == "fused_join":
+        return _fused_join(inputs[0], inputs[1], node.params,
+                           node.params["stages"], stats)
+    if op == "fused_window":
+        return _window(inputs[0], node.params["func"], node.params["cols"],
+                       node.params["size"], node.params["periods"],
+                       node.params["pre_stages"], node.params["post_stages"])
     if op == "selection":
         return _selection(inputs[0], node.params["predicate"])
     if op == "projection":
@@ -1057,13 +1470,13 @@ def run_node(node: alg.Node, inputs: list[PartitionedFrame]) -> PartitionedFrame
     if op == "difference":
         return _difference(inputs[0], inputs[1])
     if op == "join":
-        return _join(inputs[0], inputs[1], node.params)
+        return _join(inputs[0], inputs[1], node.params, stats)
     if op == "drop_duplicates":
         return _drop_duplicates(inputs[0], node.params["subset"])
     if op == "groupby":
         return _groupby(inputs[0], node.params["keys"], node.params["aggs"])
     if op == "sort":
-        return _sort(inputs[0], node.params["by"], node.params["ascending"])
+        return _sort(inputs[0], node.params["by"], node.params["ascending"], stats)
     if op == "rename":
         return _rename(inputs[0], node.params["mapping"])
     if op == "window":

@@ -30,6 +30,43 @@ maximal chains of row-local operators (elementwise MAP, SELECTION, PROJECTION,
 RENAME) into single ``FusedPipeline`` nodes, which the physical layer executes
 as one per-partition program — the paper's §5 pipelining argument made
 explicit in the plan language.
+
+Barrier fusion (fusing *through* blocking operators)
+----------------------------------------------------
+Blocking operators (GROUPBY / SORT / JOIN / WINDOW) remain materialization
+boundaries for the *shuffled* data, but the row-local chains adjacent to them
+fuse into the blocking operator's own per-block programs (Cylon-style
+local-pattern fusion into the shuffle stage):
+
+  * GROUPBY absorbs its row-local *producer* chain — the map/filter sweep runs
+    inside the same per-block program as the ``segment_reduce`` partial
+    aggregation (``FusedGroupBy``);
+  * SORT / JOIN absorb their row-local *consumer* chain — leading structured
+    selections filter the permutation / match *index* before the payload
+    gather, and a leading projection prunes the gathered columns
+    (``FusedSort`` / ``FusedJoin``);
+  * WINDOW absorbs chains on both sides — pre-stages join the local-scan
+    block program, post-stages join the carry-application block program, with
+    carry composition preserved at partition seams (``FusedWindow``).
+
+What still blocks fusion, and why:
+
+  * **In-plan sharing** — a sub-plan referenced by ≥ 2 parents keeps its own
+    node and cache identity; absorbing it would re-execute shared work per
+    branch where the cache serves it once.
+  * **Session history (MQO, §6.2.1)** — a sub-plan whose structural key
+    matches a prior session statement is never absorbed or descended through
+    *while that statement's result is materialized or in flight*, so the
+    materialization cache can still serve the shared prefix.  (An uncached
+    statement is no barrier: splitting there would cost fusion and buy no
+    reuse.)  Fusion is deterministic, so the split sub-plan re-fuses to
+    exactly the prior statement's cache key.
+  * **Non-row-local operators** — LIMIT (its k is global, not per block),
+    non-elementwise MAPs (whole-frame), TRANSPOSE / TOLABELS / FROMLABELS
+    (metadata movement), DIFFERENCE / DROP-DUPLICATES (blocking, and no
+    producer/consumer fused paths are implemented for them), and consumer
+    chains *after* GROUPBY (its output is already aggregate-sized — there is
+    no gather to prune, so plain chain fusion above it is already optimal).
 """
 from __future__ import annotations
 
@@ -197,6 +234,29 @@ def _(n, ch):
 @_ctor("fused_pipeline")
 def _(n, ch):
     return alg.FusedPipeline(ch[0], n.params["stages"])
+
+
+@_ctor("fused_groupby")
+def _(n, ch):
+    return alg.FusedGroupBy(ch[0], n.params["stages"], n.params["keys"], n.params["aggs"])
+
+
+@_ctor("fused_sort")
+def _(n, ch):
+    return alg.FusedSort(ch[0], n.params["by"], n.params["ascending"], n.params["stages"])
+
+
+@_ctor("fused_join")
+def _(n, ch):
+    return alg.FusedJoin(ch[0], ch[1], n.params["on"], n.params["how"],
+                         n.params["left_on"], n.params["right_on"], n.params["stages"])
+
+
+@_ctor("fused_window")
+def _(n, ch):
+    return alg.FusedWindow(ch[0], n.params["func"], n.params["cols"],
+                           n.params["size"], n.params["periods"],
+                           n.params["pre_stages"], n.params["post_stages"])
 
 
 def rebuild(node: alg.Node, children: Sequence[alg.Node]) -> alg.Node:
@@ -392,28 +452,66 @@ def optimize(node: alg.Node, source_columns: Callable[[str], list | None] | None
 @dataclasses.dataclass
 class FusionStats:
     """What the fusion pass did to one plan — surfaced through ``ExecStats``
-    so fused-vs-unfused benchmark wins are attributable."""
+    so fused-vs-unfused benchmark wins are attributable.
 
-    groups: int = 0       # FusedPipeline nodes created
-    fused_ops: int = 0    # original operator nodes absorbed into groups
+    Counter semantics (one source of truth, asserted in tests and benches):
+      * ``groups``          — FusedPipeline nodes in the *final* plan;
+      * ``barrier_groups``  — barrier-fused nodes (FusedGroupBy/FusedSort/
+                              FusedJoin/FusedWindow) in the final plan;
+      * ``producer_ops``    — operator nodes absorbed as producer stages of a
+                              barrier node (GROUPBY pre-aggregation sweep,
+                              WINDOW pre_stages);
+      * ``consumer_ops``    — operator nodes absorbed as consumer stages
+                              (SORT/JOIN post-gather chain, WINDOW post_stages);
+      * ``fused_ops``       — total operator nodes absorbed into *any* fused
+                              construct.  Invariant::
+
+                                fused_ops == pipeline_ops + producer_ops
+                                             + consumer_ops
+
+                              where ``pipeline_ops`` is the stage count of the
+                              surviving FusedPipeline groups.
+    """
+
+    groups: int = 0          # FusedPipeline nodes in the final plan
+    fused_ops: int = 0       # operator nodes absorbed into any fused construct
+    barrier_groups: int = 0  # barrier-fused nodes in the final plan
+    producer_ops: int = 0    # stages absorbed on the producer side of a barrier
+    consumer_ops: int = 0    # stages absorbed on the consumer side of a barrier
 
 
-def fuse_pipelines(node: alg.Node) -> tuple[alg.Node, FusionStats]:
+def fuse_pipelines(node: alg.Node,
+                   history: "frozenset | set | None" = None) -> tuple[alg.Node, FusionStats]:
     """Collapse maximal chains of row-local operators into ``FusedPipeline``
-    nodes (fixpoint by construction: one top-down sweep finds every maximal
-    chain, and fused nodes are themselves not fusible into longer chains).
+    nodes, then fuse the surviving chains *through* blocking-operator
+    boundaries (barrier pass) — see the module docstring for the barrier
+    rules.
 
-    Only chains of **two or more** operators fuse — a lone SELECTION keeps its
-    own node (and cache identity), so single-statement plans are unchanged and
-    sub-plan reuse across queries still hits the cache.  A fused group gets
-    one cache entry keyed on the whole chain instead of one per node.
+    Only chains of **two or more** operators fuse into a FusedPipeline — a
+    lone SELECTION keeps its own node (and cache identity), so single-statement
+    plans are unchanged and sub-plan reuse across queries still hits the
+    cache.  (A lone row-local op *adjacent to a blocking operator* is still
+    absorbed by the barrier pass: there the win is a saved materialization,
+    not just a saved dispatch.)  A fused group gets one cache entry keyed on
+    the whole chain instead of one per node.
 
     A sub-plan referenced by more than one parent **within** the plan is a
     fusion barrier: absorbing it into each branch's chain would re-execute the
     shared work per branch, where the per-node path evaluates it once and
     serves the other branches from the cache.
+
+    ``history`` (MQO-aware fusion boundaries, paper §6.2.1): structural cache
+    keys of *prior session statements whose results are live* (materialized
+    or in flight — the executor filters; see ``Executor.note_statement``).  A
+    chain never descends through — and the barrier pass never absorbs — a
+    node whose key is in the history: the sub-plan keeps its own identity, is
+    re-fused exactly as the prior statement was (fusion is deterministic),
+    and therefore re-produces the prior statement's cache key, so the
+    materialization cache serves the shared prefix instead of re-executing it
+    inside a bigger fused group.
     """
     stats = FusionStats()
+    history = history or frozenset()
 
     # structural reference counts: how many parent edges point at each
     # (structurally-identified) sub-plan — shared nodes must keep their own
@@ -433,7 +531,8 @@ def fuse_pipelines(node: alg.Node) -> tuple[alg.Node, FusionStats]:
         if alg.fusible(n):
             chain = [n]                      # top-down collection
             tail = n.children[0]
-            while alg.fusible(tail) and refs.get(tail, 0) <= 1:
+            while (alg.fusible(tail) and refs.get(tail, 0) <= 1
+                   and tail.cache_key() not in history):
                 chain.append(tail)
                 tail = tail.children[0]
             if len(chain) >= 2:
@@ -446,4 +545,129 @@ def fuse_pipelines(node: alg.Node) -> tuple[alg.Node, FusionStats]:
         memo[n] = out
         return out
 
-    return visit(node), stats
+    fused = visit(node)
+    return _fuse_barriers(fused, stats, history), stats
+
+
+# -----------------------------------------------------------------------------
+# barrier pass: fuse row-local chains THROUGH blocking operators
+# -----------------------------------------------------------------------------
+def _chain_stages(n: alg.Node) -> tuple | None:
+    """The absorbable stage tuple of ``n``: a FusedPipeline's stages, or a
+    single-op tuple for a lone fusible operator.  None ⇒ not absorbable."""
+    if n.op == "fused_pipeline":
+        return n.params["stages"]
+    if alg.fusible(n):
+        return (alg.Stage(n.op, n.params),)
+    return None
+
+
+def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
+    """Bottom-up pattern match over the chain-fused plan:
+
+      * GROUPBY(chain)           → FusedGroupBy     (producer fusion)
+      * chain(SORT) / chain(JOIN) → FusedSort/Join  (consumer fusion)
+      * chain?(WINDOW(chain?))   → FusedWindow      (pre/post stage fusion)
+
+    A "chain" is a FusedPipeline or a lone fusible op.  Absorption respects
+    the same sharing barriers as chain fusion: a node referenced twice within
+    the plan, or present in the session statement history, keeps its identity.
+    """
+    refs: dict[alg.Node, int] = {}
+    for n in node.walk():
+        for c in n.children:
+            refs[c] = refs.get(c, 0) + 1
+
+    def absorbable(n: alg.Node) -> tuple | None:
+        if refs.get(n, 0) > 1 or n.cache_key() in history:
+            return None
+        return _chain_stages(n)
+
+    def on_absorb(n: alg.Node, side: str, count: int) -> None:
+        if n.op == "fused_pipeline":      # chain group dissolves into barrier
+            stats.groups -= 1
+            stats.fused_ops -= count      # re-attributed below
+        stats.fused_ops += count
+        if side == "producer":
+            stats.producer_ops += count
+        else:
+            stats.consumer_ops += count
+
+    memo: dict[alg.Node, alg.Node] = {}
+
+    def visit(n: alg.Node) -> alg.Node:
+        hit = memo.get(n)
+        if hit is not None:
+            return hit
+        out = rebuild(n, [visit(c) for c in n.children])
+
+        # producer fusion into GROUPBY: the row-local sweep joins the
+        # per-block partial-aggregation program
+        if out.op == "groupby":
+            stages = absorbable(out.children[0])
+            if stages:
+                child = out.children[0]
+                grand = child.children[0]
+                on_absorb(child, "producer", len(stages))
+                stats.barrier_groups += 1
+                out = alg.FusedGroupBy(grand, stages, out.params["keys"],
+                                       out.params["aggs"])
+
+        # producer fusion into WINDOW (no consumer chain above — the
+        # consumer-side variant is handled from the chain node below)
+        elif out.op == "window":
+            stages = absorbable(out.children[0])
+            if stages:
+                child = out.children[0]
+                on_absorb(child, "producer", len(stages))
+                stats.barrier_groups += 1
+                out = alg.FusedWindow(child.children[0], out.params["func"],
+                                      out.params["cols"], out.params["size"],
+                                      out.params["periods"], stages, ())
+
+        # consumer fusion: a chain sitting on a SORT/JOIN/WINDOW
+        chain_stages = _chain_stages(out)
+        if chain_stages:
+            below = out.children[0]
+            if refs.get(below, 0) <= 1 and below.cache_key() not in history:
+                if below.op == "sort":
+                    on_absorb(out, "consumer", len(chain_stages))
+                    stats.barrier_groups += 1
+                    out = alg.FusedSort(below.children[0], below.params["by"],
+                                        below.params["ascending"], chain_stages)
+                elif below.op == "join":
+                    on_absorb(out, "consumer", len(chain_stages))
+                    stats.barrier_groups += 1
+                    out = alg.FusedJoin(below.children[0], below.children[1],
+                                        below.params["on"], below.params["how"],
+                                        below.params["left_on"],
+                                        below.params["right_on"], chain_stages)
+                elif below.op == "window":
+                    # (an absorbable pre-chain would already have turned this
+                    # child into a fused_window in its own visit — see below)
+                    on_absorb(out, "consumer", len(chain_stages))
+                    stats.barrier_groups += 1
+                    out = alg.FusedWindow(below.children[0], below.params["func"],
+                                          below.params["cols"],
+                                          below.params["size"],
+                                          below.params["periods"],
+                                          (), chain_stages)
+                elif below.op == "fused_window" and not below.params["post_stages"]:
+                    # window already producer-fused on the way up: attach the
+                    # consumer chain as its post stages
+                    on_absorb(out, "consumer", len(chain_stages))
+                    out = alg.FusedWindow(below.children[0],
+                                          below.params["func"],
+                                          below.params["cols"],
+                                          below.params["size"],
+                                          below.params["periods"],
+                                          below.params["pre_stages"],
+                                          chain_stages)
+        if out is not n:
+            # a rebuilt node inherits the original's parent-edge count, so a
+            # shared sub-plan stays unabsorbable after its subtree changed
+            refs[out] = refs.get(out, 0) + refs.get(n, 0)
+        memo[n] = out
+        return out
+
+    return visit(node)

@@ -64,6 +64,9 @@ class Session:
             self.executor.submit(node)
         elif self.mode == EvalMode.EAGER:
             self.executor.evaluate(node)
+        # AFTER preparation: this statement becomes an MQO fusion boundary for
+        # *later* plans (§6.2.1), never a barrier against its own fusion
+        self.executor.note_statement(node)
         return node
 
     def collect(self, node: alg.Node) -> Frame:

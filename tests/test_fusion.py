@@ -3,8 +3,9 @@
 Invariants:
   * fused execution of a row-local chain is **byte-identical** to the unfused
     per-node path, over 1×1 and multi-block grids;
-  * the fusion pass only forms groups of ≥ 2 operators and never crosses a
-    blocking operator (groupby/sort/...);
+  * the fusion pass only forms standalone groups of ≥ 2 operators; chains
+    adjacent to a blocking operator fuse INTO it as barrier-fused nodes
+    (see tests/test_blocking_fusion.py for those paths);
   * row-only / col-only repartitioning performs no full-frame concat
     (``to_frame`` is never called) and preserves row order and labels;
   * int⊕int expression arithmetic keeps integer dtypes (no float32 round-trip
@@ -102,14 +103,18 @@ def test_fusion_pass_structure():
     assert out is sel or out == sel
     assert fs.groups == 0
 
-    # blocking operator splits chains
+    # GROUPBY absorbs its producer chain (barrier fusion); the consumer chain
+    # above it stays a plain FusedPipeline (no gather to prune after groupby)
     g = alg.GroupBy(alg.Rename(sel, {"v": "w"}), ("k",), [("w", "sum", "ws")])
     top = alg.Projection(alg.Selection(g, alg.col("ws") > alg.lit(1)), ("k",))
     out, fs = rewrite.fuse_pipelines(top)
-    assert fs.groups == 2 and fs.fused_ops == 4
+    assert fs.groups == 1 and fs.barrier_groups == 1
+    assert fs.producer_ops == 2 and fs.consumer_ops == 0
+    # one-source-of-truth counter invariant: every absorbed op is attributed
+    assert fs.fused_ops == 2 + fs.producer_ops + fs.consumer_ops
     assert out.op == "fused_pipeline"
-    assert out.children[0].op == "groupby"
-    assert out.children[0].children[0].op == "fused_pipeline"
+    assert out.children[0].op == "fused_groupby"
+    assert [s.op for s in out.children[0].stages] == ["selection", "rename"]
     # stages run bottom-up
     assert [s.op for s in out.stages] == ["selection", "projection"]
 
