@@ -11,6 +11,9 @@
                 (also writes BENCH_fusion.json)
   blocking_fusion  barrier fusion through GROUPBY/SORT/JOIN/WINDOW
                 (also writes BENCH_blocking_fusion.json)
+  scheduling    adaptive block scheduling: coalesced pool dispatch +
+                plan-time grid sizing vs per-block dispatch
+                (also writes BENCH_scheduling.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -43,7 +46,7 @@ def main() -> None:
 
     from . import (bench_approx, bench_blocking_fusion, bench_fig6,
                    bench_fusion, bench_opportunistic, bench_reuse,
-                   bench_rewrite, bench_roofline)
+                   bench_rewrite, bench_roofline, bench_scheduling)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -53,6 +56,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "fusion": bench_fusion.run,
         "blocking_fusion": bench_blocking_fusion.run,
+        "scheduling": bench_scheduling.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

@@ -1,12 +1,20 @@
 #!/usr/bin/env bash
-# Tier-1 gate: full test suite + benchmark smoke run (every bench suite
-# executes at tiny sizes; no JSON/artifact overwrite).
-# Usage: scripts/check.sh
+# CI gate.  Fast default: test suite minus the @pytest.mark.slow equivalence
+# sweeps, plus the benchmark smoke run (every bench suite executes at tiny
+# sizes; no JSON/artifact overwrite).
+#
+#   scripts/check.sh          fast gate (-m "not slow" + bench smoke)
+#   scripts/check.sh --full   everything, including the slow sweeps
+#                             (same coverage as tier-1: pytest -x -q)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
 
 # full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
 python -m benchmarks.run --smoke

@@ -540,16 +540,22 @@ class FusedGroupBy(Node):
     """GROUPBY with its row-local producer chain absorbed: ``stages`` run
     bottom-up on each row block inside the same per-partition program that
     computes the ``segment_reduce`` partial aggregates — one dispatch per
-    partition for the whole pre-shuffle stage."""
+    partition for the whole pre-shuffle stage.
+
+    ``grid`` is the plan-time grid preference recorded by the fusion pass
+    (``"workers"``: partial programs want blocks ≈ workers); the physical
+    layer resolves it against the configured pool width
+    (``schedule.preferred_row_parts``)."""
 
     op = "fused_groupby"
     order = "new"
     touches = "both"
 
     def __init__(self, child: Node, stages: Sequence[Stage],
-                 keys: Sequence[Any], aggs: Sequence[tuple]):
+                 keys: Sequence[Any], aggs: Sequence[tuple],
+                 grid: str | None = None):
         super().__init__([child], stages=tuple(stages), keys=tuple(keys),
-                         aggs=tuple(tuple(a) for a in aggs))
+                         aggs=tuple(tuple(a) for a in aggs), grid=grid)
 
     @property
     def stages(self) -> tuple:
@@ -605,19 +611,23 @@ class FusedWindow(Node):
     the same per-block program as the local scan; ``post_stages`` run in the
     same per-block program as the carry application — carry composition at
     partition seams is preserved because the carry combine happens between the
-    two, exactly where the unfused path placed it."""
+    two, exactly where the unfused path placed it.
+
+    ``grid`` is the plan-time grid preference recorded by the fusion pass
+    (``"few_seams"``: every partition seam costs a carry composition)."""
 
     op = "fused_window"
     touches = "both"
 
     def __init__(self, child: Node, func: str, cols: Sequence[Any] | None,
                  size: int | None, periods: int,
-                 pre_stages: Sequence[Stage], post_stages: Sequence[Stage]):
+                 pre_stages: Sequence[Stage], post_stages: Sequence[Stage],
+                 grid: str | None = None):
         assert func in WINDOW_FUNCS, func
         super().__init__([child], func=func, cols=tuple(cols) if cols else None,
                          size=size, periods=periods,
                          pre_stages=tuple(pre_stages),
-                         post_stages=tuple(post_stages))
+                         post_stages=tuple(post_stages), grid=grid)
 
     @property
     def pre_stages(self) -> tuple:

@@ -38,6 +38,7 @@ from . import algebra as alg
 from . import physical, rewrite
 from .frame import Frame
 from .partition import PartitionedFrame, default_grid
+from .schedule import stats_scope
 
 __all__ = ["Executor", "CacheEntry", "ExecStats"]
 
@@ -79,7 +80,15 @@ class ExecStats:
       * ``gather_rows``           — payload rows gathered by SORT/JOIN result
                                     materialization (fused-consumer paths
                                     gather strictly fewer rows than unfused
-                                    ones under selective chains).
+                                    ones under selective chains);
+      * ``dispatches``            — pool tasks submitted on this executor's
+                                    behalf (``schedule.dispatch_blocks``);
+      * ``dispatched_blocks``     — blocks those tasks covered.  With block
+                                    coalescing ``dispatches`` grows with the
+                                    *worker* count while ``dispatched_blocks``
+                                    grows with the *partition* count — their
+                                    ratio ``blocks_per_dispatch`` attributes
+                                    the coalescing win.
 
     Each distinct plan is counted once — re-evaluating a cached statement is
     not new fusion work.
@@ -97,6 +106,12 @@ class ExecStats:
     producer_stage_ops: int = 0
     consumer_stage_ops: int = 0
     gather_rows: int = 0
+    dispatches: int = 0
+    dispatched_blocks: int = 0
+
+    @property
+    def blocks_per_dispatch(self) -> float:
+        return self.dispatched_blocks / max(1, self.dispatches)
 
 
 class Executor:
@@ -262,7 +277,8 @@ class Executor:
                 result = self.frames[node.params["frame_id"]]
             else:
                 inputs = [self._eval(c) for c in node.children]
-                result = physical.run_node(node, inputs, self.stats)
+                with stats_scope(self.stats):
+                    result = physical.run_node(node, inputs, self.stats)
             dt = time.monotonic() - t0
             self.stats.evaluated_nodes += 1
             self._store(key, result, dt)

@@ -284,12 +284,17 @@ class Frame:
         return self.take_rows(idx)
 
     def take_cols(self, idx: Sequence[int]) -> "Frame":
+        # row_domains is a per-ROW vector (the pre-transpose schema): column
+        # selection leaves it intact.  Indexing it by column positions here
+        # used to truncate it silently (ncols ≤ nrows) or crash with an
+        # IndexError (any column index ≥ nrows — e.g. column-repartitioning a
+        # wider-than-tall post-transpose frame).
         idx = list(idx)
         return Frame(
             [self.columns[j] for j in idx],
             self.row_labels,
             self.col_labels.take(np.asarray(idx, dtype=np.int64)),
-            tuple(self.row_domains[j] for j in idx) if self.row_domains else None,
+            self.row_domains,
         )
 
     def col(self, name: Any) -> Column:

@@ -13,8 +13,11 @@ next operator prefers a different scheme.
 Execution model on this CPU container mirrors Modin-on-Ray: each partition's
 work is a jit-compiled function dispatched onto a shared thread pool (XLA
 releases the GIL while executing, so partitions genuinely run in parallel
-across cores).  On the TPU mesh the same grid maps onto (data, model) axes via
-shard_map — see ``physical.py`` and ``launch/dryrun.py``.
+across cores).  Dispatch goes through the scheduling layer
+(``schedule.dispatch_blocks``), which coalesces several blocks into one pool
+task when partitions ≫ workers.  On the TPU mesh the same grid maps onto
+(data, model) axes via shard_map — see ``physical.py`` and
+``launch/dryrun.py``.
 
 The headline trick (paper §4.2 "Supporting billions of columns"): TRANSPOSE is
 a *grid* transpose — each block is transposed locally (a Pallas kernel on
@@ -30,43 +33,36 @@ that lands wholly inside one target group is passed through by identity.
 """
 from __future__ import annotations
 
-import concurrent.futures as _fut
-import os
 from typing import Callable, Sequence
 
 import numpy as np
 
 from .frame import Frame
+from .schedule import dispatch_blocks, get_pool, pool_width
 
 __all__ = ["PartitionedFrame", "default_grid", "get_pool"]
 
-_POOL: _fut.ThreadPoolExecutor | None = None
-
-
-def get_pool() -> _fut.ThreadPoolExecutor:
-    global _POOL
-    if _POOL is None:
-        workers = int(os.environ.get("REPRO_POOL_WORKERS", str(os.cpu_count() or 4)))
-        _POOL = _fut.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="repro")
-    return _POOL
-
 
 def _pmap(fn: Callable, items: Sequence) -> list:
-    """Parallel map over partitions (ordered results)."""
-    items = list(items)
-    if len(items) <= 1:
-        return [fn(x) for x in items]
-    return list(get_pool().map(fn, items))
+    """Parallel map over partitions (ordered results), via the scheduling
+    layer's coalesced dispatch (``schedule.dispatch_blocks``).  Single-item
+    and multi-item workloads take the same path — every block runs on a pool
+    worker — so exception provenance and thread-local device state do not
+    depend on the partition count."""
+    return dispatch_blocks(fn, items)
 
 
 def default_grid(nrows: int, ncols: int, *, min_block_rows: int = 4096,
                  max_row_parts: int | None = None) -> tuple[int, int]:
     """Pick a (row_parts, col_parts) grid for a frame of the given shape.
 
-    Mirrors Modin's default: square-ish grid bounded by core count, with a
-    minimum block height so tiny frames stay single-partition.
+    Mirrors Modin's default: square-ish grid bounded by the *configured pool
+    width* (``schedule.pool_width``, which honors ``REPRO_POOL_WORKERS`` —
+    not ``os.cpu_count()``, which would hand a 4-worker pool on a 64-core box
+    a 64-row-part grid), with a minimum block height so tiny frames stay
+    single-partition.
     """
-    cores = max_row_parts or (os.cpu_count() or 4)
+    cores = max_row_parts or pool_width()
     row_parts = max(1, min(cores, nrows // max(1, min_block_rows)))
     col_parts = 1 if ncols < 64 else min(4, max(1, ncols // 64))
     return row_parts, col_parts

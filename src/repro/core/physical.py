@@ -62,7 +62,9 @@ from . import algebra as alg
 from .dtypes import Domain, common_storage, parse_column, storage_dtype
 from .frame import Column, Frame
 from .labels import CodedLabels, IntLabels, Labels, RangeLabels, labels_from_values
-from .partition import PartitionedFrame, get_pool
+from .partition import PartitionedFrame
+from .schedule import (GRID_PREFS, dispatch_blocks, output_row_parts,
+                       preferred_row_parts)
 from ..kernels import ops as kops
 
 __all__ = ["run_node", "eval_expr", "NULL_CODE"]
@@ -192,7 +194,7 @@ def _selection(pf: PartitionedFrame, predicate) -> PartitionedFrame:
             full = full.concat_cols(pf.parts[i][j])
         keep = _predicate_mask(full, predicate)
         return [blk.filter_rows(keep) for blk in pf.parts[i]]
-    rows = list(get_pool().map(stripe, range(pf.row_parts)))
+    rows = dispatch_blocks(stripe, range(pf.row_parts))
     return PartitionedFrame(rows)
 
 
@@ -209,6 +211,15 @@ def _union(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
     l = left.repartition(col_parts=1)
     r = right.repartition(col_parts=1)
     return PartitionedFrame(l.parts + r.parts)
+
+
+def _output_pf(frame: Frame) -> PartitionedFrame:
+    """Re-grid a blocking operator's materialized output to the pool width
+    (``schedule.output_row_parts``): SORT/JOIN/DIFFERENCE/... build a fresh
+    frame, and handing it downstream as a single block would serialize every
+    later operator.  Small results keep the old single-partition layout."""
+    return PartitionedFrame.from_frame(frame,
+                                       row_parts=output_row_parts(frame.nrows))
 
 
 _HASH_MASK = (1 << 52) - 1  # exactly-representable ints in float64
@@ -289,7 +300,7 @@ def _difference(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedF
     lf, rf = left.to_frame(), right.to_frame()
     lids, rids = _keys_to_ids(_row_keys(lf, None), _row_keys(rf, None))
     keep = ~np.isin(lids, np.unique(rids))
-    return PartitionedFrame.from_frame(lf.filter_rows(keep))
+    return _output_pf(lf.filter_rows(keep))
 
 
 def _drop_duplicates(pf: PartitionedFrame, subset) -> PartitionedFrame:
@@ -298,7 +309,7 @@ def _drop_duplicates(pf: PartitionedFrame, subset) -> PartitionedFrame:
     _, first = np.unique(ids, return_index=True)
     keep = np.zeros(f.nrows, dtype=bool)
     keep[first] = True
-    return PartitionedFrame.from_frame(f.filter_rows(keep))
+    return _output_pf(f.filter_rows(keep))
 
 
 # ---- JOIN -------------------------------------------------------------------
@@ -359,7 +370,7 @@ def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict,
     if stats is not None:
         stats.gather_rows += int(lidx.shape[0])
     out = _assemble_join(lf, rf, lidx, ridx, lvalid, rvalid, drop_right)
-    return PartitionedFrame.from_frame(out)
+    return _output_pf(out)
 
 
 def _gather_join_cols(lf: Frame, rf: Frame, lidx, ridx, lvalid, rvalid,
@@ -413,7 +424,7 @@ def _fused_join(left: PartitionedFrame, right: PartitionedFrame, params: dict,
                          keep_cols=keep_cols, row_labels=row_labels)
     if proj is not None:
         out = out.take_cols(out.col_labels.positions_of(proj))
-    pfo = PartitionedFrame.from_frame(out)
+    pfo = _output_pf(out)
     if rest:
         pfo = pfo.map_blockwise(lambda b: _run_stages_block(b, rest))
     return pfo
@@ -454,8 +465,13 @@ def _groupby(pf: PartitionedFrame, keys: Sequence[Any], aggs: Sequence[tuple]) -
 
     groupby(1) is ``keys == ()``: all rows fall into segment 0 and the combine
     is a pure reduction (any partitioning scheme works — paper's point).
+
+    The working grid adapts to the pool width at plan time (same preference
+    the fusion pass records on ``FusedGroupBy`` — blocks ≈ workers), so a
+    256-partition frame on a 4-worker pool computes ~8 partials, not 256.
     """
-    pf = pf.repartition(col_parts=1)
+    rp = preferred_row_parts(pf.row_parts, GRID_PREFS["groupby"])
+    pf = pf.repartition(row_parts=rp, col_parts=1)
     row_blocks = [row[0].induce() for row in pf.parts]
     return _groupby_blocks(row_blocks, keys, aggs)
 
@@ -605,7 +621,7 @@ def _groupby_with_codes(row_blocks: list[Frame], keys, aggs, codes_per_block,
         block, codes = args
         return _block_partial(block, codes, G, need, presence=drop_empty)
 
-    partials = list(get_pool().map(block_partial, list(zip(row_blocks, codes_per_block))))
+    partials = dispatch_blocks(block_partial, list(zip(row_blocks, codes_per_block)))
     want = need + [_PRESENCE] if drop_empty else need
     combined = _combine_partials(partials, want)
     return _finalize_groupby(combined, row_blocks[0] if row_blocks else None,
@@ -658,7 +674,7 @@ def _finalize_groupby(combined: dict, template: Frame | None, keys, aggs,
     if drop_empty:
         present = np.asarray(combined[("__presence__", "sum")]) > 0
         frame = frame.filter_rows(present)
-    return PartitionedFrame.from_frame(frame)
+    return _output_pf(frame)
 
 
 def _bases_for(func: str) -> tuple[str, ...]:
@@ -677,7 +693,8 @@ def _host_column(values: list, domain: Domain) -> Column:
 
 # ---- FUSED GROUPBY: producer chain inside the partial-aggregation program ----
 def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
-                   keys: Sequence[Any], aggs: Sequence[tuple]) -> PartitionedFrame:
+                   keys: Sequence[Any], aggs: Sequence[tuple],
+                   grid: str | None = None) -> PartitionedFrame:
     """Producer fusion into GROUPBY (Cylon-style local-pattern fusion into the
     shuffle stage): the row-local chain runs inside the groupby's own
     per-block programs instead of materializing between the two.
@@ -712,9 +729,22 @@ def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
                 info = (int(v.min()), int(v.max())) if v.size else "empty"
         return f, info
 
-    results = list(get_pool().map(stage_block, blocks))
+    results = dispatch_blocks(stage_block, blocks)
     staged = [r[0] for r in results]
     infos = [r[1] for r in results]
+
+    # plan-time grid adaptation: regroup the STAGED blocks to the recorded
+    # preference (blocks ≈ workers) before the partial pass.  Staging first
+    # and regridding second is what keeps the fused plan bit-identical to its
+    # unfused counterpart — the unfused GROUPBY receives exactly this staged
+    # block sequence as its materialized input and makes the same regroup
+    # decision, so both paths compute partials over the same row groupings.
+    # (Key spans are global min/max — regrouping cannot change them.)
+    rp = preferred_row_parts(len(staged), grid or GRID_PREFS["fused_groupby"])
+    if rp != len(staged):
+        staged = [row[0] for row in
+                  PartitionedFrame([[b] for b in staged])
+                  .repartition(row_parts=rp).parts]
 
     spans = [i for i in infos if isinstance(i, tuple)]
     if single_key and spans and all(i is not None for i in infos):
@@ -731,7 +761,7 @@ def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
                 return _block_partial(f, codes.astype(np.int32), G, need,
                                       presence=True)
 
-            partials = list(get_pool().map(partial_block, staged))
+            partials = dispatch_blocks(partial_block, staged)
             combined = _combine_partials(partials, need + [_PRESENCE])
             return _finalize_groupby(combined, staged[0], keys, aggs, G,
                                      key_values=[gmin + i for i in range(G)],
@@ -761,7 +791,7 @@ def _sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
     idx = _sort_perm(f, by, ascending)
     if stats is not None:
         stats.gather_rows += int(idx.shape[0])
-    return PartitionedFrame.from_frame(f.take_rows(idx))
+    return _output_pf(f.take_rows(idx))
 
 
 def _split_consumer_stages(stages: Sequence[alg.Stage]):
@@ -800,7 +830,7 @@ def _fused_sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
     g = f.take_cols(f.col_labels.positions_of(proj)) if proj is not None else f
     if stats is not None:
         stats.gather_rows += int(idx.shape[0])
-    out = PartitionedFrame.from_frame(g.take_rows(idx))
+    out = _output_pf(g.take_rows(idx))
     if rest:
         out = out.map_blockwise(lambda b: _run_stages_block(b, rest))
     return out
@@ -815,12 +845,29 @@ def _window_targets(frame: Frame, cols) -> list:
 
 
 def _window(pf: PartitionedFrame, func: str, cols, size, periods,
-            pre: Sequence[alg.Stage] = (), post: Sequence[alg.Stage] = ()) -> PartitionedFrame:
+            pre: Sequence[alg.Stage] = (), post: Sequence[alg.Stage] = (),
+            grid: str | None = None) -> PartitionedFrame:
     """WINDOW, optionally with fused row-local chains: ``pre`` stages run in
     the same per-block program as the local scan, ``post`` stages in the same
     per-block program as the carry application (the carry combine sits between
-    the two, exactly where the unfused path placed it)."""
-    pf = pf.repartition(col_parts=1)
+    the two, exactly where the unfused path placed it).
+
+    The working grid adapts to the pool width at plan time ("few_seams" —
+    every partition boundary costs a carry composition / halo build, so the
+    grid never oversubscribes the worker set by more than the coalescing
+    slack).  Row-dropping pre-stages are staged on the *incoming* grid before
+    the regroup: the unfused plan filters per incoming block and regrids the
+    filtered result, so staging first is what keeps seam placement — and
+    therefore carry composition — bit-identical between the two plans.
+    Row-preserving pre-stages (elementwise map / projection / rename) are
+    pointwise, so they stay fused into the scan program: regridding before or
+    after them lands the seams on the same rows either way."""
+    rp = preferred_row_parts(pf.row_parts, grid or GRID_PREFS["window"])
+    if rp != pf.row_parts and any(st.op == "selection" for st in pre):
+        pf = pf.repartition(col_parts=1).map_blockwise(
+            lambda b: _run_stages_block(b, pre))
+        pre = ()
+    pf = pf.repartition(row_parts=rp, col_parts=1)
 
     if func in ("cumsum", "cummax", "cummin", "cumprod"):
         # cumprod: per-block scan + multiplicative carry (kept exact — no
@@ -898,7 +945,7 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
                   if scanned.nrows else {})
         return scanned, totals, targets
 
-    locals_ = list(get_pool().map(local, blocks))
+    locals_ = dispatch_blocks(local, blocks)
 
     # exclusive combine of block totals → per-block carries (host, tiny)
     carries: list[dict] = []
@@ -924,7 +971,7 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
                             scanned.row_domains)
         return _run_stages_block(scanned, post) if post else scanned
 
-    out = list(get_pool().map(apply, list(zip(locals_, carries))))
+    out = dispatch_blocks(apply, list(zip(locals_, carries)))
     return PartitionedFrame([[b] for b in out])
 
 
@@ -974,7 +1021,7 @@ def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int,
         got = Frame(cols, block.row_labels, block.col_labels, block.row_domains)
         return _run_stages_block(got, post) if post else got
 
-    out = list(get_pool().map(local, list(zip(blocks, halos))))
+    out = dispatch_blocks(local, list(zip(blocks, halos)))
     return PartitionedFrame([[b] for b in out])
 
 
@@ -1126,7 +1173,7 @@ def _from_labels(pf: PartitionedFrame, label: Any) -> PartitionedFrame:
                     labels_from_values([label]).concat(f.col_labels))
         return new
 
-    out = list(get_pool().map(conv, [(row[0], offsets[i]) for i, row in enumerate(pf.parts)]))
+    out = dispatch_blocks(conv, [(row[0], offsets[i]) for i, row in enumerate(pf.parts)])
     return PartitionedFrame([[b] for b in out])
 
 
@@ -1450,7 +1497,8 @@ def run_node(node: alg.Node, inputs: list[PartitionedFrame],
         return _run_fused(inputs[0], node.params["stages"])
     if op == "fused_groupby":
         return _fused_groupby(inputs[0], node.params["stages"],
-                              node.params["keys"], node.params["aggs"])
+                              node.params["keys"], node.params["aggs"],
+                              node.params.get("grid"))
     if op == "fused_sort":
         return _fused_sort(inputs[0], node.params["by"], node.params["ascending"],
                            node.params["stages"], stats)
@@ -1460,7 +1508,8 @@ def run_node(node: alg.Node, inputs: list[PartitionedFrame],
     if op == "fused_window":
         return _window(inputs[0], node.params["func"], node.params["cols"],
                        node.params["size"], node.params["periods"],
-                       node.params["pre_stages"], node.params["post_stages"])
+                       node.params["pre_stages"], node.params["post_stages"],
+                       grid=node.params.get("grid"))
     if op == "selection":
         return _selection(inputs[0], node.params["predicate"])
     if op == "projection":

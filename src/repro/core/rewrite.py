@@ -74,8 +74,10 @@ import dataclasses
 from typing import Any, Callable, Sequence
 
 from . import algebra as alg
+from .schedule import GRID_PREFS
 
-__all__ = ["optimize", "infer_columns", "rebuild", "fuse_pipelines", "FusionStats"]
+__all__ = ["optimize", "infer_columns", "rebuild", "fuse_pipelines",
+           "FusionStats"]
 
 
 # -----------------------------------------------------------------------------
@@ -238,7 +240,8 @@ def _(n, ch):
 
 @_ctor("fused_groupby")
 def _(n, ch):
-    return alg.FusedGroupBy(ch[0], n.params["stages"], n.params["keys"], n.params["aggs"])
+    return alg.FusedGroupBy(ch[0], n.params["stages"], n.params["keys"],
+                            n.params["aggs"], grid=n.params.get("grid"))
 
 
 @_ctor("fused_sort")
@@ -256,7 +259,8 @@ def _(n, ch):
 def _(n, ch):
     return alg.FusedWindow(ch[0], n.params["func"], n.params["cols"],
                            n.params["size"], n.params["periods"],
-                           n.params["pre_stages"], n.params["post_stages"])
+                           n.params["pre_stages"], n.params["post_stages"],
+                           grid=n.params.get("grid"))
 
 
 def rebuild(node: alg.Node, children: Sequence[alg.Node]) -> alg.Node:
@@ -611,7 +615,7 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                 on_absorb(child, "producer", len(stages))
                 stats.barrier_groups += 1
                 out = alg.FusedGroupBy(grand, stages, out.params["keys"],
-                                       out.params["aggs"])
+                                       out.params["aggs"], grid=GRID_PREFS["fused_groupby"])
 
         # producer fusion into WINDOW (no consumer chain above — the
         # consumer-side variant is handled from the chain node below)
@@ -623,7 +627,8 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                 stats.barrier_groups += 1
                 out = alg.FusedWindow(child.children[0], out.params["func"],
                                       out.params["cols"], out.params["size"],
-                                      out.params["periods"], stages, ())
+                                      out.params["periods"], stages, (),
+                                      grid=GRID_PREFS["fused_window"])
 
         # consumer fusion: a chain sitting on a SORT/JOIN/WINDOW
         chain_stages = _chain_stages(out)
@@ -651,7 +656,8 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                                           below.params["cols"],
                                           below.params["size"],
                                           below.params["periods"],
-                                          (), chain_stages)
+                                          (), chain_stages,
+                                          grid=GRID_PREFS["fused_window"])
                 elif below.op == "fused_window" and not below.params["post_stages"]:
                     # window already producer-fused on the way up: attach the
                     # consumer chain as its post stages
@@ -662,7 +668,9 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                                           below.params["size"],
                                           below.params["periods"],
                                           below.params["pre_stages"],
-                                          chain_stages)
+                                          chain_stages,
+                                          grid=below.params.get("grid")
+                                          or GRID_PREFS["fused_window"])
         if out is not n:
             # a rebuilt node inherits the original's parent-edge count, so a
             # shared sub-plan stays unabsorbable after its subtree changed

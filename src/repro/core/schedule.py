@@ -1,0 +1,253 @@
+"""Adaptive block scheduling: the layer between the physical operators and
+the shared thread pool (ROADMAP: "Pool scheduling when partitions ≫ cores").
+
+The paper (§4.2) picks a partitioning scheme per operation; this module makes
+the *runtime* side of that choice adaptive in two ways:
+
+1. **Coalesced dispatch** — :func:`dispatch_blocks` is the single entry point
+   through which per-block work reaches the pool.  When the number of blocks
+   exceeds the worker count, several contiguous blocks are chunked into ONE
+   pool task (a worker runs them back-to-back), so a 256-partition grid on a
+   4-worker pool costs ~8 pool dispatches instead of 256.  Results are always
+   returned in block order, and each block is still processed independently —
+   coalescing is bit-identical to per-block dispatch by construction (asserted
+   property-style in ``tests/test_scheduling.py``).
+
+2. **Plan-time grid sizing** — :func:`pool_width` is the one source of truth
+   for the configured parallelism (``partition.default_grid`` sizes new grids
+   from it instead of ``os.cpu_count()``), and :func:`preferred_row_parts`
+   adapts a blocking operator's working grid to the worker set using the
+   per-operator preference recorded on the plan node by
+   ``rewrite.fuse_pipelines`` (GROUPBY partial programs want blocks ≈ workers;
+   WINDOW carry chains want fewer seams).  On the TPU mesh the same decision
+   becomes the ``shard_map`` grid choice — blocks per core, not blocks per
+   frame.
+
+Every dispatch — including a single-block workload — runs on the pool, so
+exception provenance and thread-local device state are independent of the
+partition count (a single-partition frame used to run inline on the caller
+thread while a two-partition frame ran on pool workers).  The only inline
+path left is the nested-dispatch guard: a call *from* a pool worker runs its
+blocks in place rather than deadlocking on its own pool.
+
+Environment knobs
+-----------------
+======================  =====================================================
+``REPRO_POOL_WORKERS``  worker threads in the shared pool; also the width all
+                        grid-sizing decisions consult (default: CPU count)
+``REPRO_COALESCE``      ``0`` disables coalescing — one pool task per block,
+                        the pre-scheduling behavior (benchmark baseline)
+``REPRO_COALESCE_FACTOR``
+                        pool tasks per worker when coalescing (default 2: a
+                        little slack so an unlucky chunk can't serialize the
+                        whole stage behind one worker)
+``REPRO_ADAPT_GRID``    ``0`` disables plan-time grid adaptation — blocking
+                        operators keep the incoming row grid no matter how
+                        far it oversubscribes the pool
+======================  =====================================================
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import contextvars
+import os
+import threading
+from typing import Callable, Sequence
+
+__all__ = [
+    "get_pool", "pool_width", "reset_pool", "dispatch_blocks",
+    "coalesce_factor", "preferred_row_parts", "output_row_parts",
+    "stats_scope", "GRID_PREFS",
+]
+
+# Per-operator grid preferences (paper §4.2: the partitioning scheme is
+# chosen per operation).  ``rewrite.fuse_pipelines`` records these on
+# barrier-fused plan nodes and the physical layer resolves them — for both
+# fused and unfused paths, so the two always agree on seam placement — via
+# :func:`preferred_row_parts`:
+#   * GROUPBY partial-aggregation programs want blocks ≈ workers (fewer
+#     per-block programs to dispatch and fewer partials to combine);
+#   * WINDOW carry chains want fewer seams (every partition boundary costs a
+#     carry composition).
+GRID_PREFS: dict[str, str] = {
+    "fused_groupby": "workers",
+    "groupby": "workers",
+    "fused_window": "few_seams",
+    "window": "few_seams",
+}
+
+# Pool workers are named with this prefix; the nested-dispatch guard keys on
+# it.  Distinct from the executor's background pool ("repro-bg"), whose
+# threads legitimately dispatch block work here.
+_WORKER_PREFIX = "repro-pool"
+
+_POOL: _fut.ThreadPoolExecutor | None = None
+_POOL_WIDTH: int | None = None
+_POOL_LOCK = threading.Lock()
+
+
+def pool_width() -> int:
+    """The configured pool parallelism — the width every grid-sizing decision
+    consults.  Once the pool exists this is its actual worker count; before
+    that, the width the pool *would* be built with (``REPRO_POOL_WORKERS``,
+    else CPU count)."""
+    if _POOL_WIDTH is not None:
+        return _POOL_WIDTH
+    return max(1, int(os.environ.get("REPRO_POOL_WORKERS",
+                                     str(os.cpu_count() or 4))))
+
+
+def get_pool() -> _fut.ThreadPoolExecutor:
+    global _POOL, _POOL_WIDTH
+    if _POOL is None:
+        with _POOL_LOCK:
+            if _POOL is None:
+                width = pool_width()
+                _POOL = _fut.ThreadPoolExecutor(
+                    max_workers=width, thread_name_prefix=_WORKER_PREFIX)
+                _POOL_WIDTH = width
+    return _POOL
+
+
+def reset_pool() -> None:
+    """Drop the shared pool so the next use rebuilds it from the current
+    environment (tests that change ``REPRO_POOL_WORKERS``).  In-flight tasks
+    finish on the old pool's threads."""
+    global _POOL, _POOL_WIDTH
+    with _POOL_LOCK:
+        if _POOL is not None:
+            _POOL.shutdown(wait=False)
+        _POOL = None
+        _POOL_WIDTH = None
+
+
+def coalesce_factor() -> int:
+    return max(1, int(os.environ.get("REPRO_COALESCE_FACTOR", "2")))
+
+
+def _coalesce_enabled() -> bool:
+    return os.environ.get("REPRO_COALESCE", "") != "0"
+
+
+def _adapt_enabled() -> bool:
+    return os.environ.get("REPRO_ADAPT_GRID", "") != "0"
+
+
+def _in_worker() -> bool:
+    return threading.current_thread().name.startswith(_WORKER_PREFIX)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-stats attribution: the executor installs its ExecStats for the
+# duration of a plan-node evaluation; dispatch_blocks increments whatever is
+# installed on the calling thread (contextvars are thread-local, so
+# concurrent executors don't cross-attribute).
+# ---------------------------------------------------------------------------
+_STATS: contextvars.ContextVar = contextvars.ContextVar(
+    "repro-sched-stats", default=None)
+
+
+class stats_scope:
+    """Context manager: attribute pool dispatches inside the scope to
+    ``stats`` (duck-typed ``ExecStats`` — needs ``dispatches`` and
+    ``dispatched_blocks`` int attributes)."""
+
+    def __init__(self, stats):
+        self._stats = stats
+        self._token = None
+
+    def __enter__(self):
+        self._token = _STATS.set(self._stats)
+        return self._stats
+
+    def __exit__(self, *exc):
+        _STATS.reset(self._token)
+        return False
+
+
+def _chunk_sizes(n: int, tasks: int) -> list[int]:
+    tasks = max(1, min(tasks, n))
+    base, rem = divmod(n, tasks)
+    return [base + (1 if i < rem else 0) for i in range(tasks)]
+
+
+def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None) -> list:
+    """Run ``fn`` over every block on the shared pool; ordered results.
+
+    The single dispatch entry point for per-block work.  When
+    ``len(blocks)`` exceeds ``pool_width() × coalesce_factor()``, contiguous
+    blocks are chunked into one pool task each (block coalescing); otherwise
+    one task per block.  Either way each block is processed independently in
+    block order, so the result is bit-identical to per-block dispatch.
+
+    ``stats`` (or the executor's installed :class:`stats_scope`) receives
+    ``dispatches`` (pool tasks submitted) and ``dispatched_blocks`` (blocks
+    they covered) — ``blocks_per_dispatch`` attributes the coalescing win.
+    """
+    items = list(blocks)
+    n = len(items)
+    if n == 0:
+        return []
+    st = stats if stats is not None else _STATS.get()
+    target = pool_width() * coalesce_factor()
+    if not _coalesce_enabled() or n <= target:
+        chunks = [[x] for x in items]
+    else:
+        chunks, off = [], 0
+        for size in _chunk_sizes(n, target):
+            chunks.append(items[off:off + size])
+            off += size
+    if st is not None:
+        st.dispatches += len(chunks)
+        st.dispatched_blocks += n
+
+    def run_chunk(chunk: list) -> list:
+        return [fn(x) for x in chunk]
+
+    if _in_worker():
+        # nested dispatch from a pool worker: run inline — queueing behind
+        # ourselves on a saturated pool would deadlock
+        return [fn(x) for x in items]
+    out: list = []
+    for res in get_pool().map(run_chunk, chunks):
+        out.extend(res)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plan-time grid sizing
+# ---------------------------------------------------------------------------
+def preferred_row_parts(nblocks: int, prefer: str | None = "workers") -> int:
+    """The row grid a blocking operator should work over, given ``nblocks``
+    incoming row partitions and its recorded preference:
+
+    * ``"workers"`` (GROUPBY partial programs): blocks ≈ workers ×
+      coalesce-factor — each worker gets a couple of per-block programs and
+      the combine folds that many partials instead of hundreds;
+    * ``"few_seams"`` (WINDOW carry chains): blocks == workers — every seam
+      costs a carry composition, so don't make more seams than there are
+      workers to hide them behind;
+    * ``None``: keep the incoming grid.
+
+    Only *coarsens*, and only when the incoming grid oversubscribes the target
+    by more than 2× — mild oversubscription is already absorbed by coalesced
+    dispatch, and regrouping copies row segments, which should only be paid
+    when it retires many per-block programs.  Fused and unfused paths consult
+    the same preference, so plan equivalence is preserved (both sides see the
+    same seams).
+    """
+    if prefer is None or not _adapt_enabled() or nblocks <= 1:
+        return nblocks
+    width = pool_width()
+    target = width if prefer == "few_seams" else width * coalesce_factor()
+    return nblocks if nblocks <= 2 * target else target
+
+
+def output_row_parts(nrows: int, *, min_block_rows: int = 4096) -> int:
+    """Row grid for a blocking operator's *output* (SORT/JOIN/... materialize
+    a fresh frame): bounded by the pool width, with the same minimum block
+    height as ``partition.default_grid`` so small results stay
+    single-partition exactly as before."""
+    if not _adapt_enabled():
+        return 1
+    return max(1, min(pool_width(), nrows // max(1, min_block_rows)))

@@ -8,6 +8,14 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    # scripts/check.sh runs `-m "not slow"` by default and the full suite in
+    # --full mode; tier-1 verify (plain `pytest -x -q`) still runs everything
+    config.addinivalue_line(
+        "markers", "slow: long equivalence sweeps (excluded from the fast "
+                   "check.sh gate; included in tier-1 and check.sh --full)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

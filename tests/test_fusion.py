@@ -286,3 +286,65 @@ def test_int_and_float_literals_do_not_collide_in_caches():
     got_a = ex.evaluate(pa).nrows   # float32: 2**24 + 1 rounds back to 2**24
     got_b = ex.evaluate(pb).nrows   # exact int: no match
     assert (got_a, got_b) == (1, 0)
+
+
+# -----------------------------------------------------------------------------
+# repartition edge cases: zero-row / zero-column frames and post-transpose
+# row_domains through repartition / to_frame round trips
+# -----------------------------------------------------------------------------
+def test_zero_row_frames_survive_repartition_round_trips():
+    f = _mk_frame(30)
+    pf = PartitionedFrame.from_frame(f, row_parts=3)
+    emptied = pf.map_blockwise(lambda b: b.filter_rows(np.zeros(b.nrows, bool)))
+    assert emptied.nrows == 0
+    for rp in (1, 2, 5):
+        out = emptied.repartition(row_parts=rp)
+        g = out.to_frame()
+        assert g.nrows == 0
+        assert g.col_labels.to_list() == f.col_labels.to_list()
+    # column regroup over all-empty stripes keeps the (empty) row structure
+    assert emptied.repartition(col_parts=2).to_frame().nrows == 0
+
+
+def test_zero_col_frames_survive_repartition_round_trips():
+    f = _mk_frame(20)
+    squeezed = PartitionedFrame.from_frame(f, row_parts=2).map_blockwise(
+        lambda b: b.take_cols([]))
+    assert squeezed.ncols == 0 and squeezed.nrows == 20
+    for rp in (1, 3):
+        out = squeezed.repartition(row_parts=rp)
+        g = out.to_frame()
+        # fabricated empty cells must keep the stripe's row count and labels
+        assert g.nrows == 20 and g.ncols == 0
+        assert g.row_labels.to_list() == f.row_labels.to_list()
+    assert squeezed.repartition(col_parts=3).to_frame().ncols == 0
+
+
+def test_take_cols_preserves_row_domains():
+    # take_cols used to index the per-ROW row_domains vector with COLUMN
+    # positions: silent truncation when ncols ≤ nrows, IndexError as soon as
+    # a column index reached nrows (any wider-than-tall post-transpose frame)
+    f = Frame.from_pydict({"a": [1, 2], "b": [3, 4], "c": [5, 6]})
+    doms = (Domain.INT, Domain.INT)
+    g = Frame(f.columns, f.row_labels, f.col_labels, row_domains=doms)
+    took = g.take_cols([1, 2])          # col index 2 ≥ nrows 2: used to raise
+    assert took.row_domains == doms     # per-row vector rides along unchanged
+    assert took.col_labels.to_list() == ["b", "c"]
+
+
+def test_post_transpose_frame_repartitions_by_columns():
+    # end-to-end: a wider-than-tall transpose output (row_domains set) through
+    # a column regroup and a full round trip
+    from repro.core.physical import _transpose
+
+    f = Frame.from_pydict({c: [float(i), float(i + 10)]
+                           for i, c in enumerate("abcde")})   # 2x5
+    t = _transpose(PartitionedFrame.from_frame(f, 1, 1))       # 5x2
+    t2 = _transpose(t)                                         # 2x5, row_domains len 2
+    back = t2.to_frame()
+    assert back.row_domains is not None and len(back.row_domains) == 2
+    pf = PartitionedFrame.from_frame(back, 1, 2)               # used to IndexError
+    assert pf.col_parts == 2
+    round_tripped = pf.repartition(col_parts=1).to_frame().induce()
+    np.testing.assert_allclose(
+        np.asarray(round_tripped.as_matrix()[0]), np.asarray(f.as_matrix()[0]))

@@ -1,0 +1,307 @@
+"""Adaptive block scheduling (``repro.core.schedule``).
+
+Invariants:
+  * coalesced dispatch is **bit-identical** to per-block dispatch — blocks are
+    processed independently in block order, only the pool-task packaging
+    changes (property-style sweeps over MAP/SELECTION/GROUPBY/WINDOW chains,
+    grids both ≪ and ≫ the worker count);
+  * every workload — including a single block — runs on pool workers, so
+    exception provenance and thread-local state don't depend on the partition
+    count (the old ``_pmap`` ran 1-item workloads inline on the caller);
+  * ``default_grid`` sizes from the configured pool width
+    (``REPRO_POOL_WORKERS``), not ``os.cpu_count()``;
+  * plan-time grid adaptation (``preferred_row_parts``) only coarsens, only
+    past 2× oversubscription, and fused plans stay bit-identical to unfused
+    ones under it;
+  * ``ExecStats.dispatches`` / ``dispatched_blocks`` attribute the coalescing
+    win, and the PR-2 ``fused_stage_ops`` counter semantics hold unchanged
+    under coalescing.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import algebra as alg
+from repro.core import rewrite, schedule
+from repro.core.dtypes import Domain
+from repro.core.executor import ExecStats, Executor
+from repro.core.frame import Column, Frame
+from repro.core.partition import PartitionedFrame, default_grid
+from repro.core.physical import _frames_bit_equal
+
+
+@pytest.fixture
+def fresh_pool(monkeypatch):
+    """Rebuild the shared pool around a test that changes scheduling env."""
+    schedule.reset_pool()
+    yield monkeypatch
+    schedule.reset_pool()
+
+
+@pytest.fixture
+def small_pool(monkeypatch):
+    """Pin a 2-worker pool so the partitions ≫ workers regime is exercised
+    regardless of the host's core count — without this, a many-core CI box
+    would never coalesce or coarsen and the equivalence sweeps would compare
+    two identical executions."""
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    yield monkeypatch
+    schedule.reset_pool()
+
+
+def _mk_frame(n, seed=3):
+    rng = np.random.default_rng(seed)
+    return Frame.from_pydict({
+        "k": rng.integers(0, 6, n).tolist(),
+        "v": rng.integers(-100, 100, n).tolist(),
+        "x": rng.standard_normal(n).astype(np.float32).tolist(),
+    })
+
+
+def _scale(name="x"):
+    def fn(cols, frame):
+        out = dict(cols)
+        c = cols[name]
+        out[name] = Column(c.data * 2.0 + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+    return alg.Udf(name=f"sched_scale_{name}", fn=fn,
+                   deps=frozenset([name]), elementwise=True)
+
+
+# -----------------------------------------------------------------------------
+# dispatch_blocks mechanics
+# -----------------------------------------------------------------------------
+def test_dispatch_returns_ordered_results_for_small_and_large_workloads():
+    for n in (1, 3, 100):
+        assert schedule.dispatch_blocks(lambda x: x * x, range(n)) == [
+            i * i for i in range(n)]
+
+
+def test_dispatch_coalesces_past_the_task_target():
+    st = ExecStats()
+    n = schedule.pool_width() * schedule.coalesce_factor() * 8
+    out = schedule.dispatch_blocks(lambda x: x + 1, range(n), stats=st)
+    assert out == list(range(1, n + 1))
+    assert st.dispatched_blocks == n
+    # pool tasks bounded by width × factor, NOT by the block count
+    assert st.dispatches == schedule.pool_width() * schedule.coalesce_factor()
+    assert st.blocks_per_dispatch == n / st.dispatches
+
+
+def test_dispatch_stays_per_block_below_the_target_and_when_disabled(monkeypatch):
+    st = ExecStats()
+    few = schedule.pool_width()           # ≤ width × factor: one task per block
+    schedule.dispatch_blocks(lambda x: x, range(few), stats=st)
+    assert st.dispatches == st.dispatched_blocks == few
+
+    monkeypatch.setenv("REPRO_COALESCE", "0")
+    st2 = ExecStats()
+    many = schedule.pool_width() * schedule.coalesce_factor() * 8
+    schedule.dispatch_blocks(lambda x: x, range(many), stats=st2)
+    assert st2.dispatches == st2.dispatched_blocks == many
+
+
+def test_single_and_multi_block_workloads_share_the_worker_path():
+    """Satellite bugfix: _pmap used to run 1-item workloads inline on the
+    caller thread but multi-item workloads on pool workers — thread-local
+    device state and exception provenance differed by partition count."""
+    def where_am_i(_):
+        return threading.current_thread().name
+
+    solo = schedule.dispatch_blocks(where_am_i, [0])
+    crowd = schedule.dispatch_blocks(where_am_i, range(40))
+    for name in solo + crowd:
+        assert name.startswith("repro-pool"), name
+    assert not threading.current_thread().name.startswith("repro-pool")
+
+
+@pytest.mark.parametrize("nblocks", [1, 40])
+def test_exception_provenance_is_partition_count_independent(nblocks):
+    class Boom(RuntimeError):
+        pass
+
+    def blow(i):
+        if i == nblocks - 1:
+            raise Boom(f"block {i}")
+        return i
+
+    with pytest.raises(Boom, match=f"block {nblocks - 1}"):
+        schedule.dispatch_blocks(blow, range(nblocks))
+
+
+def test_nested_dispatch_from_a_worker_runs_inline_instead_of_deadlocking():
+    def outer(i):
+        return schedule.dispatch_blocks(lambda j: (i, j), range(3))
+
+    # saturate the pool with outer tasks, each dispatching again
+    out = schedule.dispatch_blocks(outer, range(schedule.pool_width() * 4))
+    assert out[0] == [(0, 0), (0, 1), (0, 2)]
+    assert len(out) == schedule.pool_width() * 4
+
+
+# -----------------------------------------------------------------------------
+# pool-width plumbing (the default_grid regression)
+# -----------------------------------------------------------------------------
+def test_default_grid_sizes_from_configured_pool_width(fresh_pool):
+    fresh_pool.setenv("REPRO_POOL_WORKERS", "4")
+    # a frame big enough for 64 parts must still be capped at the POOL width,
+    # no matter how many cores the host reports
+    rp, _cp = default_grid(64 * 4096, 3)
+    assert rp == 4
+    assert schedule.pool_width() == 4
+    assert schedule.get_pool()._max_workers == 4
+
+    fresh_pool.setenv("REPRO_POOL_WORKERS", "16")
+    schedule.reset_pool()
+    rp, _cp = default_grid(64 * 4096, 3)
+    assert rp == 16
+
+
+def test_pool_width_reflects_built_pool_not_later_env(fresh_pool):
+    fresh_pool.setenv("REPRO_POOL_WORKERS", "3")
+    schedule.get_pool()
+    fresh_pool.setenv("REPRO_POOL_WORKERS", "11")
+    # the pool exists: grid decisions must describe the ACTUAL worker set
+    assert schedule.pool_width() == 3
+
+
+# -----------------------------------------------------------------------------
+# plan-time grid sizing
+# -----------------------------------------------------------------------------
+def test_preferred_row_parts_policy(monkeypatch):
+    w = schedule.pool_width()
+    f = schedule.coalesce_factor()
+    # mild oversubscription: keep the grid (coalesced dispatch absorbs it)
+    assert schedule.preferred_row_parts(2 * w * f, "workers") == 2 * w * f
+    # heavy oversubscription: coarsen to the preference target
+    assert schedule.preferred_row_parts(2 * w * f + 1, "workers") == w * f
+    assert schedule.preferred_row_parts(64 * w, "few_seams") == w
+    # never splits, never adapts when told not to
+    assert schedule.preferred_row_parts(1, "workers") == 1
+    assert schedule.preferred_row_parts(64 * w, None) == 64 * w
+    monkeypatch.setenv("REPRO_ADAPT_GRID", "0")
+    assert schedule.preferred_row_parts(64 * w, "workers") == 64 * w
+
+
+def test_fusion_pass_records_grid_preferences():
+    src = alg.Source("f0", nrows=1000, ncols=3)
+    gplan = alg.GroupBy(alg.Map(src, _scale()), ("k",), [("x", "sum", "xs")])
+    fused, _ = rewrite.fuse_pipelines(gplan)
+    assert fused.op == "fused_groupby"
+    assert fused.params["grid"] == "workers"
+
+    wplan = alg.Map(alg.Window(alg.Map(src, _scale()), "cumsum", ("x",)),
+                    _scale())
+    fusedw, _ = rewrite.fuse_pipelines(wplan)
+    assert fusedw.op == "fused_window"
+    assert fusedw.params["grid"] == "few_seams"
+
+
+def test_blocking_outputs_regrid_to_pool_width():
+    n = schedule.pool_width() * 8192
+    pf = PartitionedFrame.from_frame(_mk_frame(n), row_parts=4)
+    store = {"f0": pf}
+    src = alg.Source("f0", nrows=n, ncols=3)
+    ex = Executor(store, optimize=False)
+    out = ex.evaluate(alg.Sort(src, ("v",)))
+    # a big sorted result must not come back as one serializing block
+    assert out.row_parts == schedule.pool_width()
+    small = Executor(store, optimize=False).evaluate(
+        alg.GroupBy(src, ("k",), [("x", "sum", "xs")]))
+    assert small.row_parts == 1   # tiny results keep the old layout
+
+
+# -----------------------------------------------------------------------------
+# scheduling equivalence: coalesced ≡ per-block, adapted ≡ fixed — bit-exact
+# -----------------------------------------------------------------------------
+def _plans(src):
+    ident = _scale()
+    return {
+        "map_chain": alg.Map(alg.Map(src, ident), ident),
+        "map_filter": alg.Selection(alg.Map(src, ident),
+                                    alg.col("v") > alg.lit(0)),
+        "map_filter_groupby": alg.GroupBy(
+            alg.Selection(alg.Map(src, ident), alg.col("v") > alg.lit(0)),
+            ("k",), [("x", "sum", "xs"), ("x", "var", "xv"),
+                     ("v", "count", "vc")]),
+        "window_carry_chain": alg.Map(
+            alg.Window(alg.Selection(src, alg.col("v") % alg.lit(3)
+                                     > alg.lit(0)), "cumsum", ("x",)), ident),
+        "rolling_seams": alg.Window(src, "rolling_mean", ("x",), 7),
+    }
+
+
+def _run(plan, store, optimize=True):
+    ex = Executor(store, optimize=optimize)
+    out = ex.evaluate(plan).to_frame().induce()
+    return out, ex.stats
+
+
+@pytest.mark.parametrize("row_parts", [2, 32])   # ≪ and ≫ the worker count
+def test_coalesced_dispatch_is_bit_identical_to_per_block(small_pool, row_parts):
+    monkeypatch = small_pool
+    f = _mk_frame(6000)
+    store = {"f0": PartitionedFrame.from_frame(f, row_parts=row_parts)}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    for name, plan in _plans(src).items():
+        coalesced, st = _run(plan, store)
+        monkeypatch.setenv("REPRO_COALESCE", "0")
+        per_block, st0 = _run(plan, store)
+        monkeypatch.delenv("REPRO_COALESCE")
+        assert _frames_bit_equal(coalesced, per_block), name
+        assert st.dispatched_blocks == st0.dispatched_blocks, name
+        if (row_parts > schedule.pool_width() * schedule.coalesce_factor()
+                and name != "rolling_seams"):
+            # rolling_seams regrids to "few_seams" before any dispatch, so
+            # there is nothing left for coalescing to pack; every other plan
+            # runs at least one pool round over the incoming grid
+            assert st.dispatches < st0.dispatches, name
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("row_parts", [1, 2, 7, 32, 64])
+def test_scheduling_equivalence_sweep(small_pool, row_parts):
+    """The full sweep: coalesced-vs-per-block AND fused-vs-unfused, with grid
+    adaptation both on and off, bit-exact everywhere (including the PR-2
+    carry-composition seams)."""
+    monkeypatch = small_pool
+    f = _mk_frame(9000, seed=11)
+    store = {"f0": PartitionedFrame.from_frame(f, row_parts=row_parts)}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    for adapt in ("1", "0"):
+        monkeypatch.setenv("REPRO_ADAPT_GRID", adapt)
+        for name, plan in _plans(src).items():
+            fused, _ = _run(plan, store, optimize=True)
+            unfused, _ = _run(plan, store, optimize=False)
+            monkeypatch.setenv("REPRO_COALESCE", "0")
+            per_block, _ = _run(plan, store, optimize=True)
+            monkeypatch.delenv("REPRO_COALESCE")
+            assert _frames_bit_equal(fused, unfused), (name, adapt)
+            assert _frames_bit_equal(fused, per_block), (name, adapt)
+
+
+# -----------------------------------------------------------------------------
+# ExecStats plumbing + PR-2 counter semantics under coalescing
+# -----------------------------------------------------------------------------
+def test_executor_attributes_dispatches_and_fused_counters_still_hold(small_pool):
+    f = _mk_frame(6000)
+    store = {"f0": PartitionedFrame.from_frame(f, row_parts=32)}
+    src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+    plan = alg.GroupBy(
+        alg.Selection(alg.Map(src, _scale()), alg.col("v") > alg.lit(0)),
+        ("k",), [("x", "sum", "xs")])
+    ex = Executor(store, optimize=True)
+    ex.evaluate(plan)
+    s = ex.stats
+    assert s.dispatches > 0
+    assert s.dispatched_blocks >= 32          # the staged producer sweep
+    assert s.blocks_per_dispatch > 1.0        # coalescing actually engaged
+    # PR-2 one-source-of-truth invariant, unchanged under coalescing
+    pipeline_ops = sum(len(n.params["stages"])
+                      for n in ex._prepared(plan).walk()
+                      if n.op == "fused_pipeline")
+    assert s.fused_stage_ops == (pipeline_ops + s.producer_stage_ops
+                                 + s.consumer_stage_ops)
+    assert s.producer_stage_ops == 2          # map + selection absorbed

@@ -59,6 +59,7 @@ def test_adafactor_runs_and_reduces(tiny):
     assert set(v.keys()) == {"vr", "vc"}
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(tiny):
     """grad accumulation over 4 microbatches == single full-batch step."""
     cfg, model = tiny
