@@ -14,6 +14,8 @@
   scheduling    adaptive block scheduling: coalesced pool dispatch +
                 plan-time grid sizing vs per-block dispatch
                 (also writes BENCH_scheduling.json)
+  dedup         block-parallel + barrier-fused DIFFERENCE/DROP-DUPLICATES
+                vs the serial seed path (also writes BENCH_dedup.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -44,8 +46,8 @@ def main() -> None:
                     help="tiny row counts, no JSON overwrite (CI sanity mode)")
     args, _ = ap.parse_known_args()
 
-    from . import (bench_approx, bench_blocking_fusion, bench_fig6,
-                   bench_fusion, bench_opportunistic, bench_reuse,
+    from . import (bench_approx, bench_blocking_fusion, bench_dedup,
+                   bench_fig6, bench_fusion, bench_opportunistic, bench_reuse,
                    bench_rewrite, bench_roofline, bench_scheduling)
     suites = {
         "fig6": bench_fig6.run,
@@ -57,6 +59,7 @@ def main() -> None:
         "fusion": bench_fusion.run,
         "blocking_fusion": bench_blocking_fusion.run,
         "scheduling": bench_scheduling.run,
+        "dedup": bench_dedup.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

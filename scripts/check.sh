@@ -10,6 +10,16 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# bytecode must never be tracked (a batch slipped into 9172b4e once).
+# No grep -q pipe: under pipefail an early-exit grep can SIGPIPE git ls-files
+# and flip the pipeline status exactly when violations exist.
+tracked_pyc=$(git ls-files -- '*.pyc' '*.pyo' '*__pycache__*')
+if [[ -n "$tracked_pyc" ]]; then
+    echo "ERROR: tracked .pyc/__pycache__ files:" >&2
+    echo "$tracked_pyc" >&2
+    exit 1
+fi
+
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
 else

@@ -34,6 +34,7 @@ __all__ = [
     "Transpose", "Map", "ToLabels", "FromLabels", "Limit",
     "ColumnSort", "ColumnFilter", "Stage", "FusedPipeline",
     "FusedGroupBy", "FusedSort", "FusedJoin", "FusedWindow",
+    "FusedDifference", "FusedDropDuplicates",
     "AGG_FUNCS", "WINDOW_FUNCS", "prefix_safe", "fusible", "FUSIBLE_OPS",
     "BARRIER_FUSED_OPS",
 ]
@@ -638,7 +639,66 @@ class FusedWindow(Node):
         return self.params["post_stages"]
 
 
-BARRIER_FUSED_OPS = ("fused_groupby", "fused_sort", "fused_join", "fused_window")
+class FusedDropDuplicates(Node):
+    """DROP-DUPLICATES with adjacent row-local chains absorbed.
+    ``pre_stages`` (the producer chain) run inside the same per-block program
+    that extracts the equality keys — one dispatch per partition for the whole
+    pre-dedup stage, like ``FusedGroupBy``'s producer sweep.  ``post_stages``
+    (the consumer chain) follow the ``FusedSort``/``FusedJoin`` index-first
+    pattern: leading structured selections AND into the first-occurrence keep
+    mask *before* the survivors are materialized, and a leading projection
+    prunes the filtered blocks.
+
+    ``grid`` is the plan-time grid preference recorded by the fusion pass
+    (``"workers"``: key extraction wants blocks ≈ workers)."""
+
+    op = "fused_drop_duplicates"
+    touches = "both"
+
+    def __init__(self, child: Node, subset: Sequence[Any] | None,
+                 pre_stages: Sequence[Stage], post_stages: Sequence[Stage],
+                 grid: str | None = None):
+        super().__init__([child], subset=tuple(subset) if subset else None,
+                         pre_stages=tuple(pre_stages),
+                         post_stages=tuple(post_stages), grid=grid)
+
+    @property
+    def pre_stages(self) -> tuple:
+        return self.params["pre_stages"]
+
+    @property
+    def post_stages(self) -> tuple:
+        return self.params["post_stages"]
+
+
+class FusedDifference(Node):
+    """DIFFERENCE with adjacent row-local chains absorbed: ``pre_stages`` /
+    ``right_pre_stages`` run inside the left/right per-block key-extraction
+    programs, ``post_stages`` filter the anti-join keep mask before the
+    surviving left rows are materialized (see ``FusedDropDuplicates``)."""
+
+    op = "fused_difference"
+    touches = "both"
+
+    def __init__(self, left: Node, right: Node,
+                 pre_stages: Sequence[Stage],
+                 right_pre_stages: Sequence[Stage],
+                 post_stages: Sequence[Stage], grid: str | None = None):
+        super().__init__([left, right], pre_stages=tuple(pre_stages),
+                         right_pre_stages=tuple(right_pre_stages),
+                         post_stages=tuple(post_stages), grid=grid)
+
+    @property
+    def pre_stages(self) -> tuple:
+        return self.params["pre_stages"]
+
+    @property
+    def post_stages(self) -> tuple:
+        return self.params["post_stages"]
+
+
+BARRIER_FUSED_OPS = ("fused_groupby", "fused_sort", "fused_join", "fused_window",
+                     "fused_difference", "fused_drop_duplicates")
 
 
 # Row-local, order-preserving unary operators whose physical implementation is

@@ -228,7 +228,13 @@ def parse_column(values: Sequence[Any], domain: Domain | None = None) -> ParsedC
     caster = {Domain.BOOL: _parse_bool, Domain.INT: _parse_int, Domain.FLOAT: _parse_float}[dom]
     parsed = _try_parse(vals, caster, storage_dtype(dom))
     if parsed is None:
-        # values do not actually parse in the requested domain → fall back to Σ*
+        # values do not actually parse in the requested domain → fall back to
+        # Σ*.  NOTE: integers beyond int32 deliberately raise OverflowError
+        # here rather than parse — general compute paths push columns through
+        # jnp.asarray (no x64), which would truncate int64 silently.  Paths
+        # that handle wide ints exactly build int64 HOST columns directly
+        # (``physical._host_column`` for groupby key decode; tests/benches
+        # construct ``Column(np.int64…)``).
         return parse_column(vals, Domain.STR)
     data, mask = parsed
     return ParsedColumn(

@@ -77,10 +77,22 @@ class ExecStats:
                                           + producer_stage_ops
                                           + consumer_stage_ops
 
-      * ``gather_rows``           — payload rows gathered by SORT/JOIN result
-                                    materialization (fused-consumer paths
-                                    gather strictly fewer rows than unfused
-                                    ones under selective chains);
+      * ``gather_rows``           — payload rows gathered / materialized by
+                                    SORT/JOIN/DIFFERENCE/DROP-DUPLICATES
+                                    result materialization (fused-consumer
+                                    paths gather strictly fewer rows than
+                                    unfused ones under selective chains);
+      * ``dedup_blocks``          — key-extraction programs DIFFERENCE /
+                                    DROP-DUPLICATES ran (both inputs, for
+                                    DIFFERENCE): per-partition on the
+                                    block-parallel path, 1 (dedup) / 2
+                                    (difference) whole-frame programs on the
+                                    ``REPRO_BLOCK_DEDUP=0`` serial path — the
+                                    count vs the partition count shows which
+                                    path ran;
+      * ``dedup_key_rows``        — rows those key-extraction programs keyed
+                                    (== input rows after any absorbed
+                                    producer chain);
       * ``dispatches``            — pool tasks submitted on this executor's
                                     behalf (``schedule.dispatch_blocks``);
       * ``dispatched_blocks``     — blocks those tasks covered.  With block
@@ -106,6 +118,8 @@ class ExecStats:
     producer_stage_ops: int = 0
     consumer_stage_ops: int = 0
     gather_rows: int = 0
+    dedup_blocks: int = 0
+    dedup_key_rows: int = 0
     dispatches: int = 0
     dispatched_blocks: int = 0
 

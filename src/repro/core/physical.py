@@ -10,9 +10,14 @@ Each logical operator picks a partitioning scheme per the paper's §4.2 table:
   WINDOW                        → blocked scan with cross-block carry
                                   composition (order-exact, still parallel)
   TRANSPOSE                     → per-block kernel transpose + grid swap
-  SORT / JOIN / DIFFERENCE / DROP-DUPLICATES → blocking; key extraction is
-                                  device-side, index building host-side
-                                  (numpy), payload gathers device-side.
+  SORT / JOIN                   → blocking; key extraction is device-side,
+                                  index building host-side (numpy), payload
+                                  gathers device-side.
+  DIFFERENCE / DROP-DUPLICATES  → blocking, but block-parallel: per-block key
+                                  extraction through the scheduling layer,
+                                  one host-side joint factorization, then
+                                  blockwise keep-mask filters — the input is
+                                  never concatenated (no ``to_frame()``).
 
 The same operator bodies double as the shard_map shard-level programs for the
 TPU mesh (see ``launch/dryrun.py`` — the pipeline dry-run lowers MAP/GROUPBY/
@@ -46,6 +51,15 @@ columns, so the materialized frame is built once, post-filter, instead of
 gathered-then-filtered.  ``FUSED_WINDOW`` folds pre-stages into the local-scan
 block program and post-stages into the carry-application block program, with
 the carry combine between them exactly where the unfused path placed it.
+``FUSED_DROP_DUPLICATES`` / ``FUSED_DIFFERENCE`` run the row-local producer
+chain inside the same per-block program that extracts the equality keys, and
+consumer selections/projections filter the *keep mask* before the survivors
+are materialized (the index-first pattern of ``FUSED_SORT``/``FUSED_JOIN``,
+attributed via ``ExecStats.gather_rows``).
+
+``REPRO_BLOCK_DEDUP=0`` routes DIFFERENCE / DROP-DUPLICATES through the
+serial whole-frame path (the pre-PR-4 behavior) — the benchmark baseline and
+an equivalence oracle for the block-parallel path.
 """
 from __future__ import annotations
 
@@ -60,7 +74,7 @@ import numpy as np
 
 from . import algebra as alg
 from .dtypes import Domain, common_storage, parse_column, storage_dtype
-from .frame import Column, Frame
+from .frame import Column, Frame, _host_exec as _frame_host_exec
 from .labels import CodedLabels, IntLabels, Labels, RangeLabels, labels_from_values
 from .partition import PartitionedFrame
 from .schedule import (GRID_PREFS, dispatch_blocks, output_row_parts,
@@ -81,20 +95,23 @@ def _col_values(frame: Frame, name: Any) -> tuple[jnp.ndarray, jnp.ndarray, Colu
 
 
 def _eval_expr_core(expr: alg.Expr, getcol: Callable, nrows: int,
-                    bin_hook: Callable | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+                    bin_hook: Callable | None = None,
+                    full: Callable = jnp.full) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The one expression interpreter, shared by the interpreted per-frame
     path (``eval_expr``) and the jit-traced fused-predicate path
     (``_eval_expr_env``) so the two can never diverge.
 
     ``getcol(name) → (values, mask)``; ``bin_hook(BinExpr) → result | None``
     lets the frame path intercept coded-column comparisons (host code-table
-    translation that cannot run under jit)."""
+    translation that cannot run under jit).  ``full`` builds literal arrays —
+    the host path passes ``np.full`` so wide int64 columns compare in int64
+    (a jax literal would promote the pair through int32 and truncate)."""
     if isinstance(expr, alg.ColRef):
         return getcol(expr.name)
     if isinstance(expr, alg.Lit):
-        return jnp.full((nrows,), expr.value), jnp.ones((nrows,), jnp.bool_)
+        return full((nrows,), expr.value), jnp.ones((nrows,), jnp.bool_)
     if isinstance(expr, alg.UnaryExpr):
-        v, mask = _eval_expr_core(expr.operand, getcol, nrows, bin_hook)
+        v, mask = _eval_expr_core(expr.operand, getcol, nrows, bin_hook, full)
         if expr.op == "~":
             return ~v.astype(jnp.bool_), mask
         if expr.op == "isna":
@@ -107,14 +124,46 @@ def _eval_expr_core(expr: alg.Expr, getcol: Callable, nrows: int,
             hit = bin_hook(expr)
             if hit is not None:
                 return hit
-        lv, lm = _eval_expr_core(expr.left, getcol, nrows, bin_hook)
-        rv, rm = _eval_expr_core(expr.right, getcol, nrows, bin_hook)
+        lv, lm = _eval_expr_core(expr.left, getcol, nrows, bin_hook, full)
+        rv, rm = _eval_expr_core(expr.right, getcol, nrows, bin_hook, full)
         return _bin_numeric(expr.op, lv, lm, rv, rm)
     raise TypeError(expr)
 
 
+def _host_full(shape, value):
+    """Host literal arrays for the interpreted path, typed to match the
+    jit-compiled fused path wherever both can run: in-range int literals in
+    int32 (identical wrap semantics), float literals in float32 (identical
+    arithmetic).  Only out-of-int32-range literals take int64 — they cannot
+    be traced at all, and against a wide int64 host column the int⊕int
+    promotion then compares exactly where a jax literal would truncate."""
+    if not isinstance(value, bool) and isinstance(value, int):
+        dt = np.int32 if -2 ** 31 <= value < 2 ** 31 else np.int64
+        return np.full(shape, value, dtype=dt)
+    if isinstance(value, float):
+        return np.full(shape, value, dtype=np.float32)
+    return np.full(shape, value)
+
+
+def _has_wide_lit(expr: alg.Expr) -> bool:
+    """True if any int literal in ``expr`` falls outside int32 — such a
+    literal cannot be jit-traced (jax is 32-bit here), so predicate chains
+    containing one run on the interpreted host path."""
+    if isinstance(expr, alg.Lit):
+        v = expr.value
+        return (isinstance(v, int) and not isinstance(v, bool)
+                and not -2 ** 31 <= v < 2 ** 31)
+    if isinstance(expr, alg.BinExpr):
+        return _has_wide_lit(expr.left) or _has_wide_lit(expr.right)
+    if isinstance(expr, alg.UnaryExpr):
+        return _has_wide_lit(expr.operand)
+    return False
+
+
 def eval_expr(expr: alg.Expr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Vectorized evaluation → (values, valid_mask) device arrays."""
+    host = _frame_host_exec()
+
     def getcol(name):
         data, mask, _ = _col_values(frame, name)
         return data, mask
@@ -129,7 +178,8 @@ def eval_expr(expr: alg.Expr, frame: Frame) -> tuple[jnp.ndarray, jnp.ndarray]:
                 return v, c.valid_mask()
         return None
 
-    return _eval_expr_core(expr, getcol, frame.nrows, bin_hook)
+    return _eval_expr_core(expr, getcol, frame.nrows, bin_hook,
+                           _host_full if host else jnp.full)
 
 
 def _lit_to_code(column: Column, value: Any) -> int:
@@ -138,39 +188,87 @@ def _lit_to_code(column: Column, value: Any) -> int:
     return table.index(key) if key in table else -2  # -2 never matches
 
 
+def _wide_host_int(a) -> bool:
+    """True for a 64-bit integer HOST array — the one operand kind that must
+    never meet jax arithmetic (canonicalization truncates int64 → int32)."""
+    return (isinstance(a, np.ndarray) and a.dtype.kind in "iu"
+            and a.dtype.itemsize > 4)
+
+
 def _bin_numeric(op: str, lv, lm, rv, rm) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Binary op over (values, mask) pairs.  int⊕int stays in integer dtypes
     for ``+ - * % //`` and comparisons — a float32 round-trip corrupts values
     above 2²⁴ (int32 storage holds up to 2³¹−1).  Like numpy/pandas integer
-    dtypes, ``+ - *`` wrap on int32 overflow; ``% //`` by zero yield null."""
+    dtypes, ``+ - *`` wrap on int32 overflow; ``% //`` by zero yield null.
+    A wide int64 host operand pins the pair to host numpy (a mixed np/jax op
+    would canonicalize the wide side through int32 and truncate)."""
     mask = lm & rm
     if op in ("&", "|"):
         lb, rb = lv.astype(jnp.bool_), rv.astype(jnp.bool_)
         return (lb & rb if op == "&" else lb | rb), mask
     both_int = (jnp.issubdtype(lv.dtype, jnp.integer)
                 and jnp.issubdtype(rv.dtype, jnp.integer))
+    if both_int and (_wide_host_int(lv) or _wide_host_int(rv)):
+        lv = np.asarray(lv, dtype=np.int64)
+        rv = np.asarray(rv, dtype=np.int64)
     if op in ("+", "-", "*", "%", "//") and both_int:
-        if op in ("%", "//"):
-            # int division by 0 is XLA-defined garbage (unlike float inf/nan):
-            # mark those rows null instead of surfacing a plausible integer
-            mask = mask & (rv != 0)
-        out = {"+": lv + rv, "-": lv - rv, "*": lv * rv,
-               "%": jnp.mod(lv, rv), "//": jnp.floor_divide(lv, rv)}[op]
-        return out, mask
+        if op == "+":
+            return lv + rv, mask
+        if op == "-":
+            return lv - rv, mask
+        if op == "*":
+            return lv * rv, mask
+        # int division by 0 is XLA-defined garbage (unlike float inf/nan):
+        # mark those rows null instead of surfacing a plausible integer.  On
+        # the host-numpy substrate a zero divisor would also warn, so feed
+        # the masked slots a dummy 1 (their values are never observed).
+        mask = mask & (rv != 0)
+        if isinstance(lv, np.ndarray) and isinstance(rv, np.ndarray):
+            rv = np.where(rv == 0, np.ones((), rv.dtype), rv)
+            return (np.mod(lv, rv) if op == "%"
+                    else np.floor_divide(lv, rv)), mask
+        return (jnp.mod(lv, rv) if op == "%"
+                else jnp.floor_divide(lv, rv)), mask
     if op in ("+", "-", "*", "/", "%", "//"):
-        lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
-        out = {"+": lf + rf, "-": lf - rf, "*": lf * rf, "/": lf / rf,
-               "%": jnp.mod(lf, rf), "//": jnp.floor_divide(lf, rf)}[op]
+        lf, rf = _as_float_pair(lv, rv)
+        if op in ("%", "//"):
+            if isinstance(lf, np.ndarray) and lf.dtype.itemsize > 4:
+                # the wide/f64 pair stays on host numpy end to end (jax mod
+                # would truncate it back through f32); numpy warns where XLA
+                # silently produces nan, so mute — the nan itself is kept
+                with np.errstate(all="ignore"):
+                    out = np.mod(lf, rf) if op == "%" else np.floor_divide(lf, rf)
+            else:
+                out = jnp.mod(lf, rf) if op == "%" else jnp.floor_divide(lf, rf)
+        else:
+            out = {"+": lf + rf, "-": lf - rf,
+                   "*": lf * rf, "/": lf / rf}[op]
         return out, mask
     if both_int:
         lf, rf = lv, rv
     else:
-        lf, rf = lv.astype(jnp.float32), rv.astype(jnp.float32)
+        lf, rf = _as_float_pair(lv, rv)
     out = {
         "==": lf == rf, "!=": lf != rf, "<": lf < rf,
         "<=": lf <= rf, ">": lf > rf, ">=": lf >= rf,
     }[op]
     return out, mask
+
+
+def _as_float_pair(lv, rv):
+    """Float substrate for a mixed binary op: float32 (device semantics,
+    matching the jit-compiled fused path) unless either operand carries
+    64-bit storage — then float64 on HOST numpy, the promotion numpy/pandas
+    apply to int64⊕float (jax would truncate both sides through 32 bits).
+    64-bit operands never reach the jit trace (the fused predicate path
+    guards them out), so fused and unfused plans still agree."""
+    try:
+        wide = lv.dtype.itemsize > 4 or rv.dtype.itemsize > 4
+    except AttributeError:
+        wide = False
+    if wide:
+        return np.asarray(lv, np.float64), np.asarray(rv, np.float64)
+    return lv.astype(jnp.float32), rv.astype(jnp.float32)
 
 
 def _predicate_mask(frame: Frame, predicate) -> np.ndarray:
@@ -213,16 +311,23 @@ def _union(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
     return PartitionedFrame(l.parts + r.parts)
 
 
-def _output_pf(frame: Frame) -> PartitionedFrame:
-    """Re-grid a blocking operator's materialized output to the pool width
-    (``schedule.output_row_parts``): SORT/JOIN/DIFFERENCE/... build a fresh
-    frame, and handing it downstream as a single block would serialize every
-    later operator.  Small results keep the old single-partition layout."""
-    return PartitionedFrame.from_frame(frame,
-                                       row_parts=output_row_parts(frame.nrows))
+def _output_pf(out: Frame | PartitionedFrame) -> PartitionedFrame:
+    """Re-grid a blocking operator's output to the pool width
+    (``schedule.output_row_parts``): SORT/JOIN/... build a fresh frame, and
+    handing it downstream as a single block would serialize every later
+    operator.  Small results keep the old single-partition layout.  A
+    PartitionedFrame input (DIFFERENCE / DROP-DUPLICATES keep the partitioned
+    form all the way through) re-grids via the zero-copy segment regroup
+    instead of a concat + re-split."""
+    if isinstance(out, PartitionedFrame):
+        return out.repartition(row_parts=output_row_parts(out.nrows),
+                               col_parts=1)
+    return PartitionedFrame.from_frame(out,
+                                       row_parts=output_row_parts(out.nrows))
 
 
 _HASH_MASK = (1 << 52) - 1  # exactly-representable ints in float64
+_WIDE_INT_LIMIT = 1 << 53   # |v| beyond this, float64 merges distinct int64s
 
 
 def _fnv64(s: str) -> int:
@@ -233,14 +338,70 @@ def _fnv64(s: str) -> int:
     return h
 
 
-def _row_keys(frame: Frame, subset: Sequence[Any] | None) -> np.ndarray:
+def _hash_wide_ints(v: np.ndarray) -> np.ndarray:
+    """splitmix64-style mix of int64 key values, masked into the float64-exact
+    range: keys for integers float64 cannot represent (a plain cast collides
+    2**53 with 2**53 + 1).  Like the coded-column value hash, equality is
+    probabilistic with a ~2**-52 per-pair collision chance — distinct wide
+    keys separate, at the same odds strings already accept."""
+    z = v.astype(np.int64).view(np.uint64).copy()
+    z += np.uint64(0x9E3779B97F4A7C15)
+    z ^= z >> np.uint64(30)
+    z *= np.uint64(0xBF58476D1CE4E5B9)
+    z ^= z >> np.uint64(27)
+    z *= np.uint64(0x94D049BB133111EB)
+    z ^= z >> np.uint64(31)
+    return (z & np.uint64(_HASH_MASK)).astype(np.float64)
+
+
+def _wide_key_values(arr: np.ndarray) -> np.ndarray:
+    """Key values for a column at a wide-flagged position.  Integer (and
+    bool) storage hashes directly.  A float/other column sharing the position
+    (the OTHER frame's column was the wide one) hashes only its *integral*
+    in-int64-range values — ``5.0`` must still equal int ``5`` — while
+    fractional and non-finite values keep their raw float64 form: hash
+    outputs are integers, so a fractional value can never falsely equal one."""
+    if arr.dtype.kind in "iub":
+        return _hash_wide_ints(arr)
+    f = np.asarray(arr, dtype=np.float64)
+    intlike = np.isfinite(f) & (np.floor(f) == f) & (np.abs(f) < 2.0 ** 63)
+    hashed = _hash_wide_ints(np.where(intlike, f, 0.0).astype(np.int64))
+    return np.where(intlike, hashed, f)
+
+
+def _wide_int_flags(frame: Frame, subset: Sequence[Any] | None) -> np.ndarray:
+    """Per-key-column bool: INT column holding values outside ±2**53 (only
+    possible with int64 host storage — int32 device storage can't reach it).
+    Every frame participating in one joint factorization must agree on these
+    flags, or a wide column would hash on one side and value-cast on the
+    other; callers OR the flags across frames/blocks before ``_row_keys``."""
+    cols = frame.columns if subset is None else [frame.col(n) for n in subset]
+    out = np.zeros(len(cols), dtype=bool)
+    for i, c in enumerate(cols):
+        # dtype check BEFORE np.asarray: only host int64 storage can be wide,
+        # and materializing int32 device columns here would pay a per-column
+        # per-block device→host copy just to skip them
+        if c.domain is not Domain.INT or c.data.dtype.itemsize <= 4:
+            continue
+        v = np.asarray(c.data)
+        if c.mask is not None:
+            v = v[np.asarray(c.mask)]
+        if v.size and bool(((v > _WIDE_INT_LIMIT) | (v < -_WIDE_INT_LIMIT)).any()):
+            out[i] = True
+    return out
+
+
+def _row_keys(frame: Frame, subset: Sequence[Any] | None,
+              wide: np.ndarray | None = None) -> np.ndarray:
     """Normalized per-row key matrix (host) for equality (dedup / difference /
     join / groupby).  Coded (Σ*) columns map through a *value* hash so keys
     compare correctly across frames with different dictionaries; numerics are
-    their float64 values; nulls are NaN (never equal a valid key)."""
+    their float64 values; nulls are NaN (never equal a valid key).  ``wide``
+    (from ``_wide_int_flags``, OR-ed across all frames being compared) routes
+    int64 columns exceeding the float64-exact range through the hash path."""
     cols = frame.columns if subset is None else [frame.col(n) for n in subset]
     mats = []
-    for c in cols:
+    for i, c in enumerate(cols):
         if c.domain.is_coded:
             table = c.dictionary or ()
             lut = np.asarray([float(_fnv64(str(v)) & _HASH_MASK) for v in table]
@@ -248,6 +409,8 @@ def _row_keys(frame: Frame, subset: Sequence[Any] | None) -> np.ndarray:
             codes = np.asarray(c.data)
             v = lut[np.clip(codes, 0, len(lut) - 1)]
             v = np.where(codes >= 0, v, np.nan)
+        elif wide is not None and bool(wide[i]):
+            v = _wide_key_values(np.asarray(c.data))
         else:
             v = np.asarray(c.data, dtype=np.float64)
         if c.mask is not None:
@@ -283,12 +446,49 @@ def _keys_to_ids(*key_mats: np.ndarray) -> list[np.ndarray]:
     all_rows = np.concatenate(key_mats, axis=0)
     # use bit-view so NaN == NaN for grouping purposes
     view = all_rows.view(np.int64).reshape(all_rows.shape)
-    if view.shape[1] == 1:
+    n, ncols = view.shape
+    if ncols == 0:
+        # no key columns: every row carries the same (empty) key
+        inv = np.zeros(n, dtype=np.int64)
+    elif ncols == 1:
         # single-key fast path: 1-D unique (axis=0 unique void-sorts, ~30×
         # slower — this is the groupby(n) hot path)
         _, inv = np.unique(view[:, 0], return_inverse=True)
     else:
-        _, inv = np.unique(view, axis=0, return_inverse=True)
+        # multi-key: column-wise factorization — k cheap 1-D uniques instead
+        # of one void-sorted row unique (~30× constant).  Exact, no hashing.
+        # The per-column uniques go through the pool (numpy's sort drops the
+        # GIL, so the columns genuinely factorize in parallel).
+        def col_inv(j: int):
+            _, invj = np.unique(view[:, j], return_inverse=True)
+            return (invj.astype(np.int64),
+                    int(invj.max()) + 1 if invj.size else 1)
+
+        # attribute=False: these tasks are key COLUMNS, not row blocks — they
+        # must not skew the row-block scheduling counters
+        per_col = dispatch_blocks(col_inv, range(ncols), attribute=False)
+        invs = [p[0] for p in per_col]
+        cards = [p[1] for p in per_col]
+        space = 1
+        for c in cards:
+            space *= c
+        if space < 2 ** 62:
+            # mixed-radix combine in ONE pass + one final unique: the code
+            # (…(inv0·c1 + inv1)·c2 + inv2…) is the lexicographic rank in
+            # the per-column rank space, so equal rows get equal codes
+            code = invs[0]
+            for invj, c in zip(invs[1:], cards[1:]):
+                code = code * np.int64(c) + invj
+            _, inv = np.unique(code, return_inverse=True)
+        else:
+            # huge code space: re-densify after every combine — the pair
+            # code (prefix id × stride + column id) then never overflows
+            # int64 because both factors are < n ≤ 2**31-ish
+            inv = invs[0]
+            for invj, c in zip(invs[1:], cards[1:]):
+                _, inv = np.unique(inv * np.int64(c) + invj,
+                                   return_inverse=True)
+                inv = inv.astype(np.int64)
     out, off = [], 0
     for m in key_mats:
         out.append(inv[off:off + m.shape[0]].astype(np.int64))
@@ -296,20 +496,218 @@ def _keys_to_ids(*key_mats: np.ndarray) -> list[np.ndarray]:
     return out
 
 
-def _difference(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
-    lf, rf = left.to_frame(), right.to_frame()
-    lids, rids = _keys_to_ids(_row_keys(lf, None), _row_keys(rf, None))
+# ---- DIFFERENCE / DROP-DUPLICATES -------------------------------------------
+# Block-parallel local-dedup → joint-factorize → blockwise-filter (the
+# local-pattern decomposition Perera et al. describe for distinct/set ops):
+# per-block key extraction runs through ``schedule.dispatch_blocks``, the
+# per-block key matrices are jointly factorized in one host pass, and the
+# first-occurrence / anti-join keep masks are applied blockwise — the input
+# keeps its partitioned form end to end (no ``to_frame()`` concat).
+
+
+def _block_dedup_enabled() -> bool:
+    """``REPRO_BLOCK_DEDUP=0`` falls back to the serial whole-frame path (the
+    pre-PR-4 seed behavior) — benchmark baseline and equivalence oracle."""
+    return os.environ.get("REPRO_BLOCK_DEDUP", "") != "0"
+
+
+def _dedup_grid_blocks(pf: PartitionedFrame, grid: str | None,
+                       pref_key: str) -> list[Frame]:
+    """Full-width row blocks coarsened to the recorded grid preference (key
+    extraction wants blocks ≈ workers: fewer per-block fixed costs — LUT
+    builds, key-matrix stacks — and fewer pieces in the joint factorization).
+    Unlike GROUPBY partials or WINDOW seams, dedup results are invariant to
+    the blocking (keys are per-row, the factorization is joint), so the
+    regrid may precede the absorbed producer chain: fused and unfused plans
+    stay bit-identical on ANY grid, which lets the producer sweep and the key
+    extraction share one pool round."""
+    pf1 = pf.repartition(col_parts=1)
+    rp = preferred_row_parts(pf1.row_parts, grid or GRID_PREFS[pref_key])
+    if rp != pf1.row_parts:
+        pf1 = pf1.repartition(row_parts=rp)
+    return [row[0] for row in pf1.parts]
+
+
+def _key_block(args) -> tuple[Frame, np.ndarray, np.ndarray, np.ndarray | None]:
+    """The per-block key-extraction program, ONE dispatch per partition: run
+    the absorbed producer chain, induce, flag wide ints, build the key
+    matrix, and evaluate pushable consumer predicates (row-local ⇒ legal on
+    the pre-filter block, exactly like ``_fused_sort`` evaluates them on the
+    unsorted frame)."""
+    block, subset, stages, preds = args
+    f = (_run_stages_block(block, stages) if stages else block).induce()
+    flags = _wide_int_flags(f, subset)
+    mat = _row_keys(f, subset, flags)
+    keep = None
+    if preds:
+        keep = np.asarray(_fused_selection_mask(preds, f), dtype=bool)
+    return f, flags, mat, keep
+
+
+def _joint_key_mats(results, subset):
+    """OR the per-block wide-int flags and re-key the (rare) blocks whose
+    local decision disagrees — every block in one joint factorization must
+    hash-or-cast each column identically (see ``_wide_int_flags``)."""
+    frames = [r[0] for r in results]
+    flags = [r[1] for r in results]
+    mats = [r[2] for r in results]
+    keeps = [r[3] for r in results]
+    joint = np.zeros_like(flags[0])
+    for fl in flags:
+        joint = joint | fl
+    if joint.any():
+        # re-key through the pool: serially re-keying the disagreeing blocks
+        # would undo the block parallelism exactly on the wide-int inputs
+        # this reconciliation exists for
+        redo = [i for i, fl in enumerate(flags)
+                if not bool((fl == joint).all())]
+        fixed = dispatch_blocks(
+            lambda i: _row_keys(frames[i], subset, joint), redo)
+        for i, m in zip(redo, fixed):
+            mats[i] = m
+    return frames, mats, keeps
+
+
+def _apply_keep_blocks(frames: Sequence[Frame], keeps: Sequence[np.ndarray],
+                       proj) -> PartitionedFrame:
+    """Blockwise keep-mask filter (+ gather-time projection): the survivors
+    are materialized once, post-filter, in their original partitioned form."""
+    def filt(args):
+        f, keep = args
+        g = f.filter_rows(keep)
+        if proj is not None:
+            g = _project_block(g, proj)
+        return g
+
+    out = dispatch_blocks(filt, list(zip(frames, keeps)))
+    return PartitionedFrame([[b] for b in out])
+
+
+def _dedup_finish(pfo: PartitionedFrame, rest) -> PartitionedFrame:
+    out = _output_pf(pfo)
+    if rest:
+        out = out.map_blockwise(lambda b: _run_stages_block(b, rest))
+    return out
+
+
+def _difference(left: PartitionedFrame, right: PartitionedFrame, stats=None,
+                pre_l: Sequence[alg.Stage] = (),
+                pre_r: Sequence[alg.Stage] = (),
+                post: Sequence[alg.Stage] = (),
+                grid: str | None = None) -> PartitionedFrame:
+    """Ordered anti-join on all columns: left rows whose full-row key appears
+    in the right input are dropped, survivors keep left order and labels.
+    Block-parallel: both sides' key extraction runs in ONE pool round, the
+    anti-join membership test is a host np.isin over dense ids, and the keep
+    masks filter the left blocks in place."""
+    if not _block_dedup_enabled():
+        return _difference_serial(left, right, stats, pre_l, pre_r, post)
+    lblocks = _dedup_grid_blocks(left, grid, "difference")
+    rblocks = _dedup_grid_blocks(right, grid, "difference")
+    preds, proj, rest = _split_consumer_stages(post)
+    items = ([(b, None, pre_l, preds) for b in lblocks]
+             + [(b, None, pre_r, ()) for b in rblocks])
+    results = dispatch_blocks(_key_block, items)
+    frames, mats, pred_keeps = _joint_key_mats(results, None)
+    nl = len(lblocks)
+    if stats is not None:
+        stats.dedup_blocks += len(frames)
+        stats.dedup_key_rows += sum(int(m.shape[0]) for m in mats)
+    ids = _keys_to_ids(*mats)
+    lids, rids = ids[:nl], ids[nl:]
+    rset = np.unique(np.concatenate(rids))
+    keeps = []
+    for lid, pk in zip(lids, pred_keeps[:nl]):
+        k = ~np.isin(lid, rset)
+        if pk is not None:
+            k = k & pk
+        keeps.append(k)
+    if stats is not None:
+        stats.gather_rows += int(sum(int(k.sum()) for k in keeps))
+    return _dedup_finish(_apply_keep_blocks(frames[:nl], keeps, proj), rest)
+
+
+def _drop_duplicates(pf: PartitionedFrame, subset, stats=None,
+                     pre: Sequence[alg.Stage] = (),
+                     post: Sequence[alg.Stage] = (),
+                     grid: str | None = None) -> PartitionedFrame:
+    """First-occurrence dedup over the (subset) equality keys, block-parallel
+    (see the section comment above).  A frame with no key columns has nothing
+    to compare, so every row survives — pandas semantics."""
+    if not _block_dedup_enabled():
+        return _drop_duplicates_serial(pf, subset, stats, pre, post)
+    blocks = _dedup_grid_blocks(pf, grid, "drop_duplicates")
+    preds, proj, rest = _split_consumer_stages(post)
+    results = dispatch_blocks(_key_block,
+                              [(b, subset, pre, preds) for b in blocks])
+    frames, mats, pred_keeps = _joint_key_mats(results, subset)
+    total = sum(int(m.shape[0]) for m in mats)
+    if stats is not None:
+        stats.dedup_blocks += len(frames)
+        stats.dedup_key_rows += total
+    if mats[0].shape[1] == 0:
+        keep_global = np.ones(total, dtype=bool)
+    else:
+        all_ids = np.concatenate(_keys_to_ids(*mats))
+        _, first = np.unique(all_ids, return_index=True)
+        keep_global = np.zeros(total, dtype=bool)
+        keep_global[first] = True
+    keeps, off = [], 0
+    for m, pk in zip(mats, pred_keeps):
+        k = keep_global[off:off + m.shape[0]]
+        off += m.shape[0]
+        if pk is not None:
+            k = k & pk
+        keeps.append(k)
+    if stats is not None:
+        stats.gather_rows += int(sum(int(k.sum()) for k in keeps))
+    return _dedup_finish(_apply_keep_blocks(frames, keeps, proj), rest)
+
+
+def _difference_serial(left: PartitionedFrame, right: PartitionedFrame,
+                       stats=None, pre_l=(), pre_r=(), post=()) -> PartitionedFrame:
+    """The seed path: whole-frame concat + single-threaded host numpy."""
+    if pre_l:
+        left = _run_fused(left, pre_l)
+    if pre_r:
+        right = _run_fused(right, pre_r)
+    lf, rf = left.to_frame().induce(), right.to_frame().induce()
+    flags = _wide_int_flags(lf, None) | _wide_int_flags(rf, None)
+    lids, rids = _keys_to_ids(_row_keys(lf, None, flags),
+                              _row_keys(rf, None, flags))
     keep = ~np.isin(lids, np.unique(rids))
-    return _output_pf(lf.filter_rows(keep))
+    if stats is not None:
+        stats.dedup_blocks += 2
+        stats.dedup_key_rows += lf.nrows + rf.nrows
+        stats.gather_rows += int(keep.sum())
+    out = _output_pf(lf.filter_rows(keep))
+    if post:
+        out = out.map_blockwise(lambda b: _run_stages_block(b, post))
+    return out
 
 
-def _drop_duplicates(pf: PartitionedFrame, subset) -> PartitionedFrame:
-    f = pf.to_frame()
-    ids = _keys_to_ids(_row_keys(f, subset))[0]
-    _, first = np.unique(ids, return_index=True)
-    keep = np.zeros(f.nrows, dtype=bool)
-    keep[first] = True
-    return _output_pf(f.filter_rows(keep))
+def _drop_duplicates_serial(pf: PartitionedFrame, subset, stats=None,
+                            pre=(), post=()) -> PartitionedFrame:
+    """The seed path: whole-frame concat + single-threaded host numpy."""
+    if pre:
+        pf = _run_fused(pf, pre)
+    f = pf.to_frame().induce()
+    mat = _row_keys(f, subset, _wide_int_flags(f, subset))
+    if mat.shape[1] == 0:
+        keep = np.ones(f.nrows, dtype=bool)
+    else:
+        ids = _keys_to_ids(mat)[0]
+        _, first = np.unique(ids, return_index=True)
+        keep = np.zeros(f.nrows, dtype=bool)
+        keep[first] = True
+    if stats is not None:
+        stats.dedup_blocks += 1
+        stats.dedup_key_rows += f.nrows
+        stats.gather_rows += int(keep.sum())
+    out = _output_pf(f.filter_rows(keep))
+    if post:
+        out = out.map_blockwise(lambda b: _run_stages_block(b, post))
+    return out
 
 
 # ---- JOIN -------------------------------------------------------------------
@@ -328,7 +726,9 @@ def _join_indices(lf: Frame, rf: Frame, params: dict):
         ridx = np.tile(np.arange(mr), ml)
         return lidx, ridx, None, None, ()
 
-    lids, rids = _keys_to_ids(_row_keys(lf, left_on), _row_keys(rf, right_on))
+    flags = _wide_int_flags(lf, left_on) | _wide_int_flags(rf, right_on)
+    lids, rids = _keys_to_ids(_row_keys(lf, left_on, flags),
+                              _row_keys(rf, right_on, flags))
     groups: dict[int, list[int]] = {}
     for pos, gid in enumerate(rids):
         groups.setdefault(int(gid), []).append(pos)
@@ -498,7 +898,10 @@ def _groupby_blocks(row_blocks: list[Frame], keys: Sequence[Any],
 
     # ---- global key factorization (one column set to host) -----------------
     if keys:
-        key_mats = [_row_keys(b, keys) for b in row_blocks]
+        flags = np.zeros(len(keys), dtype=bool)
+        for b in row_blocks:
+            flags |= _wide_int_flags(b, keys)
+        key_mats = [_row_keys(b, keys, flags) for b in row_blocks]
         ids_per_block = _keys_to_ids(*key_mats)
         all_ids = np.concatenate(ids_per_block)
         all_keys = np.concatenate(key_mats, axis=0)
@@ -687,6 +1090,18 @@ def _bases_for(func: str) -> tuple[str, ...]:
 
 
 def _host_column(values: list, domain: Domain) -> Column:
+    if domain is Domain.INT:
+        ints = [int(v) for v in values if v is not None]
+        if ints and not all(-2 ** 31 <= v < 2 ** 31 for v in ints):
+            # decoded groupby keys beyond int32: exact int64 HOST storage
+            # (parse_column would raise — int64 must never reach jnp.asarray,
+            # which truncates without x64; this column is only inspected /
+            # re-keyed on host)
+            data = np.asarray([0 if v is None else int(v) for v in values],
+                              dtype=np.int64)
+            mask = np.asarray([v is not None for v in values])
+            return Column(data, Domain.INT,
+                          None if mask.all() else mask, None)
     p = parse_column(values, domain)
     return Column(p.data, p.domain, p.mask, p.dictionary)
 
@@ -1306,6 +1721,14 @@ def _fused_selection_mask(preds: Sequence[alg.Expr], frame: Frame) -> np.ndarray
     if any(c.domain.is_coded for c in cols):
         # coded columns need host code-table translation → interpreted path
         return _predicate_mask(frame, combined)
+    if any(c.domain is Domain.INT and c.data.dtype.itemsize > 4
+           for c in cols) or _has_wide_lit(combined):
+        # wide int64 host columns / out-of-int32 literals would truncate (or
+        # fail to trace) through the jit boundary (no x64): the interpreted
+        # path handles them in 64-bit host arithmetic.  dtype check on the
+        # array object itself — np.asarray here would device-transfer every
+        # predicate column on an accelerator backend.
+        return _predicate_mask(frame, combined)
     fn = _compiled_predicate(combined, refs)
     keep = fn([c.data for c in cols], [c.valid_mask() for c in cols])
     return np.asarray(keep)
@@ -1489,9 +1912,11 @@ def _run_fused(pf: PartitionedFrame, stages: Sequence[alg.Stage]) -> Partitioned
 def run_node(node: alg.Node, inputs: list[PartitionedFrame],
              stats=None) -> PartitionedFrame:
     """Dispatch one plan node.  ``stats`` (duck-typed ``ExecStats``) receives
-    physical-level counters — currently ``gather_rows``, the payload rows
-    gathered by SORT/JOIN materialization (the fused-consumer paths gather
-    strictly fewer rows than their unfused counterparts on selective chains)."""
+    physical-level counters — ``gather_rows``, the payload rows gathered /
+    materialized by SORT/JOIN/DIFFERENCE/DROP-DUPLICATES (the fused-consumer
+    paths gather strictly fewer rows than their unfused counterparts on
+    selective chains), and ``dedup_blocks`` / ``dedup_key_rows``, the blocks
+    and rows the block-parallel dedup key extraction processed."""
     op = node.op
     if op == "fused_pipeline":
         return _run_fused(inputs[0], node.params["stages"])
@@ -1510,6 +1935,17 @@ def run_node(node: alg.Node, inputs: list[PartitionedFrame],
                        node.params["size"], node.params["periods"],
                        node.params["pre_stages"], node.params["post_stages"],
                        grid=node.params.get("grid"))
+    if op == "fused_difference":
+        return _difference(inputs[0], inputs[1], stats,
+                           node.params["pre_stages"],
+                           node.params["right_pre_stages"],
+                           node.params["post_stages"],
+                           grid=node.params.get("grid"))
+    if op == "fused_drop_duplicates":
+        return _drop_duplicates(inputs[0], node.params["subset"], stats,
+                                node.params["pre_stages"],
+                                node.params["post_stages"],
+                                grid=node.params.get("grid"))
     if op == "selection":
         return _selection(inputs[0], node.params["predicate"])
     if op == "projection":
@@ -1517,11 +1953,11 @@ def run_node(node: alg.Node, inputs: list[PartitionedFrame],
     if op == "union":
         return _union(inputs[0], inputs[1])
     if op == "difference":
-        return _difference(inputs[0], inputs[1])
+        return _difference(inputs[0], inputs[1], stats)
     if op == "join":
         return _join(inputs[0], inputs[1], node.params, stats)
     if op == "drop_duplicates":
-        return _drop_duplicates(inputs[0], node.params["subset"])
+        return _drop_duplicates(inputs[0], node.params["subset"], stats)
     if op == "groupby":
         return _groupby(inputs[0], node.params["keys"], node.params["aggs"])
     if op == "sort":

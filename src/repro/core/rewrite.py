@@ -47,7 +47,12 @@ local-pattern fusion into the shuffle stage):
     (``FusedSort`` / ``FusedJoin``);
   * WINDOW absorbs chains on both sides — pre-stages join the local-scan
     block program, post-stages join the carry-application block program, with
-    carry composition preserved at partition seams (``FusedWindow``).
+    carry composition preserved at partition seams (``FusedWindow``);
+  * DIFFERENCE / DROP-DUPLICATES absorb chains on both sides — producer
+    chains (either DIFFERENCE input) run inside the per-block key-extraction
+    program, and consumer selections/projections filter the keep mask before
+    the surviving rows are materialized (``FusedDifference`` /
+    ``FusedDropDuplicates``, the SORT/JOIN index-first pattern).
 
 What still blocks fusion, and why:
 
@@ -63,10 +68,9 @@ What still blocks fusion, and why:
     exactly the prior statement's cache key.
   * **Non-row-local operators** — LIMIT (its k is global, not per block),
     non-elementwise MAPs (whole-frame), TRANSPOSE / TOLABELS / FROMLABELS
-    (metadata movement), DIFFERENCE / DROP-DUPLICATES (blocking, and no
-    producer/consumer fused paths are implemented for them), and consumer
-    chains *after* GROUPBY (its output is already aggregate-sized — there is
-    no gather to prune, so plain chain fusion above it is already optimal).
+    (metadata movement), and consumer chains *after* GROUPBY (its output is
+    already aggregate-sized — there is no gather to prune, so plain chain
+    fusion above it is already optimal).
 """
 from __future__ import annotations
 
@@ -261,6 +265,22 @@ def _(n, ch):
                            n.params["size"], n.params["periods"],
                            n.params["pre_stages"], n.params["post_stages"],
                            grid=n.params.get("grid"))
+
+
+@_ctor("fused_drop_duplicates")
+def _(n, ch):
+    return alg.FusedDropDuplicates(ch[0], n.params["subset"],
+                                   n.params["pre_stages"],
+                                   n.params["post_stages"],
+                                   grid=n.params.get("grid"))
+
+
+@_ctor("fused_difference")
+def _(n, ch):
+    return alg.FusedDifference(ch[0], ch[1], n.params["pre_stages"],
+                               n.params["right_pre_stages"],
+                               n.params["post_stages"],
+                               grid=n.params.get("grid"))
 
 
 def rebuild(node: alg.Node, children: Sequence[alg.Node]) -> alg.Node:
@@ -572,6 +592,9 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
       * GROUPBY(chain)           → FusedGroupBy     (producer fusion)
       * chain(SORT) / chain(JOIN) → FusedSort/Join  (consumer fusion)
       * chain?(WINDOW(chain?))   → FusedWindow      (pre/post stage fusion)
+      * chain?(DROPDUP(chain?))  → FusedDropDuplicates  (pre/post fusion)
+      * chain?(DIFFERENCE(chain?, chain?)) → FusedDifference (both inputs'
+        producer chains + the consumer chain)
 
     A "chain" is a FusedPipeline or a lone fusible op.  Absorption respects
     the same sharing barriers as chain fusion: a node referenced twice within
@@ -616,6 +639,35 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                 stats.barrier_groups += 1
                 out = alg.FusedGroupBy(grand, stages, out.params["keys"],
                                        out.params["aggs"], grid=GRID_PREFS["fused_groupby"])
+
+        # producer fusion into DROP-DUPLICATES: the row-local sweep joins the
+        # per-block key-extraction program
+        elif out.op == "drop_duplicates":
+            stages = absorbable(out.children[0])
+            if stages:
+                child = out.children[0]
+                on_absorb(child, "producer", len(stages))
+                stats.barrier_groups += 1
+                out = alg.FusedDropDuplicates(
+                    child.children[0], out.params["subset"], stages, (),
+                    grid=GRID_PREFS["fused_drop_duplicates"])
+
+        # producer fusion into DIFFERENCE: either input's row-local chain
+        # joins that side's per-block key-extraction program
+        elif out.op == "difference":
+            sl = absorbable(out.children[0])
+            sr = absorbable(out.children[1])
+            if sl or sr:
+                l, r = out.children
+                if sl:
+                    on_absorb(l, "producer", len(sl))
+                    l = l.children[0]
+                if sr:
+                    on_absorb(r, "producer", len(sr))
+                    r = r.children[0]
+                stats.barrier_groups += 1
+                out = alg.FusedDifference(l, r, sl or (), sr or (), (),
+                                          grid=GRID_PREFS["fused_difference"])
 
         # producer fusion into WINDOW (no consumer chain above — the
         # consumer-side variant is handled from the chain node below)
@@ -671,6 +723,38 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                                           chain_stages,
                                           grid=below.params.get("grid")
                                           or GRID_PREFS["fused_window"])
+                elif below.op == "drop_duplicates":
+                    on_absorb(out, "consumer", len(chain_stages))
+                    stats.barrier_groups += 1
+                    out = alg.FusedDropDuplicates(
+                        below.children[0], below.params["subset"], (),
+                        chain_stages,
+                        grid=GRID_PREFS["fused_drop_duplicates"])
+                elif below.op == "difference":
+                    on_absorb(out, "consumer", len(chain_stages))
+                    stats.barrier_groups += 1
+                    out = alg.FusedDifference(
+                        below.children[0], below.children[1], (), (),
+                        chain_stages, grid=GRID_PREFS["fused_difference"])
+                elif (below.op == "fused_drop_duplicates"
+                      and not below.params["post_stages"]):
+                    # dedup already producer-fused on the way up: attach the
+                    # consumer chain as its post stages
+                    on_absorb(out, "consumer", len(chain_stages))
+                    out = alg.FusedDropDuplicates(
+                        below.children[0], below.params["subset"],
+                        below.params["pre_stages"], chain_stages,
+                        grid=below.params.get("grid")
+                        or GRID_PREFS["fused_drop_duplicates"])
+                elif (below.op == "fused_difference"
+                      and not below.params["post_stages"]):
+                    on_absorb(out, "consumer", len(chain_stages))
+                    out = alg.FusedDifference(
+                        below.children[0], below.children[1],
+                        below.params["pre_stages"],
+                        below.params["right_pre_stages"], chain_stages,
+                        grid=below.params.get("grid")
+                        or GRID_PREFS["fused_difference"])
         if out is not n:
             # a rebuilt node inherits the original's parent-edge count, so a
             # shared sub-plan stays unabsorbable after its subtree changed

@@ -18,10 +18,17 @@ the *runtime* side of that choice adaptive in two ways:
    from it instead of ``os.cpu_count()``), and :func:`preferred_row_parts`
    adapts a blocking operator's working grid to the worker set using the
    per-operator preference recorded on the plan node by
-   ``rewrite.fuse_pipelines`` (GROUPBY partial programs want blocks ≈ workers;
-   WINDOW carry chains want fewer seams).  On the TPU mesh the same decision
-   becomes the ``shard_map`` grid choice — blocks per core, not blocks per
-   frame.
+   ``rewrite.fuse_pipelines`` (GROUPBY partial programs and DIFFERENCE /
+   DROP-DUPLICATES key extraction want blocks ≈ workers; WINDOW carry chains
+   want fewer seams).  On the TPU mesh the same decision becomes the
+   ``shard_map`` grid choice — blocks per core, not blocks per frame.
+
+Dispatches inside a plan-node evaluation are attributed to the executor's
+``ExecStats`` through :class:`stats_scope` (``dispatches`` /
+``dispatched_blocks`` / ``blocks_per_dispatch``); the block-parallel
+DIFFERENCE / DROP-DUPLICATES paths additionally report ``dedup_blocks`` and
+``dedup_key_rows`` (blocks and rows their per-block key extraction covered)
+so the scheduling win of the dedup grid preference is attributable.
 
 Every dispatch — including a single-block workload — runs on the pool, so
 exception provenance and thread-local device state are independent of the
@@ -68,12 +75,19 @@ __all__ = [
 #   * GROUPBY partial-aggregation programs want blocks ≈ workers (fewer
 #     per-block programs to dispatch and fewer partials to combine);
 #   * WINDOW carry chains want fewer seams (every partition boundary costs a
-#     carry composition).
+#     carry composition);
+#   * DIFFERENCE / DROP-DUPLICATES key extraction wants blocks ≈ workers —
+#     each worker builds a couple of per-block key matrices and the joint
+#     host factorization concatenates that many pieces instead of hundreds.
 GRID_PREFS: dict[str, str] = {
     "fused_groupby": "workers",
     "groupby": "workers",
     "fused_window": "few_seams",
     "window": "few_seams",
+    "fused_difference": "workers",
+    "difference": "workers",
+    "fused_drop_duplicates": "workers",
+    "drop_duplicates": "workers",
 }
 
 # Pool workers are named with this prefix; the nested-dispatch guard keys on
@@ -171,7 +185,8 @@ def _chunk_sizes(n: int, tasks: int) -> list[int]:
     return [base + (1 if i < rem else 0) for i in range(tasks)]
 
 
-def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None) -> list:
+def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
+                    attribute: bool = True) -> list:
     """Run ``fn`` over every block on the shared pool; ordered results.
 
     The single dispatch entry point for per-block work.  When
@@ -183,12 +198,15 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None) -> list:
     ``stats`` (or the executor's installed :class:`stats_scope`) receives
     ``dispatches`` (pool tasks submitted) and ``dispatched_blocks`` (blocks
     they covered) — ``blocks_per_dispatch`` attributes the coalescing win.
+    ``attribute=False`` opts a call out of those counters: pool work whose
+    items are NOT row blocks (e.g. per-column factorization tasks) would
+    otherwise skew the row-block scheduling ratios.
     """
     items = list(blocks)
     n = len(items)
     if n == 0:
         return []
-    st = stats if stats is not None else _STATS.get()
+    st = stats if stats is not None else (_STATS.get() if attribute else None)
     target = pool_width() * coalesce_factor()
     if not _coalesce_enabled() or n <= target:
         chunks = [[x] for x in items]
