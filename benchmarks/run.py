@@ -16,6 +16,9 @@
                 (also writes BENCH_scheduling.json)
   dedup         block-parallel + barrier-fused DIFFERENCE/DROP-DUPLICATES
                 vs the serial seed path (also writes BENCH_dedup.json)
+  outofcore     memory-governed spill/fault residency (REPRO_MEM_BUDGET) +
+                chunk-parallel streaming CSV ingest vs the seed parser
+                (also writes BENCH_outofcore.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -47,8 +50,9 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from . import (bench_approx, bench_blocking_fusion, bench_dedup,
-                   bench_fig6, bench_fusion, bench_opportunistic, bench_reuse,
-                   bench_rewrite, bench_roofline, bench_scheduling)
+                   bench_fig6, bench_fusion, bench_opportunistic,
+                   bench_outofcore, bench_reuse, bench_rewrite,
+                   bench_roofline, bench_scheduling)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -60,6 +64,7 @@ def main() -> None:
         "blocking_fusion": bench_blocking_fusion.run,
         "scheduling": bench_scheduling.run,
         "dedup": bench_dedup.run,
+        "outofcore": bench_outofcore.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

@@ -26,5 +26,39 @@ else
     python -m pytest -x -q -m "not slow"
 fi
 
+# out-of-core spill smoke: a tiny pipeline under REPRO_MEM_BUDGET=1 must
+# complete (spilling every block), and the store teardown must leave ZERO
+# spill files behind.
+spill_tmp=$(mktemp -d)
+REPRO_MEM_BUDGET=1 REPRO_SPILL_DIR="$spill_tmp" REPRO_POOL_WORKERS=2 \
+python - <<'PY'
+import os, tempfile
+from repro.core import EvalMode, Session, set_session
+from repro.core.api import read_csv
+from repro.core.store import get_store, reset_store
+
+csv = os.path.join(tempfile.mkdtemp(), "smoke.csv")
+with open(csv, "w") as f:
+    f.write("k,v,x\n")
+    for i in range(2000):
+        f.write(f"{i % 5},{i % 37},{(i % 8) * 0.25}\n")
+s = set_session(Session(mode=EvalMode.LAZY))
+df = read_csv(csv)
+df["y"] = df["x"] * 2.0 + 1.0
+out = df[df["v"] > 3].groupby("k").agg({"y": "sum"}).drop_duplicates()
+got = out.collect().to_pydict()
+assert len(got["k"]) == 5, got
+assert get_store().stats.spills > 0, "budget=1 never spilled"
+s.close()
+reset_store()
+PY
+leaked=$(find "$spill_tmp" -type f | wc -l)
+if [[ "$leaked" -ne 0 ]]; then
+    echo "ERROR: $leaked leaked spill file(s) under $spill_tmp" >&2
+    find "$spill_tmp" -type f >&2
+    exit 1
+fi
+rm -rf "$spill_tmp"
+
 # full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
 python -m benchmarks.run --smoke

@@ -14,3 +14,4 @@ from .dtypes import Domain  # noqa: F401
 from .frame import Column, Frame  # noqa: F401
 from .partition import PartitionedFrame  # noqa: F401
 from .session import EvalMode, Session, get_session, set_session  # noqa: F401
+from .store import BlockHandle, BlockStore, get_store, reset_store  # noqa: F401

@@ -39,6 +39,7 @@ from . import physical, rewrite
 from .frame import Frame
 from .partition import PartitionedFrame, default_grid
 from .schedule import stats_scope
+from .store import get_store
 
 __all__ = ["Executor", "CacheEntry", "ExecStats"]
 
@@ -100,7 +101,23 @@ class ExecStats:
                                     *worker* count while ``dispatched_blocks``
                                     grows with the *partition* count — their
                                     ratio ``blocks_per_dispatch`` attributes
-                                    the coalescing win.
+                                    the coalescing win;
+      * ``spills`` / ``faults``   — block-store residency transitions
+                                    (``core.store``) that happened while this
+                                    executor's plan nodes ran: blocks written
+                                    to disk under ``REPRO_MEM_BUDGET``
+                                    pressure / loaded back on demand.  With
+                                    the default budget 0 both MUST stay 0 —
+                                    every pre-existing suite asserts that
+                                    (tests/conftest.py), so residency can
+                                    never regress silently;
+      * ``spilled_bytes``         — payload bytes those spills wrote;
+      * ``peak_resident_bytes``   — the store's resident high-water mark over
+                                    this executor's evaluations (0 when the
+                                    store is unbudgeted — nothing is
+                                    tracked).  The out-of-core invariant is
+                                    peak ≤ budget + one in-flight block per
+                                    pool worker.
 
     Each distinct plan is counted once — re-evaluating a cached statement is
     not new fusion work.
@@ -122,6 +139,10 @@ class ExecStats:
     dedup_key_rows: int = 0
     dispatches: int = 0
     dispatched_blocks: int = 0
+    spills: int = 0
+    faults: int = 0
+    spilled_bytes: int = 0
+    peak_resident_bytes: int = 0
 
     @property
     def blocks_per_dispatch(self) -> float:
@@ -256,31 +277,42 @@ class Executor:
 
     def _eval(self, node: alg.Node) -> PartitionedFrame:
         key = node.cache_key()
+        # cache and in-flight are consulted under ONE lock hold (a split
+        # would let a finishing thread fill the cache AND retire its future
+        # between our two looks — re-evaluating the whole plan); the store
+        # benefit stamp runs outside the lock
         with self._lock:
             ent = self.cache.get(key)
+            fut = None
             if ent is not None:
                 ent.hits += 1
                 self.stats.cache_hits += 1
-                return ent.result
-            fut = self._inflight.get(key)
+            else:
+                fut = self._inflight.get(key)
+        if ent is not None:
+            self._sync_store_benefit(ent)
+            return ent.result
         if fut is not None:
             self.stats.inflight_joins += 1
             return fut.result()
 
         promise: _fut.Future = _fut.Future()
         with self._lock:
-            # double-check under lock
+            # double-check under lock: cache → in-flight → register, atomic
             ent = self.cache.get(key)
+            fut = None
             if ent is not None:
                 ent.hits += 1
                 self.stats.cache_hits += 1
-                return ent.result
-            existing = self._inflight.get(key)
-            if existing is not None:
-                fut = existing
             else:
-                self._inflight[key] = promise
-                fut = None
+                existing = self._inflight.get(key)
+                if existing is not None:
+                    fut = existing
+                else:
+                    self._inflight[key] = promise
+        if ent is not None:
+            self._sync_store_benefit(ent)   # same policy as the fast path
+            return ent.result
         if fut is not None:
             self.stats.inflight_joins += 1
             return fut.result()
@@ -291,8 +323,22 @@ class Executor:
                 result = self.frames[node.params["frame_id"]]
             else:
                 inputs = [self._eval(c) for c in node.children]
+                # attribute block-store residency work (spills written /
+                # faults served while THIS node's physical program ran) by
+                # snapshot delta — faults happen on pool worker threads, so
+                # the contextvar scope can't see them
+                s0 = get_store().stats.snapshot()
                 with stats_scope(self.stats):
                     result = physical.run_node(node, inputs, self.stats)
+                s1 = get_store().stats.snapshot()
+                self.stats.spills += s1[0] - s0[0]
+                self.stats.faults += s1[1] - s0[1]
+                self.stats.spilled_bytes += s1[2] - s0[2]
+                # peak is attributed only when THIS node raised the store's
+                # high-water mark — a fresh executor must not inherit an
+                # earlier session's peak from the process-wide gauge
+                if s1[3] > s0[3] and s1[3] > self.stats.peak_resident_bytes:
+                    self.stats.peak_resident_bytes = s1[3]
             dt = time.monotonic() - t0
             self.stats.evaluated_nodes += 1
             self._store(key, result, dt)
@@ -314,7 +360,8 @@ class Executor:
         except Exception:
             nbytes = 1
         with self._lock:
-            self.cache[key] = CacheEntry(result, cost_s, nbytes)
+            ent = CacheEntry(result, cost_s, nbytes)
+            self.cache[key] = ent
             total = sum(e.nbytes for e in self.cache.values())
             if total > self.cache_budget:
                 # evict lowest benefit-density first; never evict sources
@@ -326,6 +373,23 @@ class Executor:
                         continue
                     del self.cache[k]
                     total -= e.nbytes
+        self._sync_store_benefit(ent)
+
+    def _sync_store_benefit(self, ent: CacheEntry) -> None:
+        """Unified budget (§6.2.2 + out-of-core store): stamp a cached
+        result's block handles with the entry's benefit density, so the
+        block store's eviction — which charges cached sub-plans and live
+        partitions against ONE ``REPRO_MEM_BUDGET`` — spills low-value
+        working blocks (benefit 0) before it spills reusable cached
+        results.  Hits raise the density, so a hot entry's blocks climb the
+        residency order over time."""
+        if not get_store().active:
+            return
+        b = ent.benefit_density()
+        for row in ent.result.handles:
+            for h in row:
+                if b > h.benefit:
+                    h.benefit = b
 
     def cache_bytes(self) -> int:
         with self._lock:

@@ -30,6 +30,19 @@ regrouping never touches data (columns are independent arrays, so merging and
 splitting column blocks is pure metadata).  Row regrouping concatenates only
 the block *segments* that actually cross a target boundary; a source block
 that lands wholly inside one target group is passed through by identity.
+
+Out-of-core residency (the block store, ``core.store``)
+-------------------------------------------------------
+Every grid cell is a ``store.BlockHandle``: the block's Frame may be resident
+or spilled to disk under the ``REPRO_MEM_BUDGET`` byte budget.  All grid
+*planning* (row/col sizes, segment maps, pass-through regroup, ``prefix``,
+``nbytes``) runs on handle metadata and never faults a spilled block; only
+per-block *programs* fault, and they do so inside the pool worker that runs
+them (pinned for the duration), so spill I/O overlaps other blocks' compute.
+``parts`` stays the compatible Frame-level view: indexing/iterating it
+resolves exactly the touched block.  With the default budget 0 the handles
+are untracked wrappers and every path below is bit-identical to the
+pre-store behaviour.
 """
 from __future__ import annotations
 
@@ -39,6 +52,7 @@ import numpy as np
 
 from .frame import Frame
 from .schedule import dispatch_blocks, get_pool, pool_width
+from .store import BlockHandle, as_handle, pinned, resolve
 
 __all__ = ["PartitionedFrame", "default_grid", "get_pool"]
 
@@ -50,6 +64,21 @@ def _pmap(fn: Callable, items: Sequence) -> list:
     worker — so exception provenance and thread-local device state do not
     depend on the partition count."""
     return dispatch_blocks(fn, items)
+
+
+def _block_task(fn: Callable[[Frame], Frame]) -> Callable:
+    """Lift a Frame→Frame block program to handles: fault + pin the input in
+    the worker, run, and register the output with the store as it is
+    produced (so a large output is budget-charged immediately and earlier
+    outputs can spill while later blocks still compute).  An identity output
+    keeps its input handle — no double charge."""
+    def run(h):
+        with pinned(h) as f:
+            out = fn(f)
+            if out is f and isinstance(h, BlockHandle):
+                return h
+            return as_handle(out)
+    return run
 
 
 def default_grid(nrows: int, ncols: int, *, min_block_rows: int = 4096,
@@ -99,31 +128,90 @@ def _segments(src_sizes: list[int], tgt_sizes: list[int]) -> list[list[tuple[int
     return out
 
 
-class PartitionedFrame:
-    """A grid of Frame partitions with global row/col split metadata."""
+class _RowView(Sequence):
+    """One grid row as Frames: indexing/iterating resolves (faults) exactly
+    the touched cells.  The handles stay the source of truth."""
 
-    def __init__(self, parts: list[list[Frame]]):
-        assert parts and parts[0], "grid must be non-empty"
-        width = len(parts[0])
-        assert all(len(row) == width for row in parts)
-        self.parts = parts
+    __slots__ = ("_hs",)
+
+    def __init__(self, handles: list):
+        self._hs = handles
+
+    def __len__(self) -> int:
+        return len(self._hs)
+
+    def __getitem__(self, j):
+        if isinstance(j, slice):
+            return [resolve(h) for h in self._hs[j]]
+        return resolve(self._hs[j])
+
+    def __iter__(self):
+        return (resolve(h) for h in self._hs)
+
+
+class _PartsView(Sequence):
+    """The grid as rows of ``_RowView``.  Supports the historical access
+    patterns (``pf.parts[i][j]``, iteration) while resolving only the
+    blocks actually touched; grid-level algebra (union, regroup) runs on
+    ``pf.handles`` instead."""
+
+    __slots__ = ("_rows",)
+
+    def __init__(self, rows: list[list]):
+        self._rows = rows
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [_RowView(r) for r in self._rows[i]]
+        return _RowView(self._rows[i])
+
+    def __iter__(self):
+        return (_RowView(r) for r in self._rows)
+
+
+def _cell_handles(row) -> list:
+    if isinstance(row, _RowView):
+        return list(row._hs)
+    return [as_handle(c) for c in row]
+
+
+class PartitionedFrame:
+    """A grid of Frame partitions (behind store block handles) with global
+    row/col split metadata."""
+
+    def __init__(self, parts):
+        if isinstance(parts, _PartsView):
+            grid = [list(r) for r in parts._rows]
+        else:
+            grid = [_cell_handles(row) for row in parts]
+        assert grid and grid[0], "grid must be non-empty"
+        width = len(grid[0])
+        assert all(len(row) == width for row in grid)
+        self.handles: list[list[BlockHandle]] = grid
 
     # ------------------------------------------------------------------
     @property
+    def parts(self) -> _PartsView:
+        return _PartsView(self.handles)
+
+    @property
     def row_parts(self) -> int:
-        return len(self.parts)
+        return len(self.handles)
 
     @property
     def col_parts(self) -> int:
-        return len(self.parts[0])
+        return len(self.handles[0])
 
     @property
     def row_sizes(self) -> list[int]:
-        return [self.parts[i][0].nrows for i in range(self.row_parts)]
+        return [self.handles[i][0].nrows for i in range(self.row_parts)]
 
     @property
     def col_sizes(self) -> list[int]:
-        return [self.parts[0][j].ncols for j in range(self.col_parts)]
+        return [self.handles[0][j].ncols for j in range(self.col_parts)]
 
     @property
     def nrows(self) -> int:
@@ -156,9 +244,9 @@ class PartitionedFrame:
     def to_frame(self) -> Frame:
         rows = []
         for i in range(self.row_parts):
-            block = self.parts[i][0]
+            block = resolve(self.handles[i][0])
             for j in range(1, self.col_parts):
-                block = block.concat_cols(self.parts[i][j])
+                block = block.concat_cols(resolve(self.handles[i][j]))
             rows.append(block)
         out = rows[0]
         for block in rows[1:]:
@@ -170,22 +258,24 @@ class PartitionedFrame:
     # ------------------------------------------------------------------
     def map_blockwise(self, fn: Callable[[Frame], Frame]) -> "PartitionedFrame":
         """Apply ``fn`` to every block in parallel (embarrassingly parallel
-        operators: MAP, SELECTION with per-row predicates, RENAME...)."""
-        flat = [blk for row in self.parts for blk in row]
-        out = _pmap(fn, flat)
+        operators: MAP, SELECTION with per-row predicates, RENAME...).
+        Spilled inputs fault inside the worker task; outputs register with
+        the store as they are produced."""
+        flat = [h for row in self.handles for h in row]
+        out = _pmap(_block_task(fn), flat)
         w = self.col_parts
         return PartitionedFrame([out[i * w:(i + 1) * w] for i in range(self.row_parts)])
 
     def map_row_blocks(self, fn: Callable[[Frame], Frame]) -> "PartitionedFrame":
         """Apply ``fn`` to each *full-width* row block (row partitioning)."""
         pf = self.repartition(col_parts=1)
-        out = _pmap(fn, [row[0] for row in pf.parts])
+        out = _pmap(_block_task(fn), [row[0] for row in pf.handles])
         return PartitionedFrame([[f] for f in out])
 
     def map_col_blocks(self, fn: Callable[[Frame], Frame]) -> "PartitionedFrame":
         """Apply ``fn`` to each *full-height* column block (column partitioning)."""
         pf = self.repartition(row_parts=1)
-        out = _pmap(fn, pf.parts[0])
+        out = _pmap(_block_task(fn), pf.handles[0])
         return PartitionedFrame([out])
 
     # ------------------------------------------------------------------
@@ -196,7 +286,9 @@ class PartitionedFrame:
 
         Column regrouping is pure metadata (zero-copy); row regrouping copies
         only the segments that cross target-group boundaries and forwards
-        boundary-aligned blocks by identity.  Never calls ``to_frame()``.
+        boundary-aligned blocks by identity — as *handles*, so a spilled
+        block that passes through untouched is never faulted.  Never calls
+        ``to_frame()``.
         """
         rp = row_parts if row_parts is not None else self.row_parts
         cp = col_parts if col_parts is not None else self.col_parts
@@ -210,20 +302,24 @@ class PartitionedFrame:
     def _regroup_cols(self, col_parts: int) -> "PartitionedFrame":
         """Re-split column blocks per row stripe.  Zero-copy: ``concat_cols``
         merges column lists and ``take_cols`` picks column objects — no device
-        array is touched."""
+        array is touched.  Whole-block segments forward the handle."""
         tgt = _split_sizes(self.ncols, col_parts)
         segs = _segments(self.col_sizes, tgt)
-        grid: list[list[Frame]] = []
-        for stripe in self.parts:
-            row: list[Frame] = []
+        grid: list[list] = []
+        for stripe in self.handles:
+            row: list = []
             for seglist in segs:
+                if (len(seglist) == 1 and seglist[0][1] == 0
+                        and seglist[0][2] == stripe[seglist[0][0]].ncols):
+                    row.append(stripe[seglist[0][0]])   # identity: the handle
+                    continue
                 pieces = []
                 for (bj, lo, hi) in seglist:
-                    blk = stripe[bj]
+                    blk = resolve(stripe[bj])
                     pieces.append(blk if (lo == 0 and hi == blk.ncols)
                                   else blk.take_cols(range(lo, hi)))
                 if not pieces:
-                    cell = stripe[0].take_cols([])
+                    cell = resolve(stripe[0]).take_cols([])
                 else:
                     cell = pieces[0]
                     for p in pieces[1:]:
@@ -234,22 +330,27 @@ class PartitionedFrame:
 
     def _regroup_rows(self, row_parts: int) -> "PartitionedFrame":
         """Re-split row blocks per column block.  Segments that cover a whole
-        source block pass through by identity; partial segments slice only
-        their own rows; merged groups concatenate only their own segments —
-        no full-frame concat ever happens."""
+        source block pass through by identity (the *handle* — untouched
+        spilled blocks stay spilled); partial segments slice only their own
+        rows; merged groups concatenate only their own segments — no
+        full-frame concat ever happens."""
         tgt = _split_sizes(self.nrows, row_parts)
         segs = _segments(self.row_sizes, tgt)
-        grid: list[list[Frame]] = []
+        grid: list[list] = []
         for seglist in segs:
-            row: list[Frame] = []
+            row: list = []
             for j in range(self.col_parts):
+                if (len(seglist) == 1 and seglist[0][1] == 0
+                        and seglist[0][2] == self.handles[seglist[0][0]][j].nrows):
+                    row.append(self.handles[seglist[0][0]][j])
+                    continue
                 pieces = []
                 for (bi, lo, hi) in seglist:
-                    blk = self.parts[bi][j]
+                    blk = resolve(self.handles[bi][j])
                     pieces.append(blk if (lo == 0 and hi == blk.nrows)
                                   else blk.take_rows(np.arange(lo, hi)))
                 if not pieces:
-                    cell = self.parts[0][j].take_rows(np.arange(0))
+                    cell = resolve(self.handles[0][j]).take_rows(np.arange(0))
                 else:
                     cell = pieces[0]
                     for p in pieces[1:]:
@@ -262,8 +363,9 @@ class PartitionedFrame:
     # grid transpose (metadata swap; per-block op supplied by caller)
     # ------------------------------------------------------------------
     def transpose_grid(self, block_transpose: Callable[[Frame], Frame]) -> "PartitionedFrame":
-        flat = [self.parts[i][j] for j in range(self.col_parts) for i in range(self.row_parts)]
-        out = _pmap(block_transpose, flat)
+        flat = [self.handles[i][j] for j in range(self.col_parts)
+                for i in range(self.row_parts)]
+        out = _pmap(_block_task(block_transpose), flat)
         grid = []
         k = 0
         for _ in range(self.col_parts):
@@ -282,17 +384,20 @@ class PartitionedFrame:
         return offs
 
     def prefix(self, k: int) -> "PartitionedFrame":
-        """First row blocks covering ≥ k rows (prefix computation, §6.1.2)."""
+        """First row blocks covering ≥ k rows (prefix computation, §6.1.2).
+        Metadata-only: untouched suffix blocks are never faulted."""
         need, keep = k, []
         for i in range(self.row_parts):
-            keep.append(self.parts[i])
-            need -= self.parts[i][0].nrows
+            keep.append(self.handles[i])
+            need -= self.handles[i][0].nrows
             if need <= 0:
                 break
         return PartitionedFrame(keep)
 
     def nbytes(self) -> int:
-        return sum(blk.nbytes() for row in self.parts for blk in row)
+        """Payload bytes across all blocks — handle metadata, so cache
+        accounting never faults a spilled block."""
+        return sum(h.nbytes for row in self.handles for h in row)
 
     def __repr__(self) -> str:
         return f"PartitionedFrame[{self.nrows}x{self.ncols}; grid {self.row_parts}x{self.col_parts}]"

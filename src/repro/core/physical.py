@@ -79,6 +79,7 @@ from .labels import CodedLabels, IntLabels, Labels, RangeLabels, labels_from_val
 from .partition import PartitionedFrame
 from .schedule import (GRID_PREFS, dispatch_blocks, output_row_parts,
                        preferred_row_parts)
+from .store import as_handle, pinned, resolve
 from ..kernels import ops as kops
 
 __all__ = ["run_node", "eval_expr", "NULL_CODE"]
@@ -308,7 +309,8 @@ def _projection(pf: PartitionedFrame, cols: Sequence[Any]) -> PartitionedFrame:
 def _union(left: PartitionedFrame, right: PartitionedFrame) -> PartitionedFrame:
     l = left.repartition(col_parts=1)
     r = right.repartition(col_parts=1)
-    return PartitionedFrame(l.parts + r.parts)
+    # handle-level stack: pure metadata, no block is faulted
+    return PartitionedFrame(l.handles + r.handles)
 
 
 def _output_pf(out: Frame | PartitionedFrame) -> PartitionedFrame:
@@ -512,7 +514,7 @@ def _block_dedup_enabled() -> bool:
 
 
 def _dedup_grid_blocks(pf: PartitionedFrame, grid: str | None,
-                       pref_key: str) -> list[Frame]:
+                       pref_key: str) -> list:
     """Full-width row blocks coarsened to the recorded grid preference (key
     extraction wants blocks ≈ workers: fewer per-block fixed costs — LUT
     builds, key-matrix stacks — and fewer pieces in the joint factorization).
@@ -522,33 +524,38 @@ def _dedup_grid_blocks(pf: PartitionedFrame, grid: str | None,
     stay bit-identical on ANY grid, which lets the producer sweep and the key
     extraction share one pool round."""
     pf1 = pf.repartition(col_parts=1)
-    rp = preferred_row_parts(pf1.row_parts, grid or GRID_PREFS[pref_key])
+    rp = preferred_row_parts(pf1.row_parts, grid or GRID_PREFS[pref_key],
+                             total_bytes=pf1.nbytes())
     if rp != pf1.row_parts:
         pf1 = pf1.repartition(row_parts=rp)
-    return [row[0] for row in pf1.parts]
+    return [row[0] for row in pf1.handles]
 
 
-def _key_block(args) -> tuple[Frame, np.ndarray, np.ndarray, np.ndarray | None]:
+def _key_block(args) -> tuple[Any, np.ndarray, np.ndarray, np.ndarray | None]:
     """The per-block key-extraction program, ONE dispatch per partition: run
     the absorbed producer chain, induce, flag wide ints, build the key
     matrix, and evaluate pushable consumer predicates (row-local ⇒ legal on
     the pre-filter block, exactly like ``_fused_sort`` evaluates them on the
-    unsorted frame)."""
+    unsorted frame).  Runs on a pool worker: the input faults under a pin,
+    and the (possibly staged) block returns as a store handle so it can
+    spill again before the keep-mask pass comes back for it."""
     block, subset, stages, preds = args
-    f = (_run_stages_block(block, stages) if stages else block).induce()
-    flags = _wide_int_flags(f, subset)
-    mat = _row_keys(f, subset, flags)
-    keep = None
-    if preds:
-        keep = np.asarray(_fused_selection_mask(preds, f), dtype=bool)
-    return f, flags, mat, keep
+    with pinned(block) as src:
+        f = (_run_stages_block(src, stages) if stages else src).induce()
+        flags = _wide_int_flags(f, subset)
+        mat = _row_keys(f, subset, flags)
+        keep = None
+        if preds:
+            keep = np.asarray(_fused_selection_mask(preds, f), dtype=bool)
+        hout = block if f is src else as_handle(f)
+    return hout, flags, mat, keep
 
 
 def _joint_key_mats(results, subset):
     """OR the per-block wide-int flags and re-key the (rare) blocks whose
     local decision disagrees — every block in one joint factorization must
     hash-or-cast each column identically (see ``_wide_int_flags``)."""
-    frames = [r[0] for r in results]
+    blocks = [r[0] for r in results]
     flags = [r[1] for r in results]
     mats = [r[2] for r in results]
     keeps = [r[3] for r in results]
@@ -561,25 +568,31 @@ def _joint_key_mats(results, subset):
         # this reconciliation exists for
         redo = [i for i, fl in enumerate(flags)
                 if not bool((fl == joint).all())]
-        fixed = dispatch_blocks(
-            lambda i: _row_keys(frames[i], subset, joint), redo)
+
+        def rekey(i):
+            with pinned(blocks[i]) as f:
+                return _row_keys(f, subset, joint)
+
+        fixed = dispatch_blocks(rekey, redo)
         for i, m in zip(redo, fixed):
             mats[i] = m
-    return frames, mats, keeps
+    return blocks, mats, keeps
 
 
-def _apply_keep_blocks(frames: Sequence[Frame], keeps: Sequence[np.ndarray],
+def _apply_keep_blocks(blocks: Sequence, keeps: Sequence[np.ndarray],
                        proj) -> PartitionedFrame:
     """Blockwise keep-mask filter (+ gather-time projection): the survivors
-    are materialized once, post-filter, in their original partitioned form."""
+    are materialized once, post-filter, in their original partitioned form.
+    Blocks are store handles — spilled ones fault inside the worker."""
     def filt(args):
-        f, keep = args
-        g = f.filter_rows(keep)
-        if proj is not None:
-            g = _project_block(g, proj)
-        return g
+        h, keep = args
+        with pinned(h) as f:
+            g = f.filter_rows(keep)
+            if proj is not None:
+                g = _project_block(g, proj)
+            return as_handle(g)
 
-    out = dispatch_blocks(filt, list(zip(frames, keeps)))
+    out = dispatch_blocks(filt, list(zip(blocks, keeps)))
     return PartitionedFrame([[b] for b in out])
 
 
@@ -870,14 +883,19 @@ def _groupby(pf: PartitionedFrame, keys: Sequence[Any], aggs: Sequence[tuple]) -
     the fusion pass records on ``FusedGroupBy`` — blocks ≈ workers), so a
     256-partition frame on a 4-worker pool computes ~8 partials, not 256.
     """
-    rp = preferred_row_parts(pf.row_parts, GRID_PREFS["groupby"])
+    rp = preferred_row_parts(pf.row_parts, GRID_PREFS["groupby"],
+                             total_bytes=pf.nbytes())
     pf = pf.repartition(row_parts=rp, col_parts=1)
     row_blocks = [row[0].induce() for row in pf.parts]
     return _groupby_blocks(row_blocks, keys, aggs)
 
 
-def _groupby_blocks(row_blocks: list[Frame], keys: Sequence[Any],
+def _groupby_blocks(row_blocks: list, keys: Sequence[Any],
                     aggs: Sequence[tuple]) -> PartitionedFrame:
+    # the general factorization needs a global view of every block's keys, so
+    # this path materializes all blocks (handles fault here); the fused
+    # dense-int path above it is the memory-governed one
+    row_blocks = [resolve(b) for b in row_blocks]
     # ---- dense small-range INT key: no host factorization ------------------
     # (paper's groupby(n) benchmark shape: "passenger_count"-like keys).
     # codes = v - min, computed per block in parallel; empty groups dropped
@@ -1041,6 +1059,7 @@ def _finalize_groupby(combined: dict, template: Frame | None, keys, aggs,
         out_cols.append(_host_column(list(key_values), Domain.INT))
         out_names.append(keys[0])
     elif keys:
+        template = resolve(template)   # only this branch needs block data
         for kpos, kname in enumerate(keys):
             src = template.col(kname)
             vals = [r[kpos] for r in rep_sorted]
@@ -1126,23 +1145,27 @@ def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
     general factorization over the staged blocks — the producer sweep still
     ran fused, in one pool round instead of one per operator."""
     pf1 = pf.repartition(col_parts=1)
-    blocks = [row[0] for row in pf1.parts]
+    blocks = [row[0] for row in pf1.handles]
     single_key = len(keys) == 1
 
-    def stage_block(block: Frame):
-        f = _run_stages_block(block, stages).induce()
-        info = None
-        if single_key:
-            try:
-                c = f.col(keys[0])
-            except KeyError:
-                c = None
-            if c is not None and c.domain is Domain.INT:
-                v = np.asarray(c.data, dtype=np.int64)
-                if c.mask is not None:
-                    v = v[np.asarray(c.mask)]
-                info = (int(v.min()), int(v.max())) if v.size else "empty"
-        return f, info
+    def stage_block(block):
+        with pinned(block) as src:
+            f = _run_stages_block(src, stages).induce()
+            info = None
+            if single_key:
+                try:
+                    c = f.col(keys[0])
+                except KeyError:
+                    c = None
+                if c is not None and c.domain is Domain.INT:
+                    v = np.asarray(c.data, dtype=np.int64)
+                    if c.mask is not None:
+                        v = v[np.asarray(c.mask)]
+                    info = (int(v.min()), int(v.max())) if v.size else "empty"
+            # staged output back into the store: under a budget it can spill
+            # before the partial pass returns for it
+            hout = block if f is src else as_handle(f)
+        return hout, info
 
     results = dispatch_blocks(stage_block, blocks)
     staged = [r[0] for r in results]
@@ -1155,11 +1178,12 @@ def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
     # block sequence as its materialized input and makes the same regroup
     # decision, so both paths compute partials over the same row groupings.
     # (Key spans are global min/max — regrouping cannot change them.)
-    rp = preferred_row_parts(len(staged), grid or GRID_PREFS["fused_groupby"])
+    rp = preferred_row_parts(len(staged), grid or GRID_PREFS["fused_groupby"],
+                             total_bytes=sum(h.nbytes for h in staged))
     if rp != len(staged):
         staged = [row[0] for row in
                   PartitionedFrame([[b] for b in staged])
-                  .repartition(row_parts=rp).parts]
+                  .repartition(row_parts=rp).handles]
 
     spans = [i for i in infos if isinstance(i, tuple)]
     if single_key and spans and all(i is not None for i in infos):
@@ -1168,13 +1192,14 @@ def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
         if G <= 65536:
             need = _agg_need(aggs)
 
-            def partial_block(f: Frame) -> dict:
-                c = f.col(keys[0])
-                codes = np.asarray(c.data, dtype=np.int64) - gmin
-                if c.mask is not None:
-                    codes = np.where(np.asarray(c.mask), codes, -1)
-                return _block_partial(f, codes.astype(np.int32), G, need,
-                                      presence=True)
+            def partial_block(block) -> dict:
+                with pinned(block) as f:
+                    c = f.col(keys[0])
+                    codes = np.asarray(c.data, dtype=np.int64) - gmin
+                    if c.mask is not None:
+                        codes = np.where(np.asarray(c.mask), codes, -1)
+                    return _block_partial(f, codes.astype(np.int32), G, need,
+                                          presence=True)
 
             partials = dispatch_blocks(partial_block, staged)
             combined = _combine_partials(partials, need + [_PRESENCE])
@@ -1277,7 +1302,8 @@ def _window(pf: PartitionedFrame, func: str, cols, size, periods,
     Row-preserving pre-stages (elementwise map / projection / rename) are
     pointwise, so they stay fused into the scan program: regridding before or
     after them lands the seams on the same rows either way."""
-    rp = preferred_row_parts(pf.row_parts, grid or GRID_PREFS["window"])
+    rp = preferred_row_parts(pf.row_parts, grid or GRID_PREFS["window"],
+                             total_bytes=pf.nbytes())
     if rp != pf.row_parts and any(st.op == "selection" for st in pre):
         pf = pf.repartition(col_parts=1).map_blockwise(
             lambda b: _run_stages_block(b, pre))
@@ -1340,25 +1366,26 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
     identity-filled values, so exclusive-combining the *local* totals is
     bitwise the same carry the old serial tail-chaining produced — and the
     carry application now runs block-parallel instead of serially."""
-    blocks = [row[0] for row in pf.parts]
+    blocks = [row[0] for row in pf.handles]
 
-    def local(block: Frame):
-        f = _run_stages_block(block, pre).induce() if pre else block.induce()
-        targets = _window_targets(f, cols)
+    def local(block):
+        with pinned(block) as src:
+            f = _run_stages_block(src, pre).induce() if pre else src.induce()
+            targets = _window_targets(f, cols)
 
-        def scan_col(c: Column) -> Column:
-            v = jnp.where(c.valid_mask(), c.data.astype(jnp.float32),
-                          _scan_identity(func))
-            if func == "cumprod":
-                out = jnp.cumprod(v, axis=0)
-            else:
-                out = kops.window_scan(v, func)
-            return Column(out.astype(jnp.float32), Domain.FLOAT, c.mask, None)
+            def scan_col(c: Column) -> Column:
+                v = jnp.where(c.valid_mask(), c.data.astype(jnp.float32),
+                              _scan_identity(func))
+                if func == "cumprod":
+                    out = jnp.cumprod(v, axis=0)
+                else:
+                    out = kops.window_scan(v, func)
+                return Column(out.astype(jnp.float32), Domain.FLOAT, c.mask, None)
 
-        scanned = _apply_cols(f, targets, scan_col)
-        totals = ({n: scanned.col(n).data[-1] for n in targets}
-                  if scanned.nrows else {})
-        return scanned, totals, targets
+            scanned = _apply_cols(f, targets, scan_col)
+            totals = ({n: scanned.col(n).data[-1] for n in targets}
+                      if scanned.nrows else {})
+            return as_handle(scanned), totals, targets
 
     locals_ = dispatch_blocks(local, blocks)
 
@@ -1374,17 +1401,20 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
         return PartitionedFrame([[item[0]] for item in locals_])
 
     def apply(args):
-        (scanned, _totals, targets), carry = args
-        if carry:
-            cols_ = list(scanned.columns)
-            names = scanned.col_labels.to_list()
-            for j, n in enumerate(names):
-                if n in targets and n in carry:
-                    v = _carry_combine(func, cols_[j].data, carry[n])
-                    cols_[j] = Column(v, cols_[j].domain, cols_[j].mask, None)
-            scanned = Frame(cols_, scanned.row_labels, scanned.col_labels,
-                            scanned.row_domains)
-        return _run_stages_block(scanned, post) if post else scanned
+        (block, _totals, targets), carry = args
+        with pinned(block) as scanned:
+            orig = scanned
+            if carry:
+                cols_ = list(scanned.columns)
+                names = scanned.col_labels.to_list()
+                for j, n in enumerate(names):
+                    if n in targets and n in carry:
+                        v = _carry_combine(func, cols_[j].data, carry[n])
+                        cols_[j] = Column(v, cols_[j].domain, cols_[j].mask, None)
+                scanned = Frame(cols_, scanned.row_labels, scanned.col_labels,
+                                scanned.row_domains)
+            out = _run_stages_block(scanned, post) if post else scanned
+            return block if out is orig else as_handle(out)
 
     out = dispatch_blocks(apply, list(zip(locals_, carries)))
     return PartitionedFrame([[b] for b in out])
@@ -1399,16 +1429,35 @@ def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int,
     """diff/shift via a ``periods``-row halo — the running tail of everything
     before the block (a single block may be shorter than ``periods``).
     ``post`` stages run inside the same per-block program."""
-    blocks = [row[0].induce() for row in pf.parts]
+    blocks = [row[0] for row in pf.handles]
+
+    # round 1 (parallel): induce each block ONCE and extract its tail — the
+    # only rows that can ever reach a later block's halo.  The induced form
+    # goes back into the store, so blocks are induced exactly once even when
+    # the budget spills them between the rounds.
+    def prep(h):
+        with pinned(h) as raw:
+            f = raw.induce()
+            return (h if f is raw else as_handle(f)), f.tail(periods)
+
+    prepped = dispatch_blocks(prep, blocks)
+
+    # serial compose of the tiny tails → per-block running halos (a block's
+    # rows beyond its last ``periods`` can never appear in any halo, so
+    # composing tails is exact — same recurrence the per-block sweep used)
     halos: list[Frame | None] = [None]
     running: Frame | None = None
-    for b in blocks[:-1]:
-        running = b.tail(periods) if running is None else (
-            running.concat_rows(b).tail(periods))
+    for _h, tail in prepped[:-1]:
+        running = tail if running is None else (
+            running.concat_rows(tail).tail(periods))
         halos.append(running)
 
-    def local(args) -> Frame:
-        block, halo = args
+    def local(args):
+        (blk, _tail), halo = args
+        with pinned(blk) as f:
+            return as_handle(_halo_block(f, halo))
+
+    def _halo_block(block: Frame, halo: Frame | None) -> Frame:
         ext = halo.concat_rows(block) if halo is not None else block
         pad = ext.nrows - block.nrows
 
@@ -1436,7 +1485,7 @@ def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int,
         got = Frame(cols, block.row_labels, block.col_labels, block.row_domains)
         return _run_stages_block(got, post) if post else got
 
-    out = dispatch_blocks(local, list(zip(blocks, halos)))
+    out = dispatch_blocks(local, list(zip(prepped, halos)))
     return PartitionedFrame([[b] for b in out])
 
 
@@ -1578,17 +1627,18 @@ def _from_labels(pf: PartitionedFrame, label: Any) -> PartitionedFrame:
     pf = pf.repartition(col_parts=1)
     offsets = pf.row_block_offsets()
 
-    def conv(args) -> Frame:
-        (frame, start) = args
-        f = frame
-        vals = f.row_labels.to_list()
-        c = _host_column(vals, Domain.INT if isinstance(f.row_labels, (RangeLabels, IntLabels)) else None)
-        new = Frame([c] + list(f.columns),
-                    RangeLabels(f.nrows, start),
-                    labels_from_values([label]).concat(f.col_labels))
-        return new
+    def conv(args):
+        (block, start) = args
+        with pinned(block) as f:
+            vals = f.row_labels.to_list()
+            c = _host_column(vals, Domain.INT if isinstance(f.row_labels, (RangeLabels, IntLabels)) else None)
+            new = Frame([c] + list(f.columns),
+                        RangeLabels(f.nrows, start),
+                        labels_from_values([label]).concat(f.col_labels))
+            return as_handle(new)
 
-    out = dispatch_blocks(conv, [(row[0], offsets[i]) for i, row in enumerate(pf.parts)])
+    out = dispatch_blocks(conv, [(row[0], offsets[i])
+                                 for i, row in enumerate(pf.handles)])
     return PartitionedFrame([[b] for b in out])
 
 
@@ -1609,8 +1659,8 @@ def _limit(pf: PartitionedFrame, k: int, tail: bool) -> PartitionedFrame:
         return PartitionedFrame.from_frame(f.head(k))
     need, keep = k, []
     for i in range(pf.row_parts - 1, -1, -1):
-        keep.insert(0, pf.parts[i])
-        need -= pf.parts[i][0].nrows
+        keep.insert(0, pf.handles[i])
+        need -= pf.handles[i][0].nrows
         if need <= 0:
             break
     f = PartitionedFrame(keep).to_frame()

@@ -37,21 +37,48 @@ thread while a two-partition frame ran on pool workers).  The only inline
 path left is the nested-dispatch guard: a call *from* a pool worker runs its
 blocks in place rather than deadlocking on its own pool.
 
-Environment knobs
------------------
-======================  =====================================================
-``REPRO_POOL_WORKERS``  worker threads in the shared pool; also the width all
-                        grid-sizing decisions consult (default: CPU count)
-``REPRO_COALESCE``      ``0`` disables coalescing — one pool task per block,
-                        the pre-scheduling behavior (benchmark baseline)
-``REPRO_COALESCE_FACTOR``
-                        pool tasks per worker when coalescing (default 2: a
-                        little slack so an unlucky chunk can't serialize the
-                        whole stage behind one worker)
-``REPRO_ADAPT_GRID``    ``0`` disables plan-time grid adaptation — blocking
-                        operators keep the incoming row grid no matter how
-                        far it oversubscribes the pool
-======================  =====================================================
+3. **Residency-aware ordering** — when the block store (``core.store``) is
+   budget-governed, some of a dispatch's blocks may be spilled to disk.
+   :func:`dispatch_blocks` orders the pool tasks so chunks of *resident*
+   blocks run first: their compute overlaps the disk faults of the spilled
+   tail (which happen inside the worker task that needs the block, never on
+   the caller thread).  Results are scattered back to block order, so the
+   reordering is invisible — bit-identical by the same per-block-independence
+   argument as coalescing.
+
+Environment knobs (the one table — referenced from ROADMAP.md)
+--------------------------------------------------------------
+=========================  ==================================================
+``REPRO_POOL_WORKERS``     worker threads in the shared pool; also the width
+                           all grid-sizing decisions consult (default: CPU
+                           count)
+``REPRO_COALESCE``         ``0`` disables coalescing — one pool task per
+                           block, the pre-scheduling behavior (benchmark
+                           baseline)
+``REPRO_COALESCE_FACTOR``  pool tasks per worker when coalescing (default 2:
+                           a little slack so an unlucky chunk can't serialize
+                           the whole stage behind one worker)
+``REPRO_ADAPT_GRID``       ``0`` disables plan-time grid adaptation —
+                           blocking operators keep the incoming row grid no
+                           matter how far it oversubscribes the pool
+``REPRO_JIT_UDFS``         ``1`` forces jit-traced map-stage runs, ``0``
+                           forces eager; default: eager on CPU, traced on
+                           accelerators (``physical._jit_udfs_enabled``)
+``REPRO_BLOCK_DEDUP``      ``0`` routes DIFFERENCE / DROP-DUPLICATES through
+                           the serial whole-frame seed path (baseline /
+                           equivalence oracle; ``physical``)
+``REPRO_MEM_BUDGET``       byte budget for resident partition blocks +
+                           cached sub-plan results (``core.store``); ``0``
+                           (default) = unlimited, fully-resident fast path.
+                           Over budget, blocks spill to disk and fault back
+                           on demand
+``REPRO_SPILL_DIR``        directory under which the block store creates its
+                           spill directory (default: the system tempdir)
+``REPRO_CSV_STREAM``       ``0`` routes ``api.read_csv`` through the serial
+                           seed parser (baseline / equivalence oracle)
+``REPRO_CSV_CHUNK_BYTES``  target byte size of a streaming-ingest CSV chunk
+                           (default: sized from pool width and mem budget)
+=========================  ==================================================
 """
 from __future__ import annotations
 
@@ -64,7 +91,7 @@ from typing import Callable, Sequence
 __all__ = [
     "get_pool", "pool_width", "reset_pool", "dispatch_blocks",
     "coalesce_factor", "preferred_row_parts", "output_row_parts",
-    "stats_scope", "GRID_PREFS",
+    "budget_max_block_bytes", "stats_scope", "GRID_PREFS",
 ]
 
 # Per-operator grid preferences (paper §4.2: the partitioning scheme is
@@ -185,6 +212,18 @@ def _chunk_sizes(n: int, tasks: int) -> list[int]:
     return [base + (1 if i < rem else 0) for i in range(tasks)]
 
 
+def _spilled(item) -> bool:
+    """True for a dispatch item that is (or carries, under any nesting of
+    leading tuple elements) a spilled store block — duck-typed on
+    ``is_resident`` so this module needs no store import.  Unwrapping
+    nested tuples matters: several dispatch sites pack the handle as
+    ``((handle, meta...), extra...)``."""
+    while isinstance(item, tuple) and item:
+        item = item[0]
+    r = getattr(item, "is_resident", None)
+    return r is not None and not r
+
+
 def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
                     attribute: bool = True) -> list:
     """Run ``fn`` over every block on the shared pool; ordered results.
@@ -194,6 +233,12 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     blocks are chunked into one pool task each (block coalescing); otherwise
     one task per block.  Either way each block is processed independently in
     block order, so the result is bit-identical to per-block dispatch.
+
+    Residency-aware: when some blocks are store handles that are currently
+    spilled, the dispatch *order* moves resident blocks to the front (their
+    compute overlaps the spilled blocks' disk faults, which the workers pay
+    inside their own tasks); results are scattered back so the caller always
+    sees block order.
 
     ``stats`` (or the executor's installed :class:`stats_scope`) receives
     ``dispatches`` (pool tasks submitted) and ``dispatched_blocks`` (blocks
@@ -207,6 +252,15 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     if n == 0:
         return []
     st = stats if stats is not None else (_STATS.get() if attribute else None)
+
+    # resident blocks first (stable within each class, so the permutation is
+    # deterministic given the residency snapshot); identity when nothing is
+    # spilled — the common fully-resident case costs one any() sweep
+    perm: list[int] | None = None
+    if n > 1 and any(_spilled(x) for x in items):
+        perm = sorted(range(n), key=lambda i: _spilled(items[i]))
+        items = [items[i] for i in perm]
+
     target = pool_width() * coalesce_factor()
     if not _coalesce_enabled() or n <= target:
         chunks = [[x] for x in items]
@@ -225,17 +279,38 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     if _in_worker():
         # nested dispatch from a pool worker: run inline — queueing behind
         # ourselves on a saturated pool would deadlock
-        return [fn(x) for x in items]
-    out: list = []
-    for res in get_pool().map(run_chunk, chunks):
-        out.extend(res)
+        out = [fn(x) for x in items]
+    else:
+        out = []
+        for res in get_pool().map(run_chunk, chunks):
+            out.extend(res)
+    if perm is not None:
+        restored: list = [None] * n
+        for pos, orig in enumerate(perm):
+            restored[orig] = out[pos]
+        return restored
     return out
 
 
 # ---------------------------------------------------------------------------
 # plan-time grid sizing
 # ---------------------------------------------------------------------------
-def preferred_row_parts(nblocks: int, prefer: str | None = "workers") -> int:
+def budget_max_block_bytes() -> int:
+    """Largest working block the memory budget tolerates, or 0 when the
+    store is unbudgeted.  Sized so that every pool worker can hold one input
+    block pinned AND register one output block while the resident set still
+    fits the budget: budget // (2·workers + 2), the +2 leaving room for one
+    in-flight fault reservation.  This is the out-of-core invariant behind
+    ``peak_resident_bytes ≤ budget + one block``."""
+    from .store import get_store
+    b = get_store().budget
+    if b <= 0:
+        return 0
+    return max(1, b // (2 * pool_width() + 2))
+
+
+def preferred_row_parts(nblocks: int, prefer: str | None = "workers",
+                        total_bytes: int | None = None) -> int:
     """The row grid a blocking operator should work over, given ``nblocks``
     incoming row partitions and its recorded preference:
 
@@ -253,11 +328,24 @@ def preferred_row_parts(nblocks: int, prefer: str | None = "workers") -> int:
     when it retires many per-block programs.  Fused and unfused paths consult
     the same preference, so plan equivalence is preserved (both sides see the
     same seams).
+
+    ``total_bytes`` (handle metadata — callers pass ``pf.nbytes()``) makes
+    the decision budget-aware: under ``REPRO_MEM_BUDGET`` the coarsening
+    never builds blocks larger than :func:`budget_max_block_bytes`, so the
+    pinned working set of a fully busy pool stays inside the budget and
+    blocks remain spillable units.  With the default budget 0 the floor is
+    inert and the decision is byte-blind, exactly as before.
     """
     if prefer is None or not _adapt_enabled() or nblocks <= 1:
         return nblocks
     width = pool_width()
     target = width if prefer == "few_seams" else width * coalesce_factor()
+    if total_bytes:
+        mb = budget_max_block_bytes()
+        if mb:
+            floor = -(-total_bytes // mb)        # ceil
+            if floor > target:
+                target = min(nblocks, floor)
     return nblocks if nblocks <= 2 * target else target
 
 

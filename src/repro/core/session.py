@@ -13,6 +13,7 @@ import threading
 from typing import Any
 
 from . import algebra as alg
+from . import store as block_store
 from .executor import Executor
 from .frame import Frame
 from .partition import PartitionedFrame, default_grid
@@ -29,7 +30,17 @@ class EvalMode:
 class Session:
     def __init__(self, *, mode: str = EvalMode.OPPORTUNISTIC,
                  cache_budget_bytes: int = 1 << 30, optimize: bool = True,
-                 default_row_parts: int | None = None):
+                 default_row_parts: int | None = None,
+                 mem_budget_bytes: int | None = None,
+                 spill_dir: str | None = None):
+        # out-of-core residency knob (process-wide — the block store is
+        # shared; see the REPRO_MEM_BUDGET / REPRO_SPILL_DIR env knobs in
+        # core/schedule.py's table).  Set it before ingesting data: blocks
+        # registered under an earlier store configuration stay fully
+        # resident.
+        if mem_budget_bytes is not None or spill_dir is not None:
+            block_store.configure(budget_bytes=mem_budget_bytes,
+                                  spill_dir=spill_dir)
         self.mode = mode
         self.frames: dict[str, PartitionedFrame] = {}
         self.executor = Executor(self.frames, cache_budget_bytes=cache_budget_bytes,

@@ -1,0 +1,521 @@
+"""Out-of-core block store: memory-governed spill/fault residency (§4.2/§6-7).
+
+The paper's scalability agenda asks for dataframe engines that degrade
+gracefully past RAM instead of OOM-ing — the property Modin gets from its
+partitioned out-of-core layer.  This module is that layer for our engine:
+every partition block of a ``PartitionedFrame`` lives behind a
+:class:`BlockHandle` with two residency states,
+
+    resident  — the ``Frame`` is in host/device memory;
+    spilled   — the block's arrays live in an ``.npz`` file under the spill
+                directory (written with ``np.save``-family serialization) and
+                the in-memory ``Frame`` reference is dropped.
+
+A byte budget (``REPRO_MEM_BUDGET``; 0 = unlimited) governs residency: when
+the resident total would exceed the budget, the store evicts the
+lowest-value unpinned blocks first — ordered by **benefit density** (the same
+cost×hits/bytes score the executor's materialization cache uses, §6.2.2) with
+LRU as the tie-break, so cached sub-plan results and live partitions charge
+ONE budget under ONE policy (the executor stamps its entries' handles with
+their cache benefit; un-cached working blocks default to 0 and evict first).
+
+Pin/unpin ref-counts protect blocks around kernel execution: the scheduling
+layer faults blocks *inside pool worker tasks* (overlapping spill I/O with
+other blocks' compute — see ``schedule.dispatch_blocks``, which also orders
+dispatch to run resident blocks first) and pins them for the duration of the
+per-block program, so eviction can never un-account memory that a kernel is
+actively reading.
+
+Budget semantics: eviction makes room *before* a fault or put charges its
+bytes, so the resident gauge stays ≤ budget + one in-flight block per worker
+(the acceptance bound "budget + one block" on a 2-worker pool).  Pinned
+blocks are never evicted; if pins alone exceed the budget, the store
+overshoots rather than deadlocks.
+
+``REPRO_MEM_BUDGET=0`` (the default) keeps the fully-resident fast path:
+``put`` wraps the frame in an untracked handle with no locking, no
+accounting, and no spill machinery — bit-identical to pre-store behaviour.
+
+Lock order: handle lock → store lock, never the reverse.  The spill write
+itself holds only the victim's handle lock, so faults of *other* blocks
+proceed concurrently with eviction I/O.
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import itertools
+import os
+import pickle
+import shutil
+import tempfile
+import threading
+import weakref
+from typing import Iterator
+
+import numpy as np
+
+from .frame import Column, Frame
+from .dtypes import Domain
+
+__all__ = [
+    "BlockHandle", "BlockStore", "StoreStats",
+    "get_store", "reset_store", "configure", "unconfigure",
+    "as_handle", "resolve", "pinned",
+]
+
+_SEQ = itertools.count(1)
+_IDS = itertools.count()
+
+
+class StoreStats:
+    """Store-level counters (one instance per store; all mutation under the
+    store lock).  ``spills``/``faults`` count block state transitions;
+    ``spilled_bytes``/``faulted_bytes`` the payload they moved;
+    ``resident_bytes`` is the live gauge and ``peak_resident_bytes`` its
+    high-water mark.  The executor snapshots these around every plan-node
+    evaluation and attributes the deltas to its ``ExecStats``."""
+
+    __slots__ = ("spills", "faults", "spilled_bytes", "faulted_bytes",
+                 "resident_bytes", "peak_resident_bytes")
+
+    def __init__(self):
+        self.spills = 0
+        self.faults = 0
+        self.spilled_bytes = 0
+        self.faulted_bytes = 0
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+
+    def snapshot(self) -> tuple[int, int, int, int]:
+        return (self.spills, self.faults, self.spilled_bytes,
+                self.peak_resident_bytes)
+
+
+# =============================================================================
+# Frame (de)serialization: one .npz per spilled block
+# =============================================================================
+def _save_frame(path: str, frame: Frame) -> None:
+    """Write a Frame's arrays + metadata to ``path`` (uncompressed npz).
+    Column payloads are stored as plain ``.npy`` members (loadable without
+    pickle); the small metadata record (domains, dictionaries, labels,
+    device-ness flags) is pickled into a byte-array member."""
+    arrays: dict[str, np.ndarray] = {}
+    cols_meta = []
+    for j, c in enumerate(frame.columns):
+        arrays[f"d{j}"] = np.asarray(c.data)
+        has_mask = c.mask is not None
+        if has_mask:
+            arrays[f"m{j}"] = np.asarray(c.mask)
+        cols_meta.append({
+            "domain": c.domain.value,
+            "dictionary": c.dictionary,
+            "jax_data": not isinstance(c.data, np.ndarray),
+            "has_mask": has_mask,
+            "jax_mask": has_mask and not isinstance(c.mask, np.ndarray),
+        })
+    meta = {"cols": cols_meta, "row_labels": frame.row_labels,
+            "col_labels": frame.col_labels, "row_domains": frame.row_domains}
+    arrays["__meta__"] = np.frombuffer(pickle.dumps(meta), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(buf.getbuffer())
+    os.replace(tmp, path)       # a fault never sees a half-written file
+
+
+def _load_frame(path: str) -> Frame:
+    import jax.numpy as jnp
+    with np.load(path) as z:
+        meta = pickle.loads(z["__meta__"].tobytes())
+        cols = []
+        for j, e in enumerate(meta["cols"]):
+            d = z[f"d{j}"]
+            if e["jax_data"]:
+                # was a device array before the spill; int64 host columns
+                # never take this branch (they are always np — jnp.asarray
+                # would truncate them through int32)
+                d = jnp.asarray(d)
+            m = None
+            if e["has_mask"]:
+                m = z[f"m{j}"]
+                if e["jax_mask"]:
+                    m = jnp.asarray(m)
+            cols.append(Column(d, Domain(e["domain"]), m, e["dictionary"]))
+    return Frame(cols, meta["row_labels"], meta["col_labels"],
+                 meta["row_domains"])
+
+
+# =============================================================================
+# handles
+# =============================================================================
+class _Rec:
+    """The part of a handle that must outlive it: how many resident bytes it
+    has charged and which spill file it owns.  ``weakref.finalize`` hands this
+    to the store when the handle is garbage-collected, so dead handles give
+    their bytes back and delete their spill file deterministically."""
+    __slots__ = ("charged", "path")
+
+    def __init__(self):
+        self.charged = 0
+        self.path: str | None = None
+
+
+class BlockHandle:
+    """One partition block behind a residency state.  Metadata (``nrows`` /
+    ``ncols`` / ``nbytes``) is always available without faulting, so grid
+    planning, zero-copy regroup pass-through, and cache accounting never
+    touch a spilled block's data."""
+
+    __slots__ = ("_store", "_frame", "_nbytes", "nrows", "ncols", "_rec",
+                 "_pins", "_seq", "_evicting", "benefit", "_lock", "_id",
+                 "__weakref__")
+
+    def __init__(self, store: "BlockStore | None", frame: Frame):
+        self._store = store
+        self._frame: Frame | None = frame
+        self._nbytes: int | None = None
+        self.nrows = frame.nrows
+        self.ncols = frame.ncols
+        self._rec = _Rec()
+        self._pins = 0
+        self._seq = next(_SEQ)
+        self._evicting = False
+        self.benefit = 0.0           # cache benefit density; 0 = evict first
+        self._lock = threading.Lock()
+        self._id = next(_IDS)
+
+    # -- metadata ---------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        n = self._nbytes
+        if n is None:
+            f = self._frame
+            n = self._nbytes = (f.nbytes() if f is not None else 0)
+        return n
+
+    @property
+    def is_resident(self) -> bool:
+        return self._frame is not None
+
+    @property
+    def is_tracked(self) -> bool:
+        return self._store is not None
+
+    # -- data access ------------------------------------------------------
+    def frame(self) -> Frame:
+        """The block's Frame; faults it back from disk when spilled."""
+        f = self._frame
+        st = self._store
+        if st is None:               # untracked fast path (budget 0)
+            return f
+        if f is not None:
+            self._seq = next(_SEQ)   # touch (benign race — LRU hint only)
+            return f
+        return st._fault(self)
+
+    def pin(self) -> None:
+        if self._store is not None:
+            with self._store._lock:
+                self._pins += 1
+
+    def unpin(self) -> None:
+        if self._store is not None:
+            with self._store._lock:
+                self._pins -= 1
+
+    @contextlib.contextmanager
+    def pinned(self) -> Iterator[Frame]:
+        """Fault + pin for the duration of a per-block program (the physical
+        layer wraps every dispatch-boundary kernel in one of these)."""
+        self.pin()
+        try:
+            yield self.frame()
+        finally:
+            self.unpin()
+
+    def __repr__(self) -> str:
+        state = "resident" if self.is_resident else "spilled"
+        return f"BlockHandle[{self.nrows}x{self.ncols}; {state}]"
+
+
+# =============================================================================
+# the store
+# =============================================================================
+class BlockStore:
+    def __init__(self, budget_bytes: int = 0, spill_dir: str | None = None):
+        self.budget = max(0, int(budget_bytes))
+        self._base_dir = spill_dir
+        self._dir: str | None = None
+        self._lock = threading.Lock()
+        self._handles: "weakref.WeakSet[BlockHandle]" = weakref.WeakSet()
+        self.stats = StoreStats()
+
+    @property
+    def active(self) -> bool:
+        return self.budget > 0
+
+    # ------------------------------------------------------------------
+    def put(self, frame: Frame, benefit: float = 0.0) -> BlockHandle:
+        """Register a block.  Inactive store (budget 0): a zero-overhead
+        untracked wrapper.  Active: charge the block's bytes, evicting
+        lower-value blocks first to stay within budget."""
+        if not self.active:
+            return BlockHandle(None, frame)
+        h = BlockHandle(self, frame)
+        h.benefit = benefit
+        need = h.nbytes
+        self._reserve(need, register=h)
+        weakref.finalize(h, BlockStore._reap, self, h._rec)
+        return h
+
+    # ------------------------------------------------------------------
+    def _fault(self, h: BlockHandle) -> Frame:
+        """Load a spilled block back (runs on whatever thread touched it —
+        pool workers, by construction of the dispatch layer, so fault I/O
+        overlaps other blocks' compute).  Pins the handle around the load so
+        concurrent eviction can't un-account it mid-fault; the bytes are
+        reserved (evict-until-fit + charge, atomically) BEFORE the load, so
+        the resident gauge covers in-flight loads and the peak stays within
+        budget whenever anything is evictable."""
+        with self._lock:
+            f = h._frame
+            if f is not None:
+                h._seq = next(_SEQ)
+                return f
+            h._pins += 1
+        charged = False
+        try:
+            with h._lock:
+                f = h._frame
+                if f is None:
+                    if h._rec.path is None:
+                        raise RuntimeError(
+                            "spilled block's file is gone — the store was "
+                            "reset/reconfigured after this frame was "
+                            "ingested (configure the budget before "
+                            "ingesting data)")
+                    self._reserve(h.nbytes)
+                    charged = True
+                    f = _load_frame(h._rec.path)
+                    with self._lock:
+                        h._frame = f
+                        h._rec.charged = h.nbytes
+                        charged = False
+                        self.stats.faults += 1
+                        self.stats.faulted_bytes += h.nbytes
+        finally:
+            if charged:              # load failed: give the reservation back
+                with self._lock:
+                    self.stats.resident_bytes -= h.nbytes
+            with self._lock:
+                h._pins -= 1
+                h._seq = next(_SEQ)
+        return f
+
+    # ------------------------------------------------------------------
+    def _reserve(self, incoming: int, register: BlockHandle | None = None) -> None:
+        """Atomically evict-until-fit and charge ``incoming`` bytes: the
+        budget check and the charge happen under one lock hold, so
+        concurrent reserves cannot interleave into an overshoot.  Victims
+        are selected as a BATCH per scan — one (benefit, LRU) sort covers
+        the whole shortfall instead of a full rescan per victim.  Only when
+        nothing is evictable (every resident block pinned or mid-eviction)
+        does the charge overshoot — bounding the peak at budget + the
+        in-flight blocks of the moment (≤ one per pool worker)."""
+        while True:
+            victims: list[BlockHandle] = []
+            with self._lock:
+                shortfall = self.stats.resident_bytes + incoming - self.budget
+                if shortfall > 0:
+                    cands = sorted(
+                        (c for c in self._handles
+                         if c._frame is not None and c._pins == 0
+                         and not c._evicting),
+                        key=lambda c: (c.benefit, c._seq))
+                    freed = 0
+                    for cand in cands:
+                        if freed >= shortfall:
+                            break
+                        cand._evicting = True
+                        victims.append(cand)
+                        freed += cand._rec.charged
+                if not victims:      # fits, or nothing evictable: charge now
+                    self.stats.resident_bytes += incoming
+                    if self.stats.resident_bytes > self.stats.peak_resident_bytes:
+                        self.stats.peak_resident_bytes = self.stats.resident_bytes
+                    if register is not None:
+                        self._handles.add(register)
+                        register._rec.charged = incoming
+                    return
+            for victim in victims:
+                self._spill(victim)
+
+    def _spill(self, h: BlockHandle) -> None:
+        try:
+            with h._lock:
+                with self._lock:
+                    f = h._frame
+                    if f is None or h._pins > 0:
+                        return       # raced with a fault/pin: nothing to do
+                path = h._rec.path
+                if path is None:
+                    path = h._rec.path = os.path.join(
+                        self._spill_dir(), f"blk{h._id}.npz")
+                    _save_frame(path, f)
+                # else: clean copy already on disk from a prior spill —
+                # frames are immutable, so dropping the memory is enough
+                with self._lock:
+                    if h._pins > 0:
+                        # pinned while we wrote: a kernel is reading this
+                        # frame RIGHT NOW — keep it resident (and charged);
+                        # the on-disk copy stays valid for a later eviction
+                        return
+                    h._frame = None
+                    self.stats.resident_bytes -= h._rec.charged
+                    h._rec.charged = 0
+                    self.stats.spills += 1
+                    self.stats.spilled_bytes += h.nbytes
+        finally:
+            with self._lock:
+                h._evicting = False
+
+    # ------------------------------------------------------------------
+    def _spill_dir(self) -> str:
+        d = self._dir
+        if d is None:
+            with self._lock:
+                if self._dir is None:
+                    base = self._base_dir or os.environ.get("REPRO_SPILL_DIR")
+                    if base:
+                        os.makedirs(base, exist_ok=True)
+                    self._dir = tempfile.mkdtemp(prefix="repro-spill-",
+                                                 dir=base or None)
+                d = self._dir
+        return d
+
+    @staticmethod
+    def _reap(store: "BlockStore", rec: _Rec) -> None:
+        """Finalizer for a dead handle: give back its resident charge and
+        delete its spill file (no leaked files once the owning frames go)."""
+        with store._lock:
+            store.stats.resident_bytes -= rec.charged
+            rec.charged = 0
+        if rec.path is not None:
+            try:
+                os.unlink(rec.path)
+            except OSError:
+                pass
+            rec.path = None
+
+    # ------------------------------------------------------------------
+    def shutdown(self) -> None:
+        """Drop every spill file and the spill directory.  Handles that were
+        spilled become unusable — call only when the owning session is done
+        (``reset_store`` / process exit / the CI spill smoke)."""
+        with self._lock:
+            for h in list(self._handles):
+                h._rec.path = None
+            d, self._dir = self._dir, None
+        if d is not None:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+# =============================================================================
+# module-level singleton + helpers
+# =============================================================================
+_STORE: BlockStore | None = None
+_STORE_LOCK = threading.Lock()
+_BUDGET_OVERRIDE: int | None = None
+_DIR_OVERRIDE: str | None = None
+
+
+def _env_budget() -> int:
+    if _BUDGET_OVERRIDE is not None:
+        return _BUDGET_OVERRIDE
+    try:
+        return max(0, int(os.environ.get("REPRO_MEM_BUDGET", "0")))
+    except ValueError:
+        return 0
+
+
+def get_store() -> BlockStore:
+    global _STORE
+    if _STORE is None:
+        with _STORE_LOCK:
+            if _STORE is None:
+                _STORE = BlockStore(_env_budget(), _DIR_OVERRIDE)
+    return _STORE
+
+
+def reset_store() -> None:
+    """Tear down the store (deleting spill files) and let the next use
+    rebuild it from the current environment — the ``schedule.reset_pool``
+    counterpart for tests and session reconfiguration.  Blocks ingested
+    under the old store keep working only if they were resident."""
+    global _STORE
+    with _STORE_LOCK:
+        if _STORE is not None:
+            _STORE.shutdown()
+        _STORE = None
+
+
+def configure(budget_bytes: int | None = None,
+              spill_dir: str | None = None) -> BlockStore:
+    """Process-wide programmatic override of the env knobs (the
+    ``Session(mem_budget_bytes=...)`` path).  The override is sticky — it
+    outlives the session that set it and shadows ``REPRO_MEM_BUDGET`` until
+    changed again.
+
+    Re-configuring with the *current* settings is a no-op; actually
+    changing them resets the store, which deletes every existing spill
+    file — frames ingested earlier lose their spilled blocks — so
+    configure before ingesting data."""
+    global _BUDGET_OVERRIDE, _DIR_OVERRIDE
+    if budget_bytes is not None:
+        _BUDGET_OVERRIDE = max(0, int(budget_bytes))
+    if spill_dir is not None:
+        _DIR_OVERRIDE = spill_dir
+    with _STORE_LOCK:
+        cur = _STORE
+    if (cur is not None and cur.budget == _env_budget()
+            and (spill_dir is None or cur._base_dir == spill_dir)):
+        return cur
+    reset_store()
+    return get_store()
+
+
+def unconfigure() -> None:
+    """Clear the sticky :func:`configure` overrides and reset the store, so
+    the next use rebuilds from ``REPRO_MEM_BUDGET`` / ``REPRO_SPILL_DIR``
+    again — the public undo for ``Session(mem_budget_bytes=...)``."""
+    global _BUDGET_OVERRIDE, _DIR_OVERRIDE
+    _BUDGET_OVERRIDE = None
+    _DIR_OVERRIDE = None
+    reset_store()
+
+
+def as_handle(block: "Frame | BlockHandle") -> BlockHandle:
+    """Wrap a Frame into the store (identity on handles)."""
+    if isinstance(block, BlockHandle):
+        return block
+    return get_store().put(block)
+
+
+def resolve(block: "Frame | BlockHandle") -> Frame:
+    """The block's Frame — faulting it in if spilled (identity on Frames)."""
+    if isinstance(block, BlockHandle):
+        return block.frame()
+    return block
+
+
+@contextlib.contextmanager
+def pinned(block: "Frame | BlockHandle") -> Iterator[Frame]:
+    """Fault + pin scope for per-block kernel execution (identity on
+    Frames).  Every dispatch-boundary block program runs inside one."""
+    if isinstance(block, BlockHandle):
+        with block.pinned() as f:
+            yield f
+    else:
+        yield block

@@ -14,6 +14,29 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long equivalence sweeps (excluded from the fast "
                    "check.sh gate; included in tier-1 and check.sh --full)")
+    config.addinivalue_line(
+        "markers", "spill: tests that intentionally run the block store "
+                   "under a memory budget (exempt from the global "
+                   "no-unexpected-spills guard)")
+
+
+@pytest.fixture(autouse=True)
+def _no_unexpected_spills(request):
+    """Residency must never regress silently: with the default
+    ``REPRO_MEM_BUDGET=0`` no test may cause a block spill.  Tests that
+    budget the store on purpose opt out with ``@pytest.mark.spill``."""
+    from repro.core.store import get_store
+    st = get_store()
+    before = st.stats.spills
+    yield
+    if request.node.get_closest_marker("spill") is None:
+        from repro.core.store import get_store as _get
+        cur = _get()
+        after = cur.stats.spills if cur is st else 0
+        assert after == before, (
+            f"unexpected block-store spills during {request.node.nodeid}: "
+            f"{after - before} (mark the test @pytest.mark.spill if "
+            "budget-governed residency is intended)")
 
 
 @pytest.fixture

@@ -1,0 +1,131 @@
+"""Direct coverage of the executor's benefit-density eviction policy
+(``Executor._store``) — eviction order, never-evict-sources — and its new
+shared-budget interaction with the block store (cached results' handles are
+stamped with the entry's benefit density so the ONE ``REPRO_MEM_BUDGET``
+evicts low-value working blocks before reusable cached sub-plans)."""
+import numpy as np
+import pytest
+
+from repro.core import algebra as alg
+from repro.core.dtypes import Domain
+from repro.core.executor import CacheEntry, Executor
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.partition import PartitionedFrame
+from repro.core.store import as_handle, get_store, reset_store
+
+
+def _pf(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    f = Frame([Column(np.asarray(rng.integers(0, 9, n, dtype=np.int32)),
+                      Domain.INT),
+               Column(np.asarray((rng.integers(0, 8, n) * np.float32(0.5))
+                                 .astype(np.float32)), Domain.FLOAT)],
+              RangeLabels(n), labels_from_values(["k", "x"]))
+    return PartitionedFrame.from_frame(f, row_parts=2)
+
+
+def _entry(ex, key, pf, cost_s):
+    ex._store(key, pf, cost_s)
+    return ex.cache[key]
+
+
+# =============================================================================
+# eviction order: lowest benefit density goes first
+# =============================================================================
+def test_eviction_order_by_benefit_density():
+    pf = _pf()
+    per_entry = pf.nbytes()
+    ex = Executor({}, cache_budget_bytes=3 * per_entry + 8)
+    # benefit density = cost × (1 + hits) / bytes; equal bytes → cost ranks
+    _entry(ex, ("map", 1), _pf(seed=1), cost_s=0.001)   # lowest — dies first
+    _entry(ex, ("map", 2), _pf(seed=2), cost_s=1.0)
+    _entry(ex, ("map", 3), _pf(seed=3), cost_s=0.1)
+    assert len(ex.cache) == 3
+    _entry(ex, ("map", 4), _pf(seed=4), cost_s=0.5)     # over budget now
+    assert ("map", 1) not in ex.cache                    # cheapest evicted
+    assert ("map", 2) in ex.cache and ("map", 3) in ex.cache
+    # push again: next-lowest density goes, the expensive entry survives
+    _entry(ex, ("map", 5), _pf(seed=5), cost_s=0.8)
+    assert ("map", 3) not in ex.cache
+    assert ("map", 2) in ex.cache
+
+
+def test_hits_raise_benefit_density():
+    pf = _pf()
+    per_entry = pf.nbytes()
+    ex = Executor({}, cache_budget_bytes=2 * per_entry + 8)
+    a = _entry(ex, ("map", 1), _pf(seed=1), cost_s=0.1)
+    b = _entry(ex, ("map", 2), _pf(seed=2), cost_s=0.1)
+    a.hits += 9                     # ten uses: density × 10
+    assert a.benefit_density() > b.benefit_density()
+    _entry(ex, ("map", 3), _pf(seed=3), cost_s=0.1)
+    assert ("map", 1) in ex.cache and ("map", 2) not in ex.cache
+
+
+def test_sources_never_evicted():
+    pf = _pf()
+    per_entry = pf.nbytes()
+    ex = Executor({}, cache_budget_bytes=2 * per_entry + 8)
+    # a source entry with the WORST density — still immune
+    _entry(ex, ("source", "f0"), _pf(seed=1), cost_s=1e-9)
+    _entry(ex, ("map", 1), _pf(seed=2), cost_s=10.0)
+    _entry(ex, ("map", 2), _pf(seed=3), cost_s=10.0)    # over budget
+    assert ("source", "f0") in ex.cache
+    assert ("map", 1) not in ex.cache                    # evicted instead
+
+
+# =============================================================================
+# shared budget with the block store
+# =============================================================================
+@pytest.mark.spill
+def test_cached_results_outlive_working_blocks_in_store(monkeypatch, tmp_path):
+    """Under one REPRO_MEM_BUDGET the store must spill plain working blocks
+    (benefit 0) before the handles of a cached executor result (benefit =
+    the entry's density)."""
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path))
+    pf = _pf(256, seed=1)
+    budget = pf.nbytes() * 2 + 64
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(budget))
+    reset_store()
+    try:
+        cached = PartitionedFrame([[as_handle(b)] for row in
+                                   _pf(256, seed=2).parts for b in row])
+        ex = Executor({}, cache_budget_bytes=1 << 30)
+        ex._store(("map", 99), cached, cost_s=5.0)
+        ent = ex.cache[("map", 99)]
+        assert all(h.benefit >= ent.benefit_density() * 0.99
+                   for row in cached.handles for h in row)
+        # now flood the store with plain (benefit-0) blocks: they should
+        # cycle through disk while the cached result stays resident
+        plain = [as_handle(Frame(
+            [Column(np.zeros(256, dtype=np.float32), Domain.FLOAT)],
+            RangeLabels(256), labels_from_values(["z"]))) for _ in range(6)]
+        assert get_store().stats.spills > 0
+        assert all(h.is_resident for row in cached.handles for h in row)
+        assert any(not h.is_resident for h in plain)
+        del plain
+    finally:
+        reset_store()
+
+
+@pytest.mark.spill
+def test_cache_entry_nbytes_uses_handle_metadata(monkeypatch, tmp_path):
+    """CacheEntry accounting must not fault spilled blocks — nbytes comes
+    from handle metadata."""
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path))
+    one = _pf(256).nbytes()
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(one + 64))
+    reset_store()
+    try:
+        a = PartitionedFrame([[as_handle(b)] for row in _pf(256, seed=1).parts
+                              for b in row])
+        b = PartitionedFrame([[as_handle(blk)] for row in
+                              _pf(256, seed=2).parts for blk in row])
+        st = get_store().stats
+        assert st.spills > 0               # a was pushed out by b
+        faults0 = st.faults
+        assert a.nbytes() == one           # metadata only
+        assert st.faults == faults0        # no fault to account
+    finally:
+        reset_store()

@@ -1,0 +1,251 @@
+"""Differential tests: ``api.read_csv`` (chunk-parallel streaming parser)
+against ``pandas.read_csv`` — the satellite correctness gaps of the seed
+parser (quoted fields containing the separator, CRLF line endings,
+empty-string vs missing) plus schema induction, usecols pushdown, and
+chunk-boundary invariance.
+
+Comparison normalizes representation differences that are storage policy,
+not semantics: our floats are float32 (compared with float32-level
+tolerance), our nulls are ``None`` where pandas uses NaN, and our bool
+domain prints Python bools.  Test data avoids the few spots where the
+engine's S(·) intentionally differs from pandas' inference (e.g. a column
+of only ``0``/``1`` induces BOOL here, int64 there — a seed-era contract
+the budget-0 fast path must keep).
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+from repro.core import EvalMode, Session, set_session
+from repro.core.api import _read_csv_seed, read_csv
+
+
+@pytest.fixture
+def session():
+    s = set_session(Session(mode=EvalMode.LAZY))
+    yield s
+    s.close()
+
+
+def _norm(v):
+    if v is None:
+        return None
+    if isinstance(v, float) and math.isnan(v):
+        return None
+    if isinstance(v, (bool, np.bool_)):
+        return bool(v)
+    return v
+
+
+def _assert_matches_pandas(df, pdf, float_rtol=1e-6):
+    assert df.columns == list(pdf.columns)
+    ours = df.to_pydict()
+    for name in pdf.columns:
+        mine = [_norm(v) for v in ours[name]]
+        theirs = [_norm(v) for v in pdf[name].tolist()]
+        assert len(mine) == len(theirs), name
+        for i, (a, b) in enumerate(zip(mine, theirs)):
+            if a is None or b is None:
+                assert a is None and b is None, (name, i, a, b)
+            elif isinstance(b, float) and not isinstance(b, bool):
+                assert a == pytest.approx(b, rel=float_rtol), (name, i)
+            else:
+                assert a == b, (name, i, a, b)
+
+
+def _write(tmp_path, text, name="t.csv", binary=False):
+    p = tmp_path / name
+    if binary:
+        p.write_bytes(text)
+    else:
+        p.write_text(text)
+    return str(p)
+
+
+# =============================================================================
+# the three satellite gaps
+# =============================================================================
+def test_quoted_separator_fields(tmp_path, session):
+    p = _write(tmp_path,
+               'a,b,c\n1,"x,y",3\n2,"p,q,r",4\n3,plain,5\n')
+    _assert_matches_pandas(read_csv(p), pd.read_csv(p))
+
+
+def test_quoted_quotes_and_mixed_quoting(tmp_path, session):
+    p = _write(tmp_path,
+               'a,s\n1,"say ""hi"", ok"\n2,"tail"\n3,bare\n')
+    pdf = pd.read_csv(p)
+    assert pdf["s"].tolist()[0] == 'say "hi", ok'
+    _assert_matches_pandas(read_csv(p), pdf)
+
+
+def test_crlf_line_endings(tmp_path, session):
+    # the streaming parser reads raw byte ranges (no universal-newline
+    # translation layer), so it must strip \r itself
+    p = _write(tmp_path, b'a,b\r\n1,x\r\n2,y\r\n3,z\r\n', binary=True)
+    _assert_matches_pandas(read_csv(p), pd.read_csv(p))
+
+
+def test_empty_vs_missing_default_na(tmp_path, session):
+    # pandas default: both a missing field and a quoted "" become null
+    p = _write(tmp_path, 'a,b,c\n"",x,\n1,,z\n2,"",w\n')
+    _assert_matches_pandas(read_csv(p), pd.read_csv(p))
+
+
+def test_empty_vs_missing_keep_default_na_false(tmp_path, session):
+    # keep_default_na=False: both surface as empty *strings*, and a numeric-
+    # looking column with empties becomes a string column — pandas semantics
+    p = _write(tmp_path, 'a,b\n"",x\n1,\n2,y\n')
+    _assert_matches_pandas(read_csv(p, keep_default_na=False),
+                           pd.read_csv(p, keep_default_na=False))
+    got = read_csv(p, keep_default_na=False).to_pydict()
+    assert got["a"] == ["", "1", "2"]      # not None — the seed conflated
+
+
+def test_missing_numeric_becomes_masked_not_zero(tmp_path, session):
+    p = _write(tmp_path, 'x,y\n1,2.5\n,4.25\n5,\n')
+    df = read_csv(p)
+    _assert_matches_pandas(df, pd.read_csv(p))
+    assert df.to_pydict()["x"] == [1, None, 5]
+
+
+# =============================================================================
+# schema induction parity
+# =============================================================================
+def test_schema_induction_matches_pandas(tmp_path, session):
+    p = _write(tmp_path,
+               "i,f,b,s\n"
+               "1,1.5,true,alpha\n"
+               "2,2.25,false,beta\n"
+               "3,-3.75,true,alpha\n")
+    df = read_csv(p)
+    pdf = pd.read_csv(p)
+    _assert_matches_pandas(df, pdf)
+    assert df.dtypes == ["int", "float", "bool", "str"]
+
+
+def test_mixed_chunk_domains_vote_like_global_induction(tmp_path, session):
+    """A column whose early rows look INT but whose late rows are FLOAT (or
+    STR) must induce the same domain the whole-column S(·) would — the
+    per-chunk castability vote is conjunctive, not first-chunk-wins."""
+    n = 3000
+    lines = ["v,w"]
+    for i in range(n):
+        lines.append(f"{i % 7},{i % 5}")
+    lines.append("2.5,tail")               # floats/strings only at the end
+    p = _write(tmp_path, "\n".join(lines) + "\n")
+    os.environ["REPRO_CSV_CHUNK_BYTES"] = "512"   # force many chunks
+    try:
+        df = read_csv(p)
+    finally:
+        del os.environ["REPRO_CSV_CHUNK_BYTES"]
+    pdf = pd.read_csv(p)
+    _assert_matches_pandas(df, pdf)
+    assert df.dtypes[0] == "float" and df.dtypes[1] == "str"
+
+
+def test_chunk_boundary_invariance(tmp_path, session):
+    """The parse must be invariant to where the byte-range chunk boundaries
+    land (including boundaries inside quoted fields)."""
+    rng = np.random.default_rng(5)
+    lines = ["k,v,s"]
+    for i in range(500):
+        s = f'"s,{i % 13}"' if i % 3 == 0 else f"s{i % 13}"
+        lines.append(f"{i % 9},{rng.integers(0, 100)},{s}")
+    p = _write(tmp_path, "\n".join(lines) + "\n")
+    ref = read_csv(p).to_pydict()
+    for cb in (64, 777, 10 ** 9):
+        os.environ["REPRO_CSV_CHUNK_BYTES"] = str(cb)
+        try:
+            assert read_csv(p).to_pydict() == ref, cb
+        finally:
+            del os.environ["REPRO_CSV_CHUNK_BYTES"]
+    _assert_matches_pandas(read_csv(p), pd.read_csv(p))
+
+
+# =============================================================================
+# projection pushdown + misc
+# =============================================================================
+def test_usecols_pushdown(tmp_path, session):
+    p = _write(tmp_path, 'a,b,c,d\n1,x,2.5,t\n2,y,3.5,f\n')
+    _assert_matches_pandas(read_csv(p, usecols=["a", "c"]),
+                           pd.read_csv(p, usecols=["a", "c"]))
+    # file order kept even if usecols is shuffled (pandas semantics)
+    df = read_csv(p, usecols=["c", "a"])
+    assert df.columns == ["a", "c"]
+    with pytest.raises(KeyError):
+        read_csv(p, usecols=["a", "nope"])
+
+
+def test_alternate_separator(tmp_path, session):
+    p = _write(tmp_path, 'a;b\n1;"x;y"\n2;z\n')
+    _assert_matches_pandas(read_csv(p, sep=";"), pd.read_csv(p, sep=";"))
+
+
+def test_multichar_separator_with_quotes(tmp_path, session):
+    # the quoted-line tokenizer must advance by len(sep), like str.split
+    p = _write(tmp_path, 'a||b||c\n1||"x||y"||3\n2||z||4\n')
+    got = read_csv(p, sep="||").to_pydict()
+    assert got == {"a": [1, 2], "b": ["x||y", "z"], "c": [3, 4]}
+
+
+def test_embedded_newline_in_quoted_field_raises(tmp_path, session):
+    # the byte-range chunker splits records on raw newlines, so a multiline
+    # quoted field cannot be parsed faithfully — fail loudly, never corrupt
+    p = _write(tmp_path, 'a,b\n1,"x\ny"\n2,z\n')
+    with pytest.raises(ValueError, match="line break"):
+        read_csv(p).collect()
+
+
+def test_seed_path_rejects_unsupported_args(tmp_path, session, monkeypatch):
+    p = _write(tmp_path, 'a,b\n1,x\n')
+    monkeypatch.setenv("REPRO_CSV_STREAM", "0")
+    with pytest.raises(ValueError, match="seed parser"):
+        read_csv(p, usecols=["a"])
+    with pytest.raises(ValueError, match="seed parser"):
+        read_csv(p, keep_default_na=False)
+    assert read_csv(p).to_pydict() == {"a": [1], "b": ["x"]}
+
+
+def test_extra_fields_raise_short_rows_pad(tmp_path, session):
+    # pandas raises ParserError on surplus fields; short rows fill NaN
+    p = _write(tmp_path, 'a,b\n1,x\n2,y,z\n')
+    with pytest.raises(pd.errors.ParserError):
+        pd.read_csv(p)
+    with pytest.raises(ValueError, match="expected 2 fields"):
+        read_csv(p).collect()
+    p2 = _write(tmp_path, 'a,b\n1,x\n2\n3,z\n', name="short.csv")
+    _assert_matches_pandas(read_csv(p2), pd.read_csv(p2))
+
+
+def test_blank_lines_skipped(tmp_path, session):
+    p = _write(tmp_path, 'a,b\n1,x\n\n2,y\n\n\n3,z\n')
+    _assert_matches_pandas(read_csv(p), pd.read_csv(p))
+
+
+def test_header_only_file(tmp_path, session):
+    p = _write(tmp_path, 'a,b,c\n')
+    df = read_csv(p)
+    assert df.columns == ["a", "b", "c"]
+    assert len(df) == 0
+
+
+def test_matches_seed_parser_on_plain_files(tmp_path, session):
+    """On the files the seed parser handled correctly (no quotes, LF, no
+    empty-vs-missing subtleties) the streaming parser is value-identical —
+    the budget-0 fast-path contract."""
+    rng = np.random.default_rng(9)
+    lines = ["k,v,x,s"]
+    for i in range(2000):
+        lines.append(f"{i % 8},{rng.integers(0, 50)},"
+                     f"{rng.integers(0, 12) * 0.25},s{i % 12:02d}")
+    p = _write(tmp_path, "\n".join(lines) + "\n")
+    a = read_csv(p)
+    b = _read_csv_seed(p)
+    assert a.to_pydict() == b.to_pydict()
+    assert a.collect().row_labels.to_list() == b.collect().row_labels.to_list()
+    assert a.dtypes == b.dtypes

@@ -283,6 +283,63 @@ def test_scheduling_equivalence_sweep(small_pool, row_parts):
 
 
 # -----------------------------------------------------------------------------
+# out-of-core equivalence: grids {1, W, 4W} × budget {0, tiny} — bit-exact
+# -----------------------------------------------------------------------------
+def _mk_exact_frame(n, seed=3):
+    """Like _mk_frame but with exactly-representable floats (k × 0.25), so
+    bit-identity holds across ANY working grid — the budget floor in
+    ``preferred_row_parts`` legitimately changes the grid, which reorders
+    float partial combines; with exact data that reordering is lossless."""
+    rng = np.random.default_rng(seed)
+    return Frame.from_pydict({
+        "k": rng.integers(0, 6, n).tolist(),
+        "v": rng.integers(-100, 100, n).tolist(),
+        "x": (rng.integers(0, 64, n) * 0.25).tolist(),
+    })
+
+
+@pytest.mark.spill
+@pytest.mark.parametrize("grid_mult", [0, 1, 4])   # 0 → a single partition
+def test_budget_equivalence_sweep(small_pool, grid_mult):
+    """REPRO_MEM_BUDGET=0 (default) must keep the fully-resident fast path
+    bit-identical to seed behaviour, and a tiny budget must still produce
+    bit-identical results while actually spilling — over the same plan sweep
+    the scheduling equivalence tests use, on grids {1, W, 4W}."""
+    from repro.core.store import get_store, reset_store
+    monkeypatch = small_pool
+    w = schedule.pool_width()
+    row_parts = max(1, grid_mult * w)
+    f = _mk_exact_frame(8000, seed=13)
+
+    def run_all(optimize):
+        store = {"f0": PartitionedFrame.from_frame(f, row_parts=row_parts)}
+        src = alg.Source("f0", nrows=f.nrows, ncols=f.ncols)
+        out = {}
+        for name, plan in _plans(src).items():
+            out[name] = _run(plan, store, optimize=optimize)
+        return out
+
+    monkeypatch.delenv("REPRO_MEM_BUDGET", raising=False)
+    reset_store()
+    try:
+        ref = {k: v[0] for k, v in run_all(True).items()}
+        assert get_store().stats.spills == 0     # fast path: untracked
+
+        budget = max(f.nbytes() // 4, 1)
+        monkeypatch.setenv("REPRO_MEM_BUDGET", str(budget))
+        reset_store()
+        for optimize in (True, False):
+            got = run_all(optimize)
+            for name, (frame_out, st) in got.items():
+                assert _frames_bit_equal(frame_out, ref[name]), (
+                    name, optimize, row_parts)
+        if row_parts > 1:
+            assert get_store().stats.spills > 0  # the budget engaged
+    finally:
+        reset_store()
+
+
+# -----------------------------------------------------------------------------
 # ExecStats plumbing + PR-2 counter semantics under coalescing
 # -----------------------------------------------------------------------------
 def test_executor_attributes_dispatches_and_fused_counters_still_hold(small_pool):

@@ -1,0 +1,426 @@
+"""Out-of-core block store: residency states, budget-governed spill/fault,
+pin scopes, benefit-density eviction, and the end-to-end acceptance pipeline
+(map→filter→groupby→drop_duplicates over data 4× the budget, bit-identical
+to the unbudgeted run, pandas-oracle checked).
+
+Data uses exactly-representable floats (multiples of 0.25 — the repo
+convention from the scheduling/dedup sweeps), so per-grid partial-combine
+order cannot introduce ulp noise and bit-identity across budgets is exact.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import EvalMode, Session, set_session
+from repro.core import algebra as alg
+from repro.core import schedule
+from repro.core.api import read_csv
+from repro.core.dtypes import Domain
+from repro.core.executor import Executor
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.partition import PartitionedFrame
+from repro.core.store import (BlockHandle, get_store, reset_store, as_handle,
+                              resolve)
+
+pytestmark = pytest.mark.spill
+
+
+@pytest.fixture
+def fresh_store(monkeypatch, tmp_path):
+    """Rebuild the store from the env after each (monkeypatched) change and
+    tear it down afterwards so no spill files leak into later tests."""
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path))
+    reset_store()
+    yield
+    reset_store()
+
+
+def _frame(n=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return Frame(
+        [Column(np.asarray(rng.integers(0, 8, n, dtype=np.int32)), Domain.INT),
+         Column(np.asarray((rng.integers(0, 12, n) * np.float32(0.25))
+                           .astype(np.float32)), Domain.FLOAT),
+         Column(np.asarray(rng.integers(0, 5, n, dtype=np.int32)),
+                Domain.STR, None, ("a", "b", "c", "d", "e"))],
+        RangeLabels(n), labels_from_values(["k", "x", "s"]))
+
+
+# =============================================================================
+# store unit behaviour
+# =============================================================================
+def test_budget_zero_is_untracked_fast_path(fresh_store):
+    f = _frame()
+    h = as_handle(f)
+    assert isinstance(h, BlockHandle)
+    assert not h.is_tracked
+    assert h.is_resident
+    assert h.frame() is f               # same object, zero-copy wrap
+    assert get_store().stats.spills == 0
+
+
+def test_spill_and_fault_roundtrip(fresh_store, monkeypatch):
+    f = _frame(200)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(f.nbytes() + 16))
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))   # evicts h1
+    st = get_store().stats
+    assert st.spills == 1 and not h1.is_resident and h2.is_resident
+    # fault h1 back: h2 spills to make room
+    back = h1.frame()
+    assert st.faults == 1 and h1.is_resident and not h2.is_resident
+    # bit-identical round trip (values, masks, labels, dictionary)
+    ref = _frame(200, seed=1)
+    assert back.to_pydict() == ref.to_pydict()
+    assert back.row_labels.to_list() == ref.row_labels.to_list()
+    assert back.col(
+        "s").dictionary == ref.col("s").dictionary
+    assert st.peak_resident_bytes <= get_store().budget + ref.nbytes()
+
+
+def test_pinned_blocks_never_evicted(fresh_store, monkeypatch):
+    f = _frame(200, seed=1)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(f.nbytes() + 16))
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    with h1.pinned():
+        h2 = as_handle(_frame(200, seed=2))  # over budget, but h1 is pinned
+        assert h1.is_resident              # overshoot instead of eviction
+    h3 = as_handle(_frame(200, seed=3))    # unpinned now: h1 is fair game
+    assert not h1.is_resident
+    del h2, h3
+
+
+def test_eviction_order_lru_then_benefit(fresh_store, monkeypatch):
+    one = _frame(200).nbytes()
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(2 * one + 16))
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))
+    h1.frame()                             # touch h1: h2 becomes LRU
+    h3 = as_handle(_frame(200, seed=3))
+    assert not h2.is_resident and h1.is_resident
+    # benefit beats recency: stamp h1 as a valuable cached result
+    h1.benefit = 10.0
+    h2.frame()                             # fault h2 back (someone spills)
+    h4 = as_handle(_frame(200, seed=4))
+    assert h1.is_resident                  # high benefit density survives
+    del h3, h4
+
+
+def test_spill_files_cleaned_on_reset(fresh_store, monkeypatch, tmp_path):
+    f = _frame(200)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(f.nbytes() + 16))
+    reset_store()
+    keep = [as_handle(_frame(200, seed=1)), as_handle(_frame(200, seed=2))]
+    assert get_store().stats.spills >= 1
+    assert any(tmp_path.rglob("blk*.npz"))
+    reset_store()
+    assert not any(tmp_path.rglob("blk*.npz"))
+    del keep
+
+
+def test_handle_gc_deletes_spill_file(fresh_store, monkeypatch, tmp_path):
+    import gc
+    f = _frame(200)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(f.nbytes() + 16))
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))
+    assert not h1.is_resident
+    files = list(tmp_path.rglob("blk*.npz"))
+    assert files
+    del h1
+    gc.collect()
+    assert not any(p.exists() for p in files)
+
+
+def test_configure_same_settings_is_nondestructive(fresh_store, monkeypatch):
+    """Re-configuring with the current budget must NOT reset the store —
+    a second Session(mem_budget_bytes=N) would otherwise delete the first
+    session's spill files."""
+    from repro.core import store as st_mod
+    f = _frame(200)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(f.nbytes() + 16))
+    reset_store()
+    before = get_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))   # spills h1
+    assert not h1.is_resident
+    same = st_mod.configure(budget_bytes=f.nbytes() + 16)
+    assert same is before                  # no reset
+    assert h1.frame().to_pydict() == _frame(200, seed=1).to_pydict()
+    # actually CHANGING the budget resets (documented destructive path):
+    # a later fault of a previously spilled block fails loudly, not opaquely
+    h2.frame()                             # spill h1 again
+    assert not h1.is_resident
+    st_mod.configure(budget_bytes=f.nbytes() + 32)
+    with pytest.raises(RuntimeError, match="spill"):
+        h1.frame()
+    st_mod.unconfigure()                   # public undo of the sticky override
+    assert get_store().budget == f.nbytes() + 16   # env knob visible again
+
+
+def test_wide_int64_survives_spill(fresh_store, monkeypatch):
+    big = np.asarray([2 ** 53 + 1, 2 ** 53 + 2, 5], dtype=np.int64)
+    f = Frame([Column(big, Domain.INT)], RangeLabels(3),
+              labels_from_values(["w"]))
+    monkeypatch.setenv("REPRO_MEM_BUDGET", "1")
+    reset_store()
+    h = as_handle(f)
+    h2 = as_handle(_frame(50))            # evict the wide column
+    assert not h.is_resident
+    back = h.frame()
+    # int64 host storage must come back as host numpy, not a jax array
+    # (jnp.asarray would truncate through int32)
+    assert isinstance(back.col("w").data, np.ndarray)
+    assert back.col("w").data.dtype == np.int64
+    assert back.to_pydict() == {"w": [2 ** 53 + 1, 2 ** 53 + 2, 5]}
+
+
+# =============================================================================
+# zero-copy planning over handles (no faults for untouched blocks)
+# =============================================================================
+def test_regroup_passthrough_never_faults(fresh_store, monkeypatch):
+    one = _frame(100).nbytes()
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(2 * one + 16))
+    reset_store()
+    pf = PartitionedFrame([[as_handle(_frame(100, seed=i))] for i in range(4)])
+    spilled = [h for row in pf.handles for h in row if not h.is_resident]
+    assert spilled                         # budget forced some out
+    st = get_store().stats
+    faults0 = st.faults
+    # identity regroup (same boundaries) + metadata queries: no faults
+    same = pf.repartition(row_parts=4)
+    assert same.row_sizes == pf.row_sizes
+    assert pf.nbytes() == 4 * one
+    assert pf.prefix(150).row_parts == 2
+    assert st.faults == faults0
+    # pass-through handles are forwarded, not copied
+    assert same.handles[0][0] is pf.handles[0][0]
+
+
+def test_union_is_metadata_only(fresh_store, monkeypatch):
+    one = _frame(100).nbytes()
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(one + 16))
+    reset_store()
+    a = PartitionedFrame([[as_handle(_frame(100, seed=1))]])
+    b = PartitionedFrame([[as_handle(_frame(100, seed=2))]])
+    st = get_store().stats
+    faults0 = st.faults
+    store = {"a": a, "b": b}
+    ex = Executor(store, optimize=False)
+    out = ex.evaluate(alg.Union(alg.Source("a", 100, 3),
+                                alg.Source("b", 100, 3)))
+    assert out.nrows == 200
+    assert st.faults == faults0            # union itself faulted nothing
+
+
+# =============================================================================
+# equivalence sweep: grids {1, W, 4W} × budget {0, tiny}   (satellite)
+# =============================================================================
+def _pipeline_plan(src):
+    from repro.core.algebra import Map, Selection, GroupBy, DropDuplicates, col, lit, Udf
+
+    def scale(cols, frame):
+        out = dict(cols)
+        c = cols["x"]
+        out["x"] = Column(c.data * 2.0 + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+
+    udf = Udf(name="store_sweep_scale", fn=scale, deps=frozenset(["x"]),
+              elementwise=True)
+    g = GroupBy(Selection(Map(src, udf), col("k") < lit(6)),
+                ("k",), [("x", "sum", "x"), ("x", "count", "n")])
+    return DropDuplicates(g, None)
+
+
+@pytest.mark.parametrize("grid", [1, None, "4w"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_budget_equivalence_sweep(grid, fused, fresh_store, monkeypatch):
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    w = schedule.pool_width()
+    rp = {1: 1, None: w, "4w": 4 * w}[grid]
+    frame = _frame(4000, seed=7)
+
+    def run():
+        pf = PartitionedFrame.from_frame(frame, row_parts=rp)
+        ex = Executor({"f": pf}, optimize=fused)
+        out = ex.evaluate(_pipeline_plan(alg.Source("f", 4000, 3)))
+        return out.to_frame().to_pydict(), ex.stats
+
+    monkeypatch.delenv("REPRO_MEM_BUDGET", raising=False)
+    reset_store()
+    ref, st_ref = run()
+    assert st_ref.spills == 0 and st_ref.faults == 0
+
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(max(frame.nbytes() // 4, 1)))
+    reset_store()
+    got, st = run()
+    assert got == ref                       # bit-identical under the budget
+    if rp > 1:
+        assert st.spills > 0                # the budget actually engaged
+    schedule.reset_pool()
+
+
+# =============================================================================
+# acceptance: pipeline over data 4× the budget (+ pandas oracle)
+# =============================================================================
+def _write_csv(path, n, seed=3):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, 8, n)
+    v = rng.integers(0, 50, n)
+    x = rng.integers(0, 12, n) * 0.25
+    s = rng.integers(0, 12, n)
+    with open(path, "w") as f:
+        f.write("k,v,x,s\n")
+        for i in range(n):
+            f.write(f"{k[i]},{v[i]},{x[i]},s{s[i]:02d}\n")
+
+
+def test_outofcore_pipeline_4x_budget(fresh_store, monkeypatch, tmp_path):
+    pd = pytest.importorskip("pandas")
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    csv = tmp_path / "big.csv"
+    _write_csv(csv, 30_000)
+
+    def run():
+        s = set_session(Session(mode=EvalMode.LAZY))
+        try:
+            df = read_csv(str(csv))
+            df["y"] = df["x"] * 2.0 + 1.0
+            out = (df[df["v"] > 10].groupby("k")
+                   .agg({"y": "sum", "x": "mean"}).drop_duplicates())
+            res = out.collect().to_pydict()
+            total = s.frames["frame_0"].nbytes()
+            return res, total, s.executor.stats
+        finally:
+            s.close()
+
+    monkeypatch.delenv("REPRO_MEM_BUDGET", raising=False)
+    reset_store()
+    ref, total, st0 = run()
+    assert st0.spills == 0 and st0.peak_resident_bytes == 0
+
+    budget = total // 4                    # data is 4× the budget
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(budget))
+    reset_store()
+    got, _, st = run()
+
+    # bit-identical to the unbudgeted run
+    assert got == ref
+    # residency counters: the budget engaged, and the peak held the bound
+    assert st.spills > 0 and st.faults > 0 and st.spilled_bytes > 0
+    store_stats = get_store().stats
+    assert store_stats.spills > 0
+    one_block = schedule.budget_max_block_bytes()
+    ingest_block = max(h.nbytes for h in get_store()._handles)
+    assert store_stats.peak_resident_bytes <= budget + max(one_block,
+                                                           ingest_block)
+
+    # pandas oracle on the same file + pipeline
+    pdf = pd.read_csv(csv)
+    pdf["y"] = pdf["x"] * 2.0 + 1.0
+    g = (pdf[pdf["v"] > 10].groupby("k", as_index=False)
+         .agg(y=("y", "sum"), x=("x", "mean")))
+    np.testing.assert_array_equal(np.asarray(got["k"]), g["k"].to_numpy())
+    np.testing.assert_allclose(np.asarray(got["y"]), g["y"].to_numpy(),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got["x"]), g["x"].to_numpy(),
+                               rtol=1e-5)
+    schedule.reset_pool()
+
+
+def test_read_csv_larger_than_budget_streams_to_spill(fresh_store,
+                                                      monkeypatch, tmp_path):
+    """A CSV bigger than the budget must ingest into a spill-backed
+    PartitionedFrame without ever holding the whole file resident."""
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    csv = tmp_path / "huge.csv"
+    _write_csv(csv, 20_000)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", "40000")   # ≪ device payload
+    reset_store()
+    s = set_session(Session(mode=EvalMode.LAZY))
+    try:
+        df = read_csv(str(csv))
+        pf = s.frames["frame_0"]
+        st = get_store().stats
+        assert pf.nbytes() > 40000
+        assert st.spills > 0                       # ingest spilled en route
+        assert st.peak_resident_bytes <= 40000 + max(
+            h.nbytes for h in get_store()._handles)
+        assert not all(h.is_resident for row in pf.handles for h in row)
+        # and the data still reads back correctly (faulting on demand)
+        assert len(df) == 20_000
+        got = df[["k"]].collect().to_pydict()["k"][:5]
+        import pandas as pd_mod
+        assert got == pd_mod.read_csv(csv)["k"].tolist()[:5]
+    except ImportError:
+        pass
+    finally:
+        s.close()
+    schedule.reset_pool()
+
+
+# =============================================================================
+# executor attribution + shared budget
+# =============================================================================
+def test_execstats_attribution_and_shared_budget(fresh_store, monkeypatch):
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    frame = _frame(4000, seed=9)
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(max(frame.nbytes() // 3, 1)))
+    reset_store()
+    pf = PartitionedFrame.from_frame(frame, row_parts=8)
+    ex = Executor({"f": pf}, optimize=True)
+    plan = _pipeline_plan(alg.Source("f", 4000, 3))
+    out1 = ex.evaluate(plan)
+    assert ex.stats.faults > 0             # spilled source blocks faulted
+    assert ex.stats.peak_resident_bytes > 0
+    assert ex.stats.peak_resident_bytes <= get_store().stats.peak_resident_bytes
+    # the cached result's handles carry the entry's benefit density, so the
+    # store's eviction ranks them above plain working blocks
+    key = ex._prepared(plan).cache_key()
+    ent = ex.cache[key]
+    assert ent.benefit_density() > 0
+    for row in ent.result.handles:
+        for h in row:
+            if h.is_tracked:
+                assert h.benefit >= ent.benefit_density() * 0.99
+    # re-evaluation is a cache hit and faults at most the cached result
+    out2 = ex.evaluate(plan)
+    assert ex.stats.cache_hits >= 1
+    assert out2.to_frame().to_pydict() == out1.to_frame().to_pydict()
+    schedule.reset_pool()
+
+
+def test_residency_aware_dispatch_order(fresh_store, monkeypatch):
+    """Resident blocks run before spilled ones; results stay in block
+    order.  A 1-worker pool makes the execution order deterministic."""
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "1")
+    schedule.reset_pool()
+    one = _frame(100).nbytes()
+    monkeypatch.setenv("REPRO_MEM_BUDGET", str(2 * one + 16))
+    reset_store()
+    try:
+        handles = [as_handle(_frame(100, seed=i)) for i in range(4)]
+        spilled_idx = {i for i, h in enumerate(handles) if not h.is_resident}
+        assert spilled_idx                     # some spilled
+        seen = []
+
+        def probe(h):
+            seen.append(h)
+            return resolve(h).nrows
+
+        out = schedule.dispatch_blocks(probe, handles)
+        assert out == [100] * 4                # block order restored
+        ranks = [1 if handles.index(h) in spilled_idx else 0 for h in seen]
+        assert ranks == sorted(ranks)          # residents first
+    finally:
+        schedule.reset_pool()
