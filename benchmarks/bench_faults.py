@@ -1,0 +1,204 @@
+"""Fault-tolerance layer: retry-machinery overhead + chaos completion price.
+
+Two scenarios, numbers landing in ``BENCH_faults.json``:
+
+  * ``overhead`` — the retry/deadline machinery with injection DISABLED
+    (the production path) vs ``REPRO_TASK_RETRIES=0`` (machinery compiled
+    out of the dispatch path) on a dispatch-heavy workload.  Headline gate:
+    ≤ 1% — a zero-fault run must not pay for robustness it isn't using.
+
+  * ``chaos`` — the acceptance pipeline (map→filter→groupby→drop-duplicates
+    over a CSV, 4× the memory budget) under a seeded 5%-rate fault plan
+    (worker exceptions + corrupt spill reads + ENOSPC spill writes): must
+    complete bit-identical to the fault-free run, and the run records the
+    recovery slowdown factor plus the injected/retried/recomputed counters.
+
+Correctness is asserted before timing, as in the other suites.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+# standalone runs mirror benchmarks/run.py: one partition ↔ one core, set
+# before jax initializes
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import numpy as np
+
+from repro.core import EvalMode, Session, set_session
+from repro.core import faults, schedule
+from repro.core.api import read_csv
+from repro.core.store import get_store, reset_store
+
+from ._util import Reporter, time_us
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+
+_CHAOS_PLAN = "worker:0.05,corrupt:0.05,enospc:0.05"
+_CHAOS_SEED = 11
+
+
+# =============================================================================
+# scenario 1: retry machinery at 0% faults — the production-path tax
+# =============================================================================
+def _bench_overhead(rep: Reporter, nblocks: int, block_rows: int,
+                    reps: int) -> dict:
+    """Dispatch-heavy workload: ``nblocks`` pool tasks each doing real numpy
+    work, so the guarded-dispatch bookkeeping (try/except + knob reads) is
+    measured against a realistic per-block cost."""
+    rng = np.random.default_rng(0)
+    blocks = [rng.standard_normal(block_rows) for _ in range(nblocks)]
+
+    def work(x):
+        return float(np.sort(x)[block_rows // 2])
+
+    def sweep():
+        return schedule.dispatch_blocks(work, blocks)
+
+    schedule.configure_retries(clear=True)
+    ref = sweep()
+    schedule.configure_retries(retries=0)
+    assert sweep() == ref, "retries=0 path diverged"
+    schedule.configure_retries(clear=True)
+
+    samples = {"guarded": [], "bare": []}
+    for _ in range(5):          # interleaved passes, median (see bench_dedup)
+        schedule.configure_retries(clear=True)     # default: retries=2
+        samples["guarded"].append(time_us(sweep, reps=reps, warmup=0))
+        schedule.configure_retries(retries=0)      # machinery disabled
+        samples["bare"].append(time_us(sweep, reps=reps, warmup=0))
+    schedule.configure_retries(clear=True)
+    t_guard = float(np.median(samples["guarded"]))
+    t_bare = float(np.median(samples["bare"]))
+    overhead = t_guard / max(t_bare, 1e-9) - 1.0
+    rep.add(f"faults/overhead/guarded[{nblocks}x{block_rows}]", t_guard,
+            f"overhead={overhead * 100:.2f}%")
+    rep.add(f"faults/overhead/retries0[{nblocks}x{block_rows}]", t_bare,
+            "baseline")
+    return {"nblocks": nblocks, "block_rows": block_rows,
+            "guarded_us": round(t_guard, 1), "retries0_us": round(t_bare, 1),
+            "overhead_pct": round(overhead * 100, 3),
+            "pool_workers": schedule.pool_width()}
+
+
+# =============================================================================
+# scenario 2: completion under a seeded 5% fault plan, 4×-budget pipeline
+# =============================================================================
+def _write_csv(path: str, n: int, seed: int = 7) -> None:
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, 8, n)
+    v = rng.integers(0, 50, n)
+    x = rng.integers(0, 12, n) * 0.25
+    with open(path, "w") as f:
+        f.write("k,v,x\n")
+        for i in range(n):
+            f.write(f"{k[i]},{v[i]},{x[i]}\n")
+
+
+def _pipeline(path: str):
+    s = set_session(Session(mode=EvalMode.LAZY))
+    df = read_csv(path)
+    df["y"] = df["x"] * 2.0 + 1.0
+    out = (df[df["v"] > 10].groupby("k")
+           .agg({"y": "sum", "x": "mean"}).drop_duplicates())
+    got = out.collect()
+    total = s.frames["frame_0"].nbytes()
+    stats = s.executor.stats
+    s.close()
+    return got, total, stats
+
+
+def _bench_chaos(rep: Reporter, n_rows: int, reps: int) -> dict:
+    tmp = tempfile.mkdtemp(prefix="repro-bench-faults-")
+    path = os.path.join(tmp, "big.csv")
+    _write_csv(path, n_rows)
+
+    os.environ.pop("REPRO_MEM_BUDGET", None)
+    faults.reset()
+    reset_store()
+    ref, total, _ = _pipeline(path)
+
+    os.environ["REPRO_MEM_BUDGET"] = str(total // 4)
+    os.environ["REPRO_RETRY_BACKOFF_MS"] = "1"
+    try:
+        reset_store()
+        got_clean, _, _ = _pipeline(path)          # budgeted, fault-free
+        assert got_clean.to_pydict() == ref.to_pydict(), (
+            "budgeted run diverged")
+
+        faults.configure(plan=_CHAOS_PLAN, seed=_CHAOS_SEED)
+        reset_store()
+        got, _, st = _pipeline(path)
+        # the acceptance gate: completes bit-identical under injected chaos
+        assert got.to_pydict() == ref.to_pydict(), "chaos run diverged"
+        assert st.faults_injected > 0, "the 5% plan never fired"
+        ss = get_store().stats
+        assert ss.leaked_spill_files == 0
+
+        t_chaos = float(np.median([
+            time_us(lambda: _pipeline(path)[0], reps=reps, warmup=0)
+            for _ in range(3)]))
+        faults.reset()
+        reset_store()
+        t_clean = float(np.median([
+            time_us(lambda: _pipeline(path)[0], reps=reps, warmup=0)
+            for _ in range(3)]))
+        factor = t_chaos / max(t_clean, 1e-9)
+        rep.add(f"faults/chaos/5pct[{n_rows}]", t_chaos,
+                f"slowdown={factor:.2f}x injected={st.faults_injected}")
+        rep.add(f"faults/chaos/clean[{n_rows}]", t_clean,
+                "fault-free budgeted baseline")
+        return {"rows": n_rows, "plan": _CHAOS_PLAN, "seed": _CHAOS_SEED,
+                "budget": total // 4,
+                "chaos_us": round(t_chaos, 1), "clean_us": round(t_clean, 1),
+                "slowdown": round(factor, 3),
+                "faults_injected": st.faults_injected,
+                "retries": st.retries, "task_failures": st.task_failures,
+                "checksum_failures": st.checksum_failures,
+                "recomputed_blocks": st.recomputed_blocks,
+                "budget_overruns": st.budget_overruns,
+                "pool_workers": schedule.pool_width()}
+    finally:
+        os.environ.pop("REPRO_MEM_BUDGET", None)
+        os.environ.pop("REPRO_RETRY_BACKOFF_MS", None)
+        faults.reset()
+        reset_store()
+
+
+def run(rep: Reporter, smoke: bool = False) -> None:
+    # Pin a 2-worker pool (the acceptance configuration) regardless of host.
+    saved = os.environ.get("REPRO_POOL_WORKERS")
+    os.environ["REPRO_POOL_WORKERS"] = "2"
+    schedule.reset_pool()
+    faults.reset()
+    try:
+        if smoke:
+            # sanity only: don't overwrite the recorded full-size numbers,
+            # and don't gate the overhead ratio at tiny sizes (noise-bound)
+            _bench_overhead(rep, 32, 20_000, reps=1)
+            _bench_chaos(rep, 6_000, reps=1)
+            return
+        overhead = _bench_overhead(rep, 64, 100_000, reps=3)
+        chaos = _bench_chaos(rep, 60_000, reps=1)
+        # gate BEFORE writing: the zero-fault production path must not pay
+        # for the retry machinery (ISSUE 6 acceptance: ≤ 1%)
+        assert overhead["overhead_pct"] <= 1.0, (
+            f"retry machinery overhead {overhead['overhead_pct']:.2f}% > 1%")
+        with open(_JSON_PATH, "w") as f:
+            json.dump({"benchmark":
+                       "fault-tolerant execution (retry/recompute/"
+                       "degradation) — zero-fault overhead + 5%-chaos "
+                       "completion",
+                       "pool_workers": schedule.pool_width(),
+                       "overhead": overhead, "chaos": chaos}, f, indent=2)
+            f.write("\n")
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_POOL_WORKERS", None)
+        else:
+            os.environ["REPRO_POOL_WORKERS"] = saved
+        schedule.reset_pool()
+        faults.reset()

@@ -19,6 +19,9 @@
   outofcore     memory-governed spill/fault residency (REPRO_MEM_BUDGET) +
                 chunk-parallel streaming CSV ingest vs the seed parser
                 (also writes BENCH_outofcore.json)
+  faults        fault-tolerant execution: retry-machinery overhead at 0%
+                faults + completion under a seeded 5% chaos plan
+                (also writes BENCH_faults.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -50,9 +53,9 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from . import (bench_approx, bench_blocking_fusion, bench_dedup,
-                   bench_fig6, bench_fusion, bench_opportunistic,
-                   bench_outofcore, bench_reuse, bench_rewrite,
-                   bench_roofline, bench_scheduling)
+                   bench_faults, bench_fig6, bench_fusion,
+                   bench_opportunistic, bench_outofcore, bench_reuse,
+                   bench_rewrite, bench_roofline, bench_scheduling)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -65,6 +68,7 @@ def main() -> None:
         "scheduling": bench_scheduling.run,
         "dedup": bench_dedup.run,
         "outofcore": bench_outofcore.run,
+        "faults": bench_faults.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

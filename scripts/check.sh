@@ -60,5 +60,58 @@ if [[ "$leaked" -ne 0 ]]; then
 fi
 rm -rf "$spill_tmp"
 
+# chaos smoke: the same 4×-budget spill pipeline under a seeded fault plan
+# (worker exceptions + corrupt spill reads + ENOSPC spill writes) must
+# complete bit-identical to the fault-free run with faults actually
+# injected; a zero-fault control run must not touch the retry machinery;
+# and the teardown must again leave ZERO spill files behind.
+chaos_tmp=$(mktemp -d)
+REPRO_SPILL_DIR="$chaos_tmp" REPRO_POOL_WORKERS=2 REPRO_RETRY_BACKOFF_MS=1 \
+python - <<'PY'
+import os, tempfile
+from repro.core import EvalMode, Session, set_session, faults
+from repro.core.api import read_csv
+from repro.core.store import get_store, reset_store
+
+csv = os.path.join(tempfile.mkdtemp(), "chaos.csv")
+with open(csv, "w") as f:
+    f.write("k,v,x\n")
+    for i in range(6000):
+        f.write(f"{i % 7},{i % 41},{(i % 12) * 0.25}\n")
+
+def run():
+    s = set_session(Session(mode=EvalMode.LAZY))
+    df = read_csv(csv)
+    df["y"] = df["x"] * 2.0 + 1.0
+    out = df[df["v"] > 3].groupby("k").agg({"y": "sum", "x": "mean"}
+                                           ).drop_duplicates()
+    got = out.collect().to_pydict()
+    total = s.frames["frame_0"].nbytes()
+    st = s.executor.stats
+    s.close()
+    return got, total, st
+
+ref, total, st0 = run()                      # fault-free, unbudgeted
+assert st0.faults_injected == 0 and st0.retries == 0, (
+    "zero-fault control touched the retry machinery")
+
+os.environ["REPRO_MEM_BUDGET"] = str(max(total // 4, 1))
+faults.configure(plan="worker:0.2,corrupt:0.5,enospc:0.5", seed=7)
+reset_store()
+got, _, st = run()
+assert got == ref, "chaos run diverged from the fault-free run"
+assert st.faults_injected > 0, "the fault plan never fired"
+assert get_store().stats.leaked_spill_files == 0
+faults.reset()
+reset_store()
+PY
+leaked=$(find "$chaos_tmp" -type f | wc -l)
+if [[ "$leaked" -ne 0 ]]; then
+    echo "ERROR: $leaked leaked spill file(s) under $chaos_tmp (chaos)" >&2
+    find "$chaos_tmp" -type f >&2
+    exit 1
+fi
+rm -rf "$chaos_tmp"
+
 # full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
 python -m benchmarks.run --smoke

@@ -13,5 +13,7 @@ from .api import DataFrame, concat, from_pydict, get_dummies, read_csv  # noqa: 
 from .dtypes import Domain  # noqa: F401
 from .frame import Column, Frame  # noqa: F401
 from .partition import PartitionedFrame  # noqa: F401
+from .faults import (  # noqa: F401
+    IngestError, SpillIntegrityError, StoreClosedError, TaskError)
 from .session import EvalMode, Session, get_session, set_session  # noqa: F401
 from .store import BlockHandle, BlockStore, get_store, reset_store  # noqa: F401

@@ -21,6 +21,7 @@ import numpy as np
 
 from . import algebra as alg
 from .dtypes import Domain, parse_column, storage_dtype
+from .faults import IngestError, env_int
 from .frame import Column, Frame
 from .labels import RangeLabels, labels_from_values
 from .partition import PartitionedFrame
@@ -842,9 +843,9 @@ def _csv_chunk_ranges(path: str, sep: str) -> tuple[list[str], list[tuple[int, i
                              .rstrip("\r\n"), sep)
         body = size - body0
         target = pool_width() * coalesce_factor()
-        chunk_env = os.environ.get("REPRO_CSV_CHUNK_BYTES")
+        chunk_env = env_int("REPRO_CSV_CHUNK_BYTES", 0, minimum=0)
         if chunk_env:
-            chunk_bytes = max(1, int(chunk_env))
+            chunk_bytes = chunk_env
         else:
             chunk_bytes = max(1 << 16, body // max(1, target))
             mb = budget_max_block_bytes()
@@ -887,9 +888,10 @@ def read_csv(path: str, session: Session | None = None, sep: str = ",",
         return _read_csv_seed(path, session=session, sep=sep)
     from .partition import PartitionedFrame
     from .schedule import dispatch_blocks
-    from .store import as_handle, pinned
+    from .store import as_handle, pinned, resolve
 
     header, ranges = _csv_chunk_ranges(path, sep)
+    planned_size = ranges[-1][1]      # file size the byte ranges were cut for
     width = len(header)
     if usecols is not None:
         want = set(usecols)
@@ -902,9 +904,27 @@ def read_csv(path: str, session: Session | None = None, sep: str = ",",
     names = [header[j] for j in sel]
 
     def read_range(rng: tuple[int, int]) -> bytes:
+        # the byte ranges are only meaningful against the file they were
+        # planned over: a file that is truncated or grows between planning
+        # and chunk tokenization must fail as ONE clear error, not silently
+        # parse a torn record (or drop the appended tail)
         with open(path, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            actual = f.tell()
+            if actual != planned_size:
+                raise IngestError(
+                    f"{path} changed during streaming ingest: byte ranges "
+                    f"were planned over {planned_size} bytes but the file "
+                    f"is now {actual} bytes "
+                    f"({'truncated' if actual < planned_size else 'grew'} "
+                    "between range planning and chunk tokenization)")
             f.seek(rng[0])
-            return f.read(rng[1] - rng[0])
+            data = f.read(rng[1] - rng[0])
+        if len(data) != rng[1] - rng[0]:
+            raise IngestError(
+                f"{path} truncated during streaming ingest: chunk "
+                f"[{rng[0]}, {rng[1]}) returned only {len(data)} bytes")
+        return data
 
     na_empty = keep_default_na
 
@@ -914,16 +934,23 @@ def read_csv(path: str, session: Session | None = None, sep: str = ",",
     # with the block store immediately — under a budget, early chunks spill
     # while later chunks still parse, so the file is never fully resident.
     def scan_chunk(rng):
-        rows = _chunk_rows(read_range(rng), sep, width)
-        cols = _chunk_columns(rows, width)
-        scanned = [_scan_column(cols[j], na_empty) for j in sel]
-        parts = [Column(jnp.asarray(s[2]) if s[1] is not Domain.INT else s[2],
-                        s[1],
-                        None if s[3] is None else jnp.asarray(s[3]),
-                        s[4])
-                 for s in scanned]
-        f = Frame(parts, RangeLabels(len(rows)), labels_from_values(names))
-        return (as_handle(f), len(rows),
+        def parse():
+            rows = _chunk_rows(read_range(rng), sep, width)
+            cols = _chunk_columns(rows, width)
+            scanned = [_scan_column(cols[j], na_empty) for j in sel]
+            parts = [Column(jnp.asarray(s[2]) if s[1] is not Domain.INT
+                            else s[2],
+                            s[1],
+                            None if s[3] is None else jnp.asarray(s[3]),
+                            s[4])
+                     for s in scanned]
+            f = Frame(parts, RangeLabels(len(rows)), labels_from_values(names))
+            return f, scanned
+
+        f, scanned = parse()
+        # lineage: the CSV byte range IS this block's producer — a corrupt
+        # spill re-parses the chunk from the source file
+        return (as_handle(f, recompute=lambda: parse()[0]), f.nrows,
                 [s[0] for s in scanned], [s[1] for s in scanned])
 
     scans = dispatch_blocks(scan_chunk, ranges, attribute=False)
@@ -971,7 +998,7 @@ def read_csv(path: str, session: Session | None = None, sep: str = ",",
             # first chunk, every column already in final storage form (INT
             # stays int64 in the intermediate — range-checked at finalize)
             return handle
-        with pinned(handle) as f:
+        def build(f):
             out = []
             for j, (ld, gd) in enumerate(zip(local_doms, domains)):
                 c = f.columns[j]
@@ -985,8 +1012,11 @@ def read_csv(path: str, session: Session | None = None, sep: str = ",",
                 out.append(_finalize_column(
                     data, valid, c.dictionary, ld, gd,
                     text_cols.get(j) if text_cols else None, na_empty))
-            g = Frame(out, RangeLabels(m, start), labels_from_values(names))
-            return as_handle(g)
+            return Frame(out, RangeLabels(m, start), labels_from_values(names))
+
+        with pinned(handle) as f:
+            return as_handle(build(f),
+                             recompute=lambda: build(resolve(handle)))
 
     handles = dispatch_blocks(
         finalize_chunk,

@@ -38,7 +38,8 @@ from . import algebra as alg
 from . import physical, rewrite
 from .frame import Frame
 from .partition import PartitionedFrame, default_grid
-from .schedule import stats_scope
+from . import faults as _faults
+from .schedule import node_scope, stats_scope
 from .store import get_store
 
 __all__ = ["Executor", "CacheEntry", "ExecStats"]
@@ -119,6 +120,32 @@ class ExecStats:
                                     peak ≤ budget + one in-flight block per
                                     pool worker.
 
+    Fault-tolerance counters (PR 6) — a statement either completes
+    bit-identical to its fault-free run or raises ONE typed error
+    (``faults.TaskError`` / ``SpillIntegrityError`` / ``StoreClosedError``),
+    and everything the recovery machinery did is attributed here, per plan
+    node, by the same scope/snapshot-delta mechanism as the counters above:
+
+      * ``retries``               — block-task retry attempts the dispatch
+                                    layer spent on transient failures
+                                    (``REPRO_TASK_RETRIES``);
+      * ``task_failures``         — block/chunk task failures observed
+                                    (each retry that itself fails counts
+                                    again; ≥ ``retries`` on a run that
+                                    ultimately raised);
+      * ``checksum_failures``     — spill files that failed CRC32
+                                    verification or were missing on fault;
+      * ``recomputed_blocks``     — blocks rebuilt from their recorded
+                                    producer after an integrity failure;
+      * ``budget_overruns``       — spill writes abandoned (ENOSPC on every
+                                    ``REPRO_SPILL_DIR`` entry): the victim
+                                    stayed resident, over budget, rather
+                                    than failing the statement;
+      * ``faults_injected``       — faults the deterministic chaos plan
+                                    (``REPRO_FAULT_PLAN``) actually fired
+                                    during this executor's evaluations; 0
+                                    whenever injection is disabled.
+
     Each distinct plan is counted once — re-evaluating a cached statement is
     not new fusion work.
     """
@@ -143,6 +170,12 @@ class ExecStats:
     faults: int = 0
     spilled_bytes: int = 0
     peak_resident_bytes: int = 0
+    retries: int = 0
+    task_failures: int = 0
+    checksum_failures: int = 0
+    recomputed_blocks: int = 0
+    budget_overruns: int = 0
+    faults_injected: int = 0
 
     @property
     def blocks_per_dispatch(self) -> float:
@@ -273,7 +306,32 @@ class Executor:
     # synchronous evaluation (with cache + in-flight dedupe)
     # ------------------------------------------------------------------
     def evaluate(self, node: alg.Node) -> PartitionedFrame:
-        return self._eval(self._prepared(node))
+        # plan preparation can touch the store too (schema inference
+        # resolves a source block, which may fault a spilled one back in) —
+        # attribute that residency work here so statement execution accounts
+        # for EVERY spill/fault/recompute, not just the per-node windows
+        s0 = get_store().stats.snapshot()
+        f0 = _faults.injected_total()
+        prepared = self._prepared(node)
+        self._attribute_store_delta(s0, f0)
+        return self._eval(prepared)
+
+    def _attribute_store_delta(self, s0, f0) -> None:
+        """Fold the store/fault counter movement since snapshot ``s0`` /
+        injected-count ``f0`` into this executor's ``ExecStats``."""
+        s1 = get_store().stats.snapshot()
+        self.stats.spills += s1[0] - s0[0]
+        self.stats.faults += s1[1] - s0[1]
+        self.stats.spilled_bytes += s1[2] - s0[2]
+        self.stats.checksum_failures += s1[4] - s0[4]
+        self.stats.recomputed_blocks += s1[5] - s0[5]
+        self.stats.budget_overruns += s1[6] - s0[6]
+        self.stats.faults_injected += _faults.injected_total() - f0
+        # peak is attributed only when this window raised the store's
+        # high-water mark — a fresh executor must not inherit an earlier
+        # session's peak from the process-wide gauge
+        if s1[3] > s0[3] and s1[3] > self.stats.peak_resident_bytes:
+            self.stats.peak_resident_bytes = s1[3]
 
     def _eval(self, node: alg.Node) -> PartitionedFrame:
         key = node.cache_key()
@@ -328,17 +386,10 @@ class Executor:
                 # snapshot delta — faults happen on pool worker threads, so
                 # the contextvar scope can't see them
                 s0 = get_store().stats.snapshot()
-                with stats_scope(self.stats):
+                f0 = _faults.injected_total()
+                with stats_scope(self.stats), node_scope(node.op):
                     result = physical.run_node(node, inputs, self.stats)
-                s1 = get_store().stats.snapshot()
-                self.stats.spills += s1[0] - s0[0]
-                self.stats.faults += s1[1] - s0[1]
-                self.stats.spilled_bytes += s1[2] - s0[2]
-                # peak is attributed only when THIS node raised the store's
-                # high-water mark — a fresh executor must not inherit an
-                # earlier session's peak from the process-wide gauge
-                if s1[3] > s0[3] and s1[3] > self.stats.peak_resident_bytes:
-                    self.stats.peak_resident_bytes = s1[3]
+                self._attribute_store_delta(s0, f0)
             dt = time.monotonic() - t0
             self.stats.evaluated_nodes += 1
             self._store(key, result, dt)

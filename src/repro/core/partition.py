@@ -71,13 +71,19 @@ def _block_task(fn: Callable[[Frame], Frame]) -> Callable:
     the worker, run, and register the output with the store as it is
     produced (so a large output is budget-charged immediately and earlier
     outputs can spill while later blocks still compute).  An identity output
-    keeps its input handle — no double charge."""
+    keeps its input handle — no double charge.
+
+    The output handle records ``fn`` over the *input handle* as its
+    recompute thunk (lineage): if the output's spill file is later found
+    corrupt or missing, the store re-runs the producer instead of crashing.
+    The closure keeps the input handle alive — and therefore re-faultable —
+    for as long as the output exists."""
     def run(h):
         with pinned(h) as f:
             out = fn(f)
             if out is f and isinstance(h, BlockHandle):
                 return h
-            return as_handle(out)
+            return as_handle(out, recompute=lambda: fn(resolve(h)))
     return run
 
 

@@ -547,7 +547,9 @@ def _key_block(args) -> tuple[Any, np.ndarray, np.ndarray, np.ndarray | None]:
         keep = None
         if preds:
             keep = np.asarray(_fused_selection_mask(preds, f), dtype=bool)
-        hout = block if f is src else as_handle(f)
+        hout = block if f is src else as_handle(
+            f, recompute=lambda: (_run_stages_block(resolve(block), stages)
+                                  if stages else resolve(block)).induce())
     return hout, flags, mat, keep
 
 
@@ -586,11 +588,15 @@ def _apply_keep_blocks(blocks: Sequence, keeps: Sequence[np.ndarray],
     Blocks are store handles — spilled ones fault inside the worker."""
     def filt(args):
         h, keep = args
-        with pinned(h) as f:
+
+        def build(f):
             g = f.filter_rows(keep)
             if proj is not None:
                 g = _project_block(g, proj)
-            return as_handle(g)
+            return g
+
+        with pinned(h) as f:
+            return as_handle(build(f), recompute=lambda: build(resolve(h)))
 
     out = dispatch_blocks(filt, list(zip(blocks, keeps)))
     return PartitionedFrame([[b] for b in out])
@@ -1164,7 +1170,9 @@ def _fused_groupby(pf: PartitionedFrame, stages: Sequence[alg.Stage],
                     info = (int(v.min()), int(v.max())) if v.size else "empty"
             # staged output back into the store: under a budget it can spill
             # before the partial pass returns for it
-            hout = block if f is src else as_handle(f)
+            hout = block if f is src else as_handle(
+                f, recompute=lambda: _run_stages_block(
+                    resolve(block), stages).induce())
         return hout, info
 
     results = dispatch_blocks(stage_block, blocks)
@@ -1369,23 +1377,27 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
     blocks = [row[0] for row in pf.handles]
 
     def local(block):
-        with pinned(block) as src:
+        def scan_col(c: Column) -> Column:
+            v = jnp.where(c.valid_mask(), c.data.astype(jnp.float32),
+                          _scan_identity(func))
+            if func == "cumprod":
+                out = jnp.cumprod(v, axis=0)
+            else:
+                out = kops.window_scan(v, func)
+            return Column(out.astype(jnp.float32), Domain.FLOAT, c.mask, None)
+
+        def build(src):
             f = _run_stages_block(src, pre).induce() if pre else src.induce()
             targets = _window_targets(f, cols)
+            return _apply_cols(f, targets, scan_col), targets
 
-            def scan_col(c: Column) -> Column:
-                v = jnp.where(c.valid_mask(), c.data.astype(jnp.float32),
-                              _scan_identity(func))
-                if func == "cumprod":
-                    out = jnp.cumprod(v, axis=0)
-                else:
-                    out = kops.window_scan(v, func)
-                return Column(out.astype(jnp.float32), Domain.FLOAT, c.mask, None)
-
-            scanned = _apply_cols(f, targets, scan_col)
+        with pinned(block) as src:
+            scanned, targets = build(src)
             totals = ({n: scanned.col(n).data[-1] for n in targets}
                       if scanned.nrows else {})
-            return as_handle(scanned), totals, targets
+            return (as_handle(scanned,
+                              recompute=lambda: build(resolve(block))[0]),
+                    totals, targets)
 
     locals_ = dispatch_blocks(local, blocks)
 
@@ -1402,8 +1414,8 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
 
     def apply(args):
         (block, _totals, targets), carry = args
-        with pinned(block) as scanned:
-            orig = scanned
+
+        def build(scanned):
             if carry:
                 cols_ = list(scanned.columns)
                 names = scanned.col_labels.to_list()
@@ -1413,8 +1425,12 @@ def _window_scan_blocks(pf: PartitionedFrame, func: str, cols,
                         cols_[j] = Column(v, cols_[j].domain, cols_[j].mask, None)
                 scanned = Frame(cols_, scanned.row_labels, scanned.col_labels,
                                 scanned.row_domains)
-            out = _run_stages_block(scanned, post) if post else scanned
-            return block if out is orig else as_handle(out)
+            return _run_stages_block(scanned, post) if post else scanned
+
+        with pinned(block) as scanned:
+            out = build(scanned)
+            return block if out is scanned else as_handle(
+                out, recompute=lambda: build(resolve(block)))
 
     out = dispatch_blocks(apply, list(zip(locals_, carries)))
     return PartitionedFrame([[b] for b in out])
@@ -1438,7 +1454,10 @@ def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int,
     def prep(h):
         with pinned(h) as raw:
             f = raw.induce()
-            return (h if f is raw else as_handle(f)), f.tail(periods)
+            return (h if f is raw
+                    else as_handle(f,
+                                   recompute=lambda: resolve(h).induce())), \
+                f.tail(periods)
 
     prepped = dispatch_blocks(prep, blocks)
 
@@ -1455,7 +1474,8 @@ def _window_halo(pf: PartitionedFrame, func: str, targets, periods: int,
     def local(args):
         (blk, _tail), halo = args
         with pinned(blk) as f:
-            return as_handle(_halo_block(f, halo))
+            return as_handle(_halo_block(f, halo),
+                             recompute=lambda: _halo_block(resolve(blk), halo))
 
     def _halo_block(block: Frame, halo: Frame | None) -> Frame:
         ext = halo.concat_rows(block) if halo is not None else block
@@ -1629,13 +1649,16 @@ def _from_labels(pf: PartitionedFrame, label: Any) -> PartitionedFrame:
 
     def conv(args):
         (block, start) = args
-        with pinned(block) as f:
+
+        def build(f):
             vals = f.row_labels.to_list()
             c = _host_column(vals, Domain.INT if isinstance(f.row_labels, (RangeLabels, IntLabels)) else None)
-            new = Frame([c] + list(f.columns),
-                        RangeLabels(f.nrows, start),
-                        labels_from_values([label]).concat(f.col_labels))
-            return as_handle(new)
+            return Frame([c] + list(f.columns),
+                         RangeLabels(f.nrows, start),
+                         labels_from_values([label]).concat(f.col_labels))
+
+        with pinned(block) as f:
+            return as_handle(build(f), recompute=lambda: build(resolve(block)))
 
     out = dispatch_blocks(conv, [(row[0], offsets[i])
                                  for i, row in enumerate(pf.handles)])

@@ -72,13 +72,46 @@ Environment knobs (the one table — referenced from ROADMAP.md)
                            (default) = unlimited, fully-resident fast path.
                            Over budget, blocks spill to disk and fault back
                            on demand
-``REPRO_SPILL_DIR``        directory under which the block store creates its
-                           spill directory (default: the system tempdir)
+``REPRO_SPILL_DIR``        ``os.pathsep``-separated *failover list* of
+                           directories under which the block store creates
+                           its spill directories (default: the system
+                           tempdir).  A spill write that fails with OSError
+                           (ENOSPC, read-only mount) fails over to the next
+                           entry; when every entry is exhausted the victim
+                           stays resident and ``budget_overruns`` is counted
 ``REPRO_CSV_STREAM``       ``0`` routes ``api.read_csv`` through the serial
                            seed parser (baseline / equivalence oracle)
 ``REPRO_CSV_CHUNK_BYTES``  target byte size of a streaming-ingest CSV chunk
                            (default: sized from pool width and mem budget)
+``REPRO_TASK_RETRIES``     bounded retries per block task for *transient*
+                           failures — injected worker faults, OSError,
+                           TimeoutError, ConnectionError (default 2; ``0``
+                           disables the retry machinery entirely).
+                           Deterministic errors (ValueError, ...) are never
+                           retried and propagate unchanged
+``REPRO_RETRY_BACKOFF_MS`` base backoff between retry attempts, doubling per
+                           attempt (default 5)
+``REPRO_TASK_TIMEOUT_MS``  per-dispatch deadline; a dispatch that blows it
+                           raises ``TaskError`` with ``kind="timeout"``
+                           (default 0 = no deadline)
+``REPRO_FAULT_PLAN``       deterministic fault-injection plan (``core.faults``):
+                           comma-separated ``kind[@addr_substr]:rate[!]``
+                           rules, kinds ``worker`` / ``slow`` / ``corrupt`` /
+                           ``missing`` / ``enospc``; ``!`` = sticky (fires on
+                           retries / lineage-less reads too).  Empty
+                           (default) = no injection, zero overhead
+``REPRO_FAULT_SEED``       seed for the plan's per-address uniform draws
+                           (default 0; same plan + seed + address ⇒ same
+                           decision)
+``REPRO_FAULT_SLOW_MS``    sleep injected by a ``slow`` fault rule
+                           (default 25)
 =========================  ==================================================
+
+Failure semantics: a dispatched statement either completes **bit-identical**
+to the fault-free run (transient failures retried with exponential backoff;
+a failed coalesced chunk split and retried per block, isolating one poison
+block) or raises ONE typed ``faults.TaskError`` carrying full provenance —
+plan node, block index, attempt count, and the underlying cause.
 """
 from __future__ import annotations
 
@@ -86,12 +119,18 @@ import concurrent.futures as _fut
 import contextvars
 import os
 import threading
+import time
 from typing import Callable, Sequence
+
+from . import faults as _faults
+from .faults import TaskError, env_int, is_retryable
 
 __all__ = [
     "get_pool", "pool_width", "reset_pool", "dispatch_blocks",
     "coalesce_factor", "preferred_row_parts", "output_row_parts",
-    "budget_max_block_bytes", "stats_scope", "GRID_PREFS",
+    "budget_max_block_bytes", "stats_scope", "node_scope", "GRID_PREFS",
+    "task_retries", "retry_backoff_ms", "task_timeout_ms",
+    "configure_retries",
 ]
 
 # Per-operator grid preferences (paper §4.2: the partitioning scheme is
@@ -163,7 +202,55 @@ def reset_pool() -> None:
 
 
 def coalesce_factor() -> int:
-    return max(1, int(os.environ.get("REPRO_COALESCE_FACTOR", "2")))
+    return env_int("REPRO_COALESCE_FACTOR", 2, minimum=1)
+
+
+# ---------------------------------------------------------------------------
+# retry / deadline policy (fault tolerance, PR 6)
+# ---------------------------------------------------------------------------
+_RETRIES_OVERRIDE: int | None = None
+_BACKOFF_OVERRIDE: int | None = None
+_TIMEOUT_OVERRIDE: int | None = None
+
+
+def task_retries() -> int:
+    """Bounded retries per block task for transient failures (injected
+    worker faults, OSError, TimeoutError, ConnectionError).  0 disables."""
+    if _RETRIES_OVERRIDE is not None:
+        return _RETRIES_OVERRIDE
+    return env_int("REPRO_TASK_RETRIES", 2, minimum=0)
+
+
+def retry_backoff_ms() -> int:
+    """Base backoff between retry attempts; doubles per attempt."""
+    if _BACKOFF_OVERRIDE is not None:
+        return _BACKOFF_OVERRIDE
+    return env_int("REPRO_RETRY_BACKOFF_MS", 5, minimum=0)
+
+
+def task_timeout_ms() -> int:
+    """Per-dispatch deadline (0 = none).  A dispatch that blows it raises
+    ``TaskError`` with ``kind="timeout"``."""
+    if _TIMEOUT_OVERRIDE is not None:
+        return _TIMEOUT_OVERRIDE
+    return env_int("REPRO_TASK_TIMEOUT_MS", 0, minimum=0)
+
+
+def configure_retries(retries: int | None = None,
+                      timeout_ms: int | None = None,
+                      backoff_ms: int | None = None,
+                      *, clear: bool = False) -> None:
+    """Programmatic override of the retry/deadline env knobs (the
+    ``Session(task_retries=...)`` path).  Sticky until ``clear=True``."""
+    global _RETRIES_OVERRIDE, _TIMEOUT_OVERRIDE, _BACKOFF_OVERRIDE
+    if clear:
+        _RETRIES_OVERRIDE = _TIMEOUT_OVERRIDE = _BACKOFF_OVERRIDE = None
+    if retries is not None:
+        _RETRIES_OVERRIDE = max(0, int(retries))
+    if timeout_ms is not None:
+        _TIMEOUT_OVERRIDE = max(0, int(timeout_ms))
+    if backoff_ms is not None:
+        _BACKOFF_OVERRIDE = max(0, int(backoff_ms))
 
 
 def _coalesce_enabled() -> bool:
@@ -206,6 +293,70 @@ class stats_scope:
         return False
 
 
+# the plan-node label of the evaluation a dispatch belongs to — provenance
+# for TaskError and the fault-injection dispatch addresses.  Installed by
+# the executor around each node evaluation (like stats_scope).
+_NODE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro-sched-node", default=None)
+
+
+class node_scope:
+    """Context manager: label dispatches inside the scope with the plan
+    node's operator name (TaskError provenance + fault addresses)."""
+
+    def __init__(self, label: str):
+        self._label = label
+        self._token = None
+
+    def __enter__(self):
+        self._token = _NODE.set(self._label)
+        return self._label
+
+    def __exit__(self, *exc):
+        _NODE.reset(self._token)
+        return False
+
+
+# retry/failure counters are bumped from pool-worker threads, so the stats
+# object can't rely on the single-threaded += the other counters use
+_BUMP_LOCK = threading.Lock()
+
+
+def _bump(st, name: str, d: int = 1) -> None:
+    if st is not None and hasattr(st, name):
+        with _BUMP_LOCK:
+            setattr(st, name, getattr(st, name) + d)
+
+
+def _run_one(fn: Callable, x, bi: int, retries: int, backoff_ms: int,
+             label: str, st, chaos: bool):
+    """One block task under the retry policy: transient failures retry with
+    exponential backoff up to ``retries`` times, then surface as TaskError
+    with full provenance; deterministic errors propagate unchanged on the
+    first attempt."""
+    attempt = 0
+    while True:
+        try:
+            if chaos:
+                _faults.fault_point(
+                    f"dispatch/node={label}/blk={bi}/try={attempt}",
+                    attempt=attempt)
+            return fn(x)
+        except Exception as e:
+            if not is_retryable(e):
+                raise
+            _bump(st, "task_failures")
+            if attempt >= retries:
+                raise TaskError(
+                    "block task failed past the retry budget",
+                    node=label, block=bi, attempts=attempt + 1,
+                    cause=e) from e
+            _bump(st, "retries")
+            if backoff_ms > 0:
+                time.sleep(backoff_ms * (1 << attempt) / 1000.0)
+            attempt += 1
+
+
 def _chunk_sizes(n: int, tasks: int) -> list[int]:
     tasks = max(1, min(tasks, n))
     base, rem = divmod(n, tasks)
@@ -246,6 +397,15 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     ``attribute=False`` opts a call out of those counters: pool work whose
     items are NOT row blocks (e.g. per-column factorization tasks) would
     otherwise skew the row-block scheduling ratios.
+
+    Fault tolerance: transient failures (injected worker faults, OSError,
+    TimeoutError, ConnectionError) retry with exponential backoff up to
+    ``REPRO_TASK_RETRIES`` times.  A failed *coalesced* chunk is split and
+    retried per block, so one poison block is isolated and reported — with
+    plan node, block index, and attempt count — via ``faults.TaskError``.
+    Deterministic errors propagate unchanged on the first attempt.  With
+    ``REPRO_TASK_TIMEOUT_MS`` set, the whole dispatch runs under a deadline
+    and raises ``TaskError(kind="timeout")`` when it blows it.
     """
     items = list(blocks)
     n = len(items)
@@ -260,30 +420,98 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     if n > 1 and any(_spilled(x) for x in items):
         perm = sorted(range(n), key=lambda i: _spilled(items[i]))
         items = [items[i] for i in perm]
+    idxs: Sequence[int] = perm if perm is not None else range(n)
 
     target = pool_width() * coalesce_factor()
     if not _coalesce_enabled() or n <= target:
-        chunks = [[x] for x in items]
+        chunks = [([x], [bi]) for x, bi in zip(items, idxs)]
     else:
         chunks, off = [], 0
         for size in _chunk_sizes(n, target):
-            chunks.append(items[off:off + size])
+            chunks.append((items[off:off + size], list(idxs[off:off + size])))
             off += size
     if st is not None:
         st.dispatches += len(chunks)
         st.dispatched_blocks += n
 
-    def run_chunk(chunk: list) -> list:
-        return [fn(x) for x in chunk]
+    retries = task_retries()
+    backoff = retry_backoff_ms()
+    timeout = task_timeout_ms()
+    chaos = _faults.active()
+    guarded = chaos or retries > 0
+    label = _NODE.get() or "?"
+
+    def run_chunk(chunk_and_idxs) -> list:
+        chunk, cidx = chunk_and_idxs
+        if not guarded:
+            return [fn(x) for x in chunk]
+        if not chaos:
+            # hot path: one try around the plain loop — the per-block retry
+            # machinery is only paid when something actually failed
+            try:
+                return [fn(x) for x in chunk]
+            except Exception as e:
+                if not is_retryable(e):
+                    raise
+                _bump(st, "task_failures")
+        # chaos run, or a coalesced chunk hit a transient failure: split and
+        # run per block so one poison block is isolated (fn is pure, so
+        # re-running the chunk's other blocks is bit-identical)
+        return [_run_one(fn, x, bi, retries, backoff, label, st, chaos)
+                for x, bi in zip(chunk, cidx)]
 
     if _in_worker():
         # nested dispatch from a pool worker: run inline — queueing behind
         # ourselves on a saturated pool would deadlock
-        out = [fn(x) for x in items]
-    else:
+        if guarded:
+            out = [_run_one(fn, x, bi, retries, backoff, label, st, chaos)
+                   for x, bi in zip(items, idxs)]
+        else:
+            out = [fn(x) for x in items]
+    elif timeout > 0:
+        pool = get_pool()
+        deadline = time.monotonic() + timeout / 1000.0
+        futs = [pool.submit(run_chunk, c) for c in chunks]
         out = []
-        for res in get_pool().map(run_chunk, chunks):
-            out.extend(res)
+        try:
+            for fu in futs:
+                rem = deadline - time.monotonic()
+                try:
+                    out.extend(fu.result(timeout=max(rem, 0.0)))
+                except (_fut.TimeoutError, TimeoutError):
+                    raise TaskError(
+                        f"dispatch blew its {timeout}ms deadline",
+                        node=label, attempts=1, kind="timeout") from None
+        finally:
+            for fu in futs:
+                fu.cancel()
+    else:
+        # submit chunk-by-chunk so losing the shared pool mid-dispatch
+        # (reset_pool() under an in-flight dispatch — the worker-loss
+        # recovery path) is survivable: futures already submitted finish on
+        # the old pool's threads; the rest move to the rebuilt pool, and if
+        # that one dies too they run on the caller thread.  run_chunk is
+        # pure, so any placement is bit-identical.
+        pool = get_pool()
+        rebuilt = False
+        futs: list = []
+        for c in chunks:
+            fu = None
+            while True:
+                try:
+                    fu = pool.submit(run_chunk, c)
+                    break
+                except RuntimeError as e:
+                    if "shutdown" not in str(e).lower():
+                        raise
+                    if rebuilt:
+                        break           # second loss: run inline below
+                    pool = get_pool()   # pool was reset under us
+                    rebuilt = True
+            futs.append((fu, c))
+        out = []
+        for fu, c in futs:
+            out.extend(fu.result() if fu is not None else run_chunk(c))
     if perm is not None:
         restored: list = [None] * n
         for pos, orig in enumerate(perm):

@@ -13,6 +13,8 @@ import threading
 from typing import Any
 
 from . import algebra as alg
+from . import faults as _faults
+from . import schedule as _schedule
 from . import store as block_store
 from .executor import Executor
 from .frame import Frame
@@ -32,7 +34,12 @@ class Session:
                  cache_budget_bytes: int = 1 << 30, optimize: bool = True,
                  default_row_parts: int | None = None,
                  mem_budget_bytes: int | None = None,
-                 spill_dir: str | None = None):
+                 spill_dir: str | None = None,
+                 task_retries: int | None = None,
+                 task_timeout_ms: int | None = None,
+                 retry_backoff_ms: int | None = None,
+                 fault_plan: str | None = None,
+                 fault_seed: int | None = None):
         # out-of-core residency knob (process-wide — the block store is
         # shared; see the REPRO_MEM_BUDGET / REPRO_SPILL_DIR env knobs in
         # core/schedule.py's table).  Set it before ingesting data: blocks
@@ -41,6 +48,18 @@ class Session:
         if mem_budget_bytes is not None or spill_dir is not None:
             block_store.configure(budget_bytes=mem_budget_bytes,
                                   spill_dir=spill_dir)
+        # fault-tolerance knobs (process-wide, like the store config): retry
+        # policy for transient block-task failures and the deterministic
+        # fault-injection plan — programmatic forms of REPRO_TASK_RETRIES /
+        # REPRO_TASK_TIMEOUT_MS / REPRO_RETRY_BACKOFF_MS and
+        # REPRO_FAULT_PLAN / REPRO_FAULT_SEED (see core/schedule.py's table)
+        if (task_retries is not None or task_timeout_ms is not None
+                or retry_backoff_ms is not None):
+            _schedule.configure_retries(retries=task_retries,
+                                        timeout_ms=task_timeout_ms,
+                                        backoff_ms=retry_backoff_ms)
+        if fault_plan is not None or fault_seed is not None:
+            _faults.configure(plan=fault_plan, seed=fault_seed)
         self.mode = mode
         self.frames: dict[str, PartitionedFrame] = {}
         self.executor = Executor(self.frames, cache_budget_bytes=cache_budget_bytes,

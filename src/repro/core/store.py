@@ -36,6 +36,18 @@ overshoots rather than deadlocks.
 ``put`` wraps the frame in an untracked handle with no locking, no
 accounting, and no spill machinery — bit-identical to pre-store behaviour.
 
+Fault tolerance (PR 6): every spill file carries a CRC32-stamped header and
+is verified on fault; a corrupt or missing file is *recovered* when the block
+has a recorded producer (a recompute thunk registered by the partition /
+physical layers at every blockwise-map output) and raises a typed
+``SpillIntegrityError`` otherwise — never a partially-deserialized frame.
+``ENOSPC``/``OSError`` during a spill write degrades gracefully: the write
+fails over through the ``REPRO_SPILL_DIR`` directory list (``os.pathsep``
+separated), and when every directory is exhausted the victim simply stays
+resident, ``budget_overruns`` is counted, and eviction moves to the next
+candidate.  Faulting a handle after ``shutdown()`` raises
+``StoreClosedError`` naming the handle and the shutdown site.
+
 Lock order: handle lock → store lock, never the reverse.  The spill write
 itself holds only the victim's handle lock, so faults of *other* blocks
 proceed concurrently with eviction I/O.
@@ -48,18 +60,24 @@ import itertools
 import os
 import pickle
 import shutil
+import struct
 import tempfile
 import threading
+import traceback
 import weakref
-from typing import Iterator
+import zlib
+from typing import Callable, Iterator
 
 import numpy as np
 
 from .frame import Column, Frame
 from .dtypes import Domain
+from . import faults as _faults
+from .faults import SpillIntegrityError, StoreClosedError, env_int
 
 __all__ = [
     "BlockHandle", "BlockStore", "StoreStats",
+    "SpillIntegrityError", "StoreClosedError",
     "get_store", "reset_store", "configure", "unconfigure",
     "as_handle", "resolve", "pinned",
 ]
@@ -77,7 +95,9 @@ class StoreStats:
     evaluation and attributes the deltas to its ``ExecStats``."""
 
     __slots__ = ("spills", "faults", "spilled_bytes", "faulted_bytes",
-                 "resident_bytes", "peak_resident_bytes")
+                 "resident_bytes", "peak_resident_bytes",
+                 "checksum_failures", "recomputed_blocks",
+                 "budget_overruns", "leaked_spill_files")
 
     def __init__(self):
         self.spills = 0
@@ -86,20 +106,38 @@ class StoreStats:
         self.faulted_bytes = 0
         self.resident_bytes = 0
         self.peak_resident_bytes = 0
+        # fault-tolerance counters (PR 6):
+        self.checksum_failures = 0   # spill reads that failed CRC32 / were
+        #                              missing on disk
+        self.recomputed_blocks = 0   # blocks rebuilt from their recorded
+        #                              producer after an integrity failure
+        self.budget_overruns = 0     # spill writes abandoned (ENOSPC on every
+        #                              spill dir) — the victim stayed resident
+        self.leaked_spill_files = 0  # finalizer could not unlink a dead
+        #                              handle's spill file (was: silent)
 
-    def snapshot(self) -> tuple[int, int, int, int]:
+    def snapshot(self) -> tuple[int, int, int, int, int, int, int]:
         return (self.spills, self.faults, self.spilled_bytes,
-                self.peak_resident_bytes)
+                self.peak_resident_bytes, self.checksum_failures,
+                self.recomputed_blocks, self.budget_overruns)
 
 
 # =============================================================================
-# Frame (de)serialization: one .npz per spilled block
+# Frame (de)serialization: one .npz per spilled block, prefixed with an
+# integrity header:  MAGIC ++ "<IQ"(crc32(payload), len(payload)) ++ payload.
+# The fault path verifies the stamp before deserializing, so a flipped bit or
+# truncated file surfaces as SpillIntegrityError — never a corrupt frame.
 # =============================================================================
+_MAGIC = b"RSPL1\n"
+_HDR = struct.Struct("<IQ")
+
+
 def _save_frame(path: str, frame: Frame) -> None:
-    """Write a Frame's arrays + metadata to ``path`` (uncompressed npz).
-    Column payloads are stored as plain ``.npy`` members (loadable without
-    pickle); the small metadata record (domains, dictionaries, labels,
-    device-ness flags) is pickled into a byte-array member."""
+    """Write a Frame's arrays + metadata to ``path`` (uncompressed npz behind
+    the CRC32 header).  Column payloads are stored as plain ``.npy`` members
+    (loadable without pickle); the small metadata record (domains,
+    dictionaries, labels, device-ness flags) is pickled into a byte-array
+    member."""
     arrays: dict[str, np.ndarray] = {}
     cols_meta = []
     for j, c in enumerate(frame.columns):
@@ -119,15 +157,31 @@ def _save_frame(path: str, frame: Frame) -> None:
     arrays["__meta__"] = np.frombuffer(pickle.dumps(meta), dtype=np.uint8)
     buf = io.BytesIO()
     np.savez(buf, **arrays)
+    payload = buf.getbuffer()
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(buf.getbuffer())
+        f.write(_MAGIC)
+        f.write(_HDR.pack(zlib.crc32(payload) & 0xFFFFFFFF, payload.nbytes))
+        f.write(payload)
     os.replace(tmp, path)       # a fault never sees a half-written file
 
 
 def _load_frame(path: str) -> Frame:
     import jax.numpy as jnp
-    with np.load(path) as z:
+    with open(path, "rb") as fh:
+        raw = fh.read()
+    hdr_len = len(_MAGIC) + _HDR.size
+    if len(raw) < hdr_len or raw[:len(_MAGIC)] != _MAGIC:
+        raise SpillIntegrityError(
+            f"spill file {path} has a bad or missing integrity header "
+            "(not written by this store, or truncated below the header)")
+    crc, n = _HDR.unpack_from(raw, len(_MAGIC))
+    payload = memoryview(raw)[hdr_len:]
+    if payload.nbytes != n or (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+        raise SpillIntegrityError(
+            f"spill file {path} failed CRC32 verification "
+            f"({payload.nbytes} bytes on disk vs {n} stamped)")
+    with np.load(io.BytesIO(payload)) as z:
         meta = pickle.loads(z["__meta__"].tobytes())
         cols = []
         for j, e in enumerate(meta["cols"]):
@@ -170,9 +224,10 @@ class BlockHandle:
 
     __slots__ = ("_store", "_frame", "_nbytes", "nrows", "ncols", "_rec",
                  "_pins", "_seq", "_evicting", "benefit", "_lock", "_id",
-                 "__weakref__")
+                 "_recompute", "__weakref__")
 
-    def __init__(self, store: "BlockStore | None", frame: Frame):
+    def __init__(self, store: "BlockStore | None", frame: Frame,
+                 recompute: "Callable[[], Frame] | None" = None):
         self._store = store
         self._frame: Frame | None = frame
         self._nbytes: int | None = None
@@ -185,6 +240,11 @@ class BlockHandle:
         self.benefit = 0.0           # cache benefit density; 0 = evict first
         self._lock = threading.Lock()
         self._id = next(_IDS)
+        # lineage hook: rebuilds this block's Frame from its recorded
+        # producer when the spill file fails integrity verification.  The
+        # thunk closes over the producer's *input handles*, keeping them
+        # alive (and re-faultable) for as long as this block exists.
+        self._recompute = recompute
 
     # -- metadata ---------------------------------------------------------
     @property
@@ -243,11 +303,18 @@ class BlockHandle:
 # =============================================================================
 # the store
 # =============================================================================
+_UNSET = object()
+
+
 class BlockStore:
     def __init__(self, budget_bytes: int = 0, spill_dir: str | None = None):
         self.budget = max(0, int(budget_bytes))
         self._base_dir = spill_dir
-        self._dir: str | None = None
+        self._base_list: list | None = None   # parsed spill-dir failover list
+        self._dirs: list = []                 # mkdtemp'd dir per base entry
+        self._dir_idx = 0                     # first dir that still has room
+        self._closed = False
+        self._closed_site: str | None = None
         self._lock = threading.Lock()
         self._handles: "weakref.WeakSet[BlockHandle]" = weakref.WeakSet()
         self.stats = StoreStats()
@@ -257,13 +324,15 @@ class BlockStore:
         return self.budget > 0
 
     # ------------------------------------------------------------------
-    def put(self, frame: Frame, benefit: float = 0.0) -> BlockHandle:
+    def put(self, frame: Frame, benefit: float = 0.0,
+            recompute: "Callable[[], Frame] | None" = None) -> BlockHandle:
         """Register a block.  Inactive store (budget 0): a zero-overhead
         untracked wrapper.  Active: charge the block's bytes, evicting
-        lower-value blocks first to stay within budget."""
+        lower-value blocks first to stay within budget.  ``recompute`` is
+        the optional lineage thunk — see :class:`BlockHandle`."""
         if not self.active:
-            return BlockHandle(None, frame)
-        h = BlockHandle(self, frame)
+            return BlockHandle(None, frame, recompute)
+        h = BlockHandle(self, frame, recompute)
         h.benefit = benefit
         need = h.nbytes
         self._reserve(need, register=h)
@@ -290,7 +359,17 @@ class BlockStore:
             with h._lock:
                 f = h._frame
                 if f is None:
-                    if h._rec.path is None:
+                    path = h._rec.path
+                    if path is None:
+                        if self._closed:
+                            raise StoreClosedError(
+                                f"cannot fault {h!r} (block id {h._id}): "
+                                "its spill file was deleted by "
+                                "BlockStore.shutdown() at "
+                                f"[{self._closed_site}] — the store was "
+                                "reset/reconfigured after this frame was "
+                                "ingested (configure the budget before "
+                                "ingesting data)")
                         raise RuntimeError(
                             "spilled block's file is gone — the store was "
                             "reset/reconfigured after this frame was "
@@ -298,7 +377,7 @@ class BlockStore:
                             "ingesting data)")
                     self._reserve(h.nbytes)
                     charged = True
-                    f = _load_frame(h._rec.path)
+                    f = self._load_block(h, path)
                     with self._lock:
                         h._frame = f
                         h._rec.charged = h.nbytes
@@ -314,6 +393,41 @@ class BlockStore:
                 h._seq = next(_SEQ)
         return f
 
+    def _load_block(self, h: BlockHandle, path: str) -> Frame:
+        """Deserialize ``h``'s spill file with integrity verification (and
+        the chaos hook).  A corrupt/missing file is unlinked and the block
+        recomputed from its recorded producer when one exists; otherwise the
+        SpillIntegrityError propagates.  Runs under ``h._lock`` — safe for
+        recompute because producer lineage is a DAG, so the thunk can fault
+        *other* handles but never re-enter this one."""
+        recoverable = h._recompute is not None
+        if _faults.active():
+            _faults.spill_read_chaos(
+                path,
+                f"spill_read/blk{h._id}/"
+                + ("lineage" if recoverable else "orphan"),
+                recoverable=recoverable)
+        try:
+            return _load_frame(path)
+        except (SpillIntegrityError, OSError) as e:
+            with self._lock:
+                self.stats.checksum_failures += 1
+            try:
+                os.unlink(path)      # a later spill must rewrite, not reuse
+            except OSError:
+                pass
+            h._rec.path = None
+            rec_fn = h._recompute
+            if rec_fn is None:
+                raise SpillIntegrityError(
+                    f"spill file for {h!r} (block id {h._id}) is corrupt or "
+                    f"missing and the block has no recorded producer to "
+                    f"recompute from: {e}") from e
+            f = resolve(rec_fn())
+            with self._lock:
+                self.stats.recomputed_blocks += 1
+            return f
+
     # ------------------------------------------------------------------
     def _reserve(self, incoming: int, register: BlockHandle | None = None) -> None:
         """Atomically evict-until-fit and charge ``incoming`` bytes: the
@@ -323,7 +437,13 @@ class BlockStore:
         the whole shortfall instead of a full rescan per victim.  Only when
         nothing is evictable (every resident block pinned or mid-eviction)
         does the charge overshoot — bounding the peak at budget + the
-        in-flight blocks of the moment (≤ one per pool worker)."""
+        in-flight blocks of the moment (≤ one per pool worker).
+
+        Victims whose spill *write* fails (ENOSPC on every spill dir) are
+        skipped for the rest of this reservation — they stay resident and
+        the scan moves to the next candidate.  The skip set is per-call, so
+        a transient write failure is retried on the next reservation."""
+        skip: set[int] = set()
         while True:
             victims: list[BlockHandle] = []
             with self._lock:
@@ -332,7 +452,7 @@ class BlockStore:
                     cands = sorted(
                         (c for c in self._handles
                          if c._frame is not None and c._pins == 0
-                         and not c._evicting),
+                         and not c._evicting and id(c) not in skip),
                         key=lambda c: (c.benefit, c._seq))
                     freed = 0
                     for cand in cands:
@@ -350,20 +470,25 @@ class BlockStore:
                         register._rec.charged = incoming
                     return
             for victim in victims:
-                self._spill(victim)
+                if not self._spill(victim):
+                    skip.add(id(victim))
 
-    def _spill(self, h: BlockHandle) -> None:
+    def _spill(self, h: BlockHandle) -> bool:
+        """Evict one block to disk.  Returns False when the spill *write*
+        failed on every spill dir (graceful degradation: the victim stays
+        resident and charged; ``stats.budget_overruns`` was counted)."""
         try:
             with h._lock:
                 with self._lock:
                     f = h._frame
                     if f is None or h._pins > 0:
-                        return       # raced with a fault/pin: nothing to do
+                        return True  # raced with a fault/pin: nothing to do
                 path = h._rec.path
                 if path is None:
-                    path = h._rec.path = os.path.join(
-                        self._spill_dir(), f"blk{h._id}.npz")
-                    _save_frame(path, f)
+                    path = self._write_spill(h, f)
+                    if path is None:
+                        return False
+                    h._rec.path = path
                 # else: clean copy already on disk from a prior spill —
                 # frames are immutable, so dropping the memory is enough
                 with self._lock:
@@ -371,7 +496,7 @@ class BlockStore:
                         # pinned while we wrote: a kernel is reading this
                         # frame RIGHT NOW — keep it resident (and charged);
                         # the on-disk copy stays valid for a later eviction
-                        return
+                        return True
                     h._frame = None
                     self.stats.resident_bytes -= h._rec.charged
                     h._rec.charged = 0
@@ -380,46 +505,108 @@ class BlockStore:
         finally:
             with self._lock:
                 h._evicting = False
+        return True
 
     # ------------------------------------------------------------------
-    def _spill_dir(self) -> str:
-        d = self._dir
-        if d is None:
+    def _write_spill(self, h: BlockHandle, f: Frame) -> str | None:
+        """Write ``f`` to the first spill dir that accepts it, failing over
+        through the ``REPRO_SPILL_DIR`` list on any OSError (ENOSPC,
+        read-only mount, ...).  Returns the written path, or None when every
+        directory is exhausted — the graceful-degradation signal."""
+        bases = self._bases()
+        for idx in range(self._dir_idx, len(bases)):
+            d = self._dir_at(idx)
+            if d is None:
+                continue             # this base dir itself is unusable
+            path = os.path.join(d, f"blk{h._id}.npz")
+            try:
+                if _faults.active():
+                    _faults.spill_write_fault(f"spill_write/blk{h._id}/dir{idx}")
+                _save_frame(path, f)
+            except OSError:
+                continue             # fail over to the next spill dir
+            if idx != self._dir_idx:
+                self._dir_idx = idx  # later spills go straight to the
+                #                      first dir that still has room
+            return path
+        with self._lock:
+            self.stats.budget_overruns += 1
+        return None
+
+    def _bases(self) -> list:
+        """The configured spill base-dir list (lazy, so tests that set
+        ``REPRO_SPILL_DIR`` after store creation still take effect on first
+        spill, as before).  ``None`` entries mean the system tempdir."""
+        b = self._base_list
+        if b is None:
+            spec = self._base_dir or os.environ.get("REPRO_SPILL_DIR")
+            parts = [p for p in (spec or "").split(os.pathsep) if p]
+            b = self._base_list = parts or [None]
+            self._dirs = [_UNSET] * len(b)
+        return b
+
+    def _dir_at(self, idx: int) -> str | None:
+        """The mkdtemp'd spill directory under base dir ``idx`` (created on
+        first use; None — cached — when the base dir can't be created)."""
+        d = self._dirs[idx]
+        if d is _UNSET:
             with self._lock:
-                if self._dir is None:
-                    base = self._base_dir or os.environ.get("REPRO_SPILL_DIR")
-                    if base:
-                        os.makedirs(base, exist_ok=True)
-                    self._dir = tempfile.mkdtemp(prefix="repro-spill-",
-                                                 dir=base or None)
-                d = self._dir
+                if self._dirs[idx] is _UNSET:
+                    base = self._base_list[idx]
+                    try:
+                        if base:
+                            os.makedirs(base, exist_ok=True)
+                        self._dirs[idx] = tempfile.mkdtemp(
+                            prefix="repro-spill-", dir=base or None)
+                    except OSError:
+                        self._dirs[idx] = None
+                d = self._dirs[idx]
         return d
 
     @staticmethod
     def _reap(store: "BlockStore", rec: _Rec) -> None:
         """Finalizer for a dead handle: give back its resident charge and
-        delete its spill file (no leaked files once the owning frames go)."""
+        delete its spill file (no leaked files once the owning frames go).
+        An unlink that fails for any reason other than the file already
+        being gone is COUNTED (``stats.leaked_spill_files``), not
+        swallowed — a leak the spill smoke and chaos suite assert on."""
         with store._lock:
             store.stats.resident_bytes -= rec.charged
             rec.charged = 0
         if rec.path is not None:
             try:
                 os.unlink(rec.path)
+            except FileNotFoundError:
+                pass                 # already gone (shutdown, chaos): no leak
             except OSError:
-                pass
+                with store._lock:
+                    store.stats.leaked_spill_files += 1
             rec.path = None
 
     # ------------------------------------------------------------------
     def shutdown(self) -> None:
-        """Drop every spill file and the spill directory.  Handles that were
-        spilled become unusable — call only when the owning session is done
-        (``reset_store`` / process exit / the CI spill smoke)."""
+        """Drop every spill file and the spill directories.  Handles that
+        were spilled become unusable — call only when the owning session is
+        done (``reset_store`` / process exit / the CI spill smoke).  A later
+        fault of such a handle raises :class:`StoreClosedError` naming this
+        call site."""
+        site = "<unknown>"
+        for fr in reversed(traceback.extract_stack(limit=16)[:-1]):
+            if os.path.basename(fr.filename) != "store.py":
+                site = (f"{os.path.basename(fr.filename)}:{fr.lineno} "
+                        f"in {fr.name}")
+                break
         with self._lock:
+            self._closed = True
+            self._closed_site = site
             for h in list(self._handles):
                 h._rec.path = None
-            d, self._dir = self._dir, None
-        if d is not None:
-            shutil.rmtree(d, ignore_errors=True)
+            dirs, self._dirs = self._dirs, []
+            self._base_list = None
+            self._dir_idx = 0
+        for d in dirs:
+            if isinstance(d, str):
+                shutil.rmtree(d, ignore_errors=True)
 
 
 # =============================================================================
@@ -434,10 +621,9 @@ _DIR_OVERRIDE: str | None = None
 def _env_budget() -> int:
     if _BUDGET_OVERRIDE is not None:
         return _BUDGET_OVERRIDE
-    try:
-        return max(0, int(os.environ.get("REPRO_MEM_BUDGET", "0")))
-    except ValueError:
-        return 0
+    # warn-once parse: a malformed REPRO_MEM_BUDGET used to silently mean
+    # "unlimited" — now it still falls back to 0, but says so (faults.env_int)
+    return env_int("REPRO_MEM_BUDGET", 0, minimum=0)
 
 
 def get_store() -> BlockStore:
@@ -496,11 +682,16 @@ def unconfigure() -> None:
     reset_store()
 
 
-def as_handle(block: "Frame | BlockHandle") -> BlockHandle:
-    """Wrap a Frame into the store (identity on handles)."""
+def as_handle(block: "Frame | BlockHandle",
+              recompute: "Callable[[], Frame] | None" = None) -> BlockHandle:
+    """Wrap a Frame into the store (identity on handles).  ``recompute`` is
+    the optional lineage thunk recorded for spill-integrity recovery; on an
+    existing handle it only fills a missing one (never overwrites)."""
     if isinstance(block, BlockHandle):
+        if recompute is not None and block._recompute is None:
+            block._recompute = recompute
         return block
-    return get_store().put(block)
+    return get_store().put(block, recompute=recompute)
 
 
 def resolve(block: "Frame | BlockHandle") -> Frame:

@@ -1,0 +1,553 @@
+"""Chaos differential suite for the fault-tolerance layer (PR 6).
+
+Deterministic, seeded fault plans (``core.faults``) × {worker exception,
+slow task, corrupt spill, missing spill, ENOSPC} × grids {1, W, 4W}: every
+run must either complete **bit-identical** to its fault-free counterpart
+(retry / recompute / graceful degradation) or raise ONE typed error with
+full provenance — and everything the recovery machinery did must be
+attributed exactly in ``ExecStats``.
+
+The destructive unit tests (corrupt/missing/closed-store) manipulate real
+spill files directly, so they are deterministic without any injection plan.
+"""
+import gc
+import os
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import EvalMode, Session, set_session
+from repro.core import algebra as alg
+from repro.core import faults, schedule
+from repro.core.api import read_csv
+from repro.core.dtypes import Domain
+from repro.core.executor import ExecStats, Executor
+from repro.core.faults import (FaultPlan, IngestError, InjectedWorkerError,
+                               SpillIntegrityError, StoreClosedError,
+                               TaskError, env_int, is_retryable)
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.partition import PartitionedFrame
+from repro.core.store import as_handle, get_store, reset_store
+
+pytestmark = pytest.mark.spill
+
+
+@pytest.fixture(autouse=True)
+def _fault_counters():
+    """Plan matching records into module counters even in the pure-parsing
+    tests — keep every test's view of them clean."""
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@pytest.fixture
+def chaos(monkeypatch, tmp_path):
+    """Clean fault/retry/store/pool state around every test."""
+    for knob in ("REPRO_FAULT_PLAN", "REPRO_FAULT_SEED", "REPRO_FAULT_SLOW_MS",
+                 "REPRO_TASK_RETRIES", "REPRO_TASK_TIMEOUT_MS",
+                 "REPRO_RETRY_BACKOFF_MS", "REPRO_MEM_BUDGET"):
+        monkeypatch.delenv(knob, raising=False)
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_RETRY_BACKOFF_MS", "1")   # fast test retries
+    faults.reset()
+    schedule.configure_retries(clear=True)
+    reset_store()
+    yield monkeypatch
+    faults.reset()
+    schedule.configure_retries(clear=True)
+    reset_store()
+    schedule.reset_pool()
+
+
+def _frame(n=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return Frame(
+        [Column(np.asarray(rng.integers(0, 8, n, dtype=np.int32)), Domain.INT),
+         Column(np.asarray((rng.integers(0, 12, n) * np.float32(0.25))
+                           .astype(np.float32)), Domain.FLOAT)],
+        RangeLabels(n), labels_from_values(["k", "x"]))
+
+
+def _pipeline_plan(src):
+    from repro.core.algebra import (DropDuplicates, GroupBy, Map, Selection,
+                                    Udf, col, lit)
+
+    def scale(cols, frame):
+        out = dict(cols)
+        c = cols["x"]
+        out["x"] = Column(c.data * 2.0 + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+
+    udf = Udf(name="faults_sweep_scale", fn=scale, deps=frozenset(["x"]),
+              elementwise=True)
+    g = GroupBy(Selection(Map(src, udf), col("k") < lit(6)),
+                ("k",), [("x", "sum", "x"), ("x", "count", "n")])
+    return DropDuplicates(g, None)
+
+
+def _write_csv(path, n, seed=3):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, 8, n)
+    v = rng.integers(0, 50, n)
+    x = rng.integers(0, 12, n) * 0.25
+    with open(path, "w") as f:
+        f.write("k,v,x\n")
+        for i in range(n):
+            f.write(f"{k[i]},{v[i]},{x[i]}\n")
+
+
+# =============================================================================
+# the shared env parser (satellite: silent-except holes)
+# =============================================================================
+def test_env_int_malformed_warns_once_and_falls_back(chaos):
+    chaos.setenv("REPRO_TEST_BOGUS_KNOB", "not-an-int")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert env_int("REPRO_TEST_BOGUS_KNOB", 7) == 7
+        assert env_int("REPRO_TEST_BOGUS_KNOB", 7) == 7   # second parse
+    hits = [x for x in w if "REPRO_TEST_BOGUS_KNOB" in str(x.message)]
+    assert len(hits) == 1                                 # warned ONCE
+    assert issubclass(hits[0].category, RuntimeWarning)
+
+
+def test_env_int_minimum_and_defaults(chaos):
+    chaos.setenv("REPRO_TEST_NEG_KNOB", "-5")
+    assert env_int("REPRO_TEST_NEG_KNOB", 3, minimum=0) == 0
+    assert env_int("REPRO_TEST_UNSET_KNOB", 42) == 42
+
+
+def test_malformed_mem_budget_warns_not_silently_zero(chaos):
+    from repro.core.store import _env_budget
+    chaos.setenv("REPRO_MEM_BUDGET", "lots")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert _env_budget() == 0
+    assert any("REPRO_MEM_BUDGET" in str(x.message) for x in w)
+
+
+# =============================================================================
+# the plan: grammar + deterministic draws
+# =============================================================================
+def test_fault_plan_grammar_and_errors():
+    p = FaultPlan("worker:0.1, corrupt@blk3:1.0!, enospc:0.5", seed=1)
+    assert p.match("corrupt", "spill_read/blk3/orphan", recoverable=False)
+    assert not p.match("corrupt", "spill_read/blk4/orphan", recoverable=False)
+    for bad in ("worker", "bogus:0.5", "worker:abc", "worker@x"):
+        with pytest.raises(ValueError):
+            FaultPlan(bad)
+
+
+def test_draws_are_deterministic_per_address():
+    a = faults._draw(7, "worker", "dispatch/node=map/blk=0/try=0")
+    b = faults._draw(7, "worker", "dispatch/node=map/blk=0/try=0")
+    assert a == b and 0.0 <= a < 1.0
+    # a different seed or address decides independently
+    assert faults._draw(8, "worker", "dispatch/node=map/blk=0/try=0") != a
+    p0 = FaultPlan("worker:0.0", seed=7)
+    p1 = FaultPlan("worker:1.0", seed=7)
+    assert not p0.match("worker", "x", attempt=0)
+    assert p1.match("worker", "x", attempt=0)
+    assert not p1.match("worker", "x", attempt=1)     # non-sticky: try 0 only
+
+
+def test_nonsticky_corrupt_spares_orphan_reads():
+    p = FaultPlan("corrupt:1.0", seed=0)
+    assert p.match("corrupt", "spill_read/blk1/lineage", recoverable=True)
+    assert not p.match("corrupt", "spill_read/blk1/orphan", recoverable=False)
+    sticky = FaultPlan("corrupt:1.0!", seed=0)
+    assert sticky.match("corrupt", "spill_read/blk1/orphan", recoverable=False)
+
+
+# =============================================================================
+# dispatch retry policy
+# =============================================================================
+def test_transient_worker_faults_recovered_by_retry(chaos):
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    ref = schedule.dispatch_blocks(lambda x: x * 2, list(range(16)))
+    chaos.setenv("REPRO_FAULT_PLAN", "worker:0.5")
+    chaos.setenv("REPRO_FAULT_SEED", "3")
+    st = ExecStats()
+    got = schedule.dispatch_blocks(lambda x: x * 2, list(range(16)), stats=st)
+    assert got == ref                       # bit-identical despite the chaos
+    assert faults.injected_total() > 0
+    assert st.retries > 0 and st.task_failures == st.retries
+
+
+def test_poison_block_isolated_with_provenance(chaos):
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    chaos.setenv("REPRO_FAULT_PLAN", "worker@blk=2/:1.0!")   # sticky poison
+    st = ExecStats()
+    with schedule.node_scope("probe"):
+        with pytest.raises(TaskError) as ei:
+            schedule.dispatch_blocks(lambda x: x, list(range(6)), stats=st)
+    e = ei.value
+    assert e.node == "probe" and e.block == 2
+    assert e.attempts == schedule.task_retries() + 1
+    assert isinstance(e.cause, InjectedWorkerError)
+    assert "probe" in str(e) and "block=2" in str(e)
+    assert st.task_failures == e.attempts and st.retries == e.attempts - 1
+
+
+def test_deterministic_errors_propagate_unchanged(chaos):
+    st = ExecStats()
+
+    def boom(x):
+        raise ValueError("bad value, not transient")
+
+    with pytest.raises(ValueError, match="not transient"):
+        schedule.dispatch_blocks(boom, [1, 2, 3], stats=st)
+    assert st.retries == 0                  # never retried
+    assert not is_retryable(ValueError("x"))
+    assert is_retryable(OSError("x")) and is_retryable(TimeoutError())
+    assert not is_retryable(TaskError("x"))
+
+
+def test_retries_zero_fails_fast(chaos):
+    chaos.setenv("REPRO_TASK_RETRIES", "0")
+    chaos.setenv("REPRO_FAULT_PLAN", "worker@blk=1/:1.0!")
+    with pytest.raises(TaskError) as ei:
+        schedule.dispatch_blocks(lambda x: x, [10, 11, 12])
+    assert ei.value.attempts == 1           # no retry budget spent
+
+
+def test_slow_tasks_and_dispatch_deadline(chaos):
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    chaos.setenv("REPRO_FAULT_PLAN", "slow:1.0")
+    chaos.setenv("REPRO_FAULT_SLOW_MS", "1")
+    assert schedule.dispatch_blocks(lambda x: x + 1, list(range(8))) == \
+        list(range(1, 9))                   # slow alone: completes
+    chaos.setenv("REPRO_FAULT_SLOW_MS", "200")
+    chaos.setenv("REPRO_TASK_TIMEOUT_MS", "40")
+    with schedule.node_scope("slowpoke"):
+        with pytest.raises(TaskError) as ei:
+            schedule.dispatch_blocks(lambda x: x + 1, list(range(8)))
+    assert ei.value.kind == "timeout" and ei.value.node == "slowpoke"
+
+
+def test_kill_pool_worker_mid_dispatch_recovers(chaos):
+    """reset_pool() (shutdown wait=False) under an in-flight dispatch models
+    losing the worker set: the dispatch must still complete, and later
+    dispatches run on the rebuilt pool."""
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    started, release = threading.Event(), threading.Event()
+
+    def fn(i):
+        started.set()
+        release.wait(10)
+        return i * 3
+
+    out: dict = {}
+    t = threading.Thread(
+        target=lambda: out.update(r=schedule.dispatch_blocks(fn, list(range(8)))))
+    t.start()
+    assert started.wait(10)
+    schedule.reset_pool()                   # kill the pool under the dispatch
+    release.set()
+    t.join(30)
+    assert out.get("r") == [i * 3 for i in range(8)]
+    # the rebuilt pool serves new dispatches — with injected worker deaths
+    # recovered by retry on top
+    chaos.setenv("REPRO_FAULT_PLAN", "worker:1.0")   # every block, try 0
+    st = ExecStats()
+    assert schedule.dispatch_blocks(lambda x: -x, [1, 2, 3], stats=st) == \
+        [-1, -2, -3]
+    assert st.retries == 3
+
+
+# =============================================================================
+# spill integrity: corrupt / missing / orphan / closed store
+# =============================================================================
+def _spill_out(h, filler_seeds=(91, 92)):
+    """Force ``h`` to disk by registering fresher blocks."""
+    keep = [as_handle(_frame(200, seed=s)) for s in filler_seeds]
+    assert not h.is_resident
+    return keep
+
+
+def test_corrupt_spill_recomputed_from_lineage(chaos):
+    src = _frame(200, seed=1)
+    chaos.setenv("REPRO_MEM_BUDGET", str(src.nbytes() + 16))
+    reset_store()
+    hsrc = as_handle(src)                   # stays faultable via its own file
+
+    def produce():
+        f = hsrc.frame()
+        return Frame([Column(np.asarray(f.columns[1].data) * 2.0,
+                             Domain.FLOAT)],
+                     RangeLabels(f.nrows), labels_from_values(["x2"]))
+
+    h = as_handle(produce(), recompute=produce)
+    ref = h.frame().to_pydict()
+    keep = _spill_out(h)
+    path = h._rec.path
+    with open(path, "r+b") as f:            # flip one payload byte
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    st = get_store().stats
+    assert h.frame().to_pydict() == ref     # recomputed, bit-identical
+    assert st.checksum_failures == 1 and st.recomputed_blocks == 1
+    # the bad file was discarded: a later eviction rewrites cleanly
+    keep2 = _spill_out(h, filler_seeds=(93, 94))
+    assert h.frame().to_pydict() == ref
+    del keep, keep2
+
+
+def test_missing_spill_recomputed_from_lineage(chaos):
+    src = _frame(200, seed=2)
+    chaos.setenv("REPRO_MEM_BUDGET", str(src.nbytes() + 16))
+    reset_store()
+    h = as_handle(src, recompute=lambda: _frame(200, seed=2))
+    ref = src.to_pydict()
+    keep = _spill_out(h)
+    os.unlink(h._rec.path)                  # the file vanishes
+    st = get_store().stats
+    assert h.frame().to_pydict() == ref
+    assert st.checksum_failures == 1 and st.recomputed_blocks == 1
+    del keep
+
+
+def test_corrupt_orphan_spill_raises_typed_error(chaos):
+    src = _frame(200, seed=3)
+    chaos.setenv("REPRO_MEM_BUDGET", str(src.nbytes() + 16))
+    reset_store()
+    h = as_handle(src)                      # no lineage: orphan
+    keep = _spill_out(h)
+    with open(h._rec.path, "r+b") as f:
+        f.seek(os.path.getsize(h._rec.path) // 2)
+        f.write(b"\x00\x01\x02\x03")
+    with pytest.raises(SpillIntegrityError, match="no recorded producer"):
+        h.frame()
+    assert get_store().stats.checksum_failures == 1
+    del keep
+
+
+def test_fault_after_shutdown_raises_store_closed(chaos):
+    src = _frame(200, seed=4)
+    chaos.setenv("REPRO_MEM_BUDGET", str(src.nbytes() + 16))
+    reset_store()
+    h = as_handle(src)
+    keep = _spill_out(h)
+    reset_store()                           # shutdown: spill files deleted
+    with pytest.raises(StoreClosedError) as ei:
+        h.frame()
+    msg = str(ei.value)
+    assert f"block id {h._id}" in msg       # names the handle
+    assert "shutdown" in msg and ".py:" in msg   # and the shutdown site
+    assert isinstance(ei.value, RuntimeError) and "spill" in msg
+    del keep
+
+
+# =============================================================================
+# graceful degradation under resource exhaustion
+# =============================================================================
+def test_enospc_keeps_victim_resident_and_counts_overrun(chaos):
+    one = _frame(200).nbytes()
+    chaos.setenv("REPRO_MEM_BUDGET", str(one + 16))
+    chaos.setenv("REPRO_FAULT_PLAN", "enospc:1.0")
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))     # wants to evict h1 — can't write
+    st = get_store().stats
+    assert h1.is_resident and h2.is_resident    # both stayed (overshoot)
+    assert st.budget_overruns > 0 and st.spills == 0
+    assert st.resident_bytes > get_store().budget
+    # data is still fully correct
+    assert h1.frame().to_pydict() == _frame(200, seed=1).to_pydict()
+
+
+def test_spill_dir_failover_list(chaos, tmp_path):
+    bad = tmp_path / "full-disk"
+    good = tmp_path / "overflow"
+    bad.mkdir()
+    good.mkdir()
+    chaos.setenv("REPRO_SPILL_DIR", f"{bad}{os.pathsep}{good}")
+    chaos.setenv("REPRO_FAULT_PLAN", "enospc@dir0:1.0")   # dir 0 always full
+    one = _frame(200).nbytes()
+    chaos.setenv("REPRO_MEM_BUDGET", str(one + 16))
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))
+    assert not h1.is_resident               # spilled — via the failover dir
+    assert get_store().stats.spills == 1
+    assert not any(bad.rglob("blk*.npz"))
+    assert any(good.rglob("blk*.npz"))
+    assert h1.frame().to_pydict() == _frame(200, seed=1).to_pydict()
+    del h2
+
+
+def test_reap_unlink_failure_counts_leak(chaos, monkeypatch):
+    one = _frame(200).nbytes()
+    chaos.setenv("REPRO_MEM_BUDGET", str(one + 16))
+    reset_store()
+    h1 = as_handle(_frame(200, seed=1))
+    h2 = as_handle(_frame(200, seed=2))
+    assert not h1.is_resident
+    st = get_store().stats
+    real_unlink = os.unlink
+
+    def deny(p, *a, **k):
+        if "repro-spill-" in str(p):
+            raise PermissionError(13, "Permission denied", str(p))
+        return real_unlink(p, *a, **k)
+
+    monkeypatch.setattr(os, "unlink", deny)
+    del h1
+    gc.collect()
+    assert st.leaked_spill_files == 1       # counted, not swallowed
+    monkeypatch.setattr(os, "unlink", real_unlink)
+    del h2
+
+
+# =============================================================================
+# read_csv: file changed between planning and tokenization (satellite)
+# =============================================================================
+@pytest.mark.parametrize("change", ["truncated", "grew"])
+def test_read_csv_file_changed_mid_ingest(chaos, monkeypatch, tmp_path,
+                                          change):
+    import repro.core.api as api_mod
+    csv = tmp_path / "racy.csv"
+    _write_csv(csv, 2000)
+    orig = api_mod._csv_chunk_ranges
+
+    def plan_then_change(path, sep):
+        header, ranges = orig(path, sep)
+        if change == "truncated":
+            with open(path, "r+b") as f:    # concurrently-truncated file
+                f.truncate(os.path.getsize(path) - 123)
+        else:
+            with open(path, "ab") as f:     # concurrently-appended rows
+                f.write(b"9,9,9.0\n")
+        return header, ranges
+
+    monkeypatch.setattr(api_mod, "_csv_chunk_ranges", plan_then_change)
+    s = set_session(Session(mode=EvalMode.LAZY))
+    try:
+        with pytest.raises(IngestError, match=change):
+            read_csv(str(csv))
+    finally:
+        s.close()
+
+
+# =============================================================================
+# chaos differential: fault plans × grids, bit-identical + attributed
+# =============================================================================
+@pytest.mark.parametrize("grid", [1, None, "4w"])
+def test_worker_chaos_differential_across_grids(grid, chaos):
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    w = schedule.pool_width()
+    rp = {1: 1, None: w, "4w": 4 * w}[grid]
+    frame = _frame(4000, seed=7)
+
+    def run():
+        pf = PartitionedFrame.from_frame(frame, row_parts=rp)
+        ex = Executor({"f": pf}, optimize=True)
+        out = ex.evaluate(_pipeline_plan(alg.Source("f", 4000, 2)))
+        return out.to_frame().to_pydict(), ex.stats
+
+    ref, st0 = run()
+    assert st0.faults_injected == 0 and st0.retries == 0
+
+    chaos.setenv("REPRO_FAULT_PLAN", "worker:0.4,slow:0.2")
+    chaos.setenv("REPRO_FAULT_SEED", "11")
+    chaos.setenv("REPRO_FAULT_SLOW_MS", "1")
+    got, st = run()
+    assert got == ref                       # bit-identical under chaos
+    assert st.faults_injected > 0
+    assert st.retries > 0 and st.task_failures == st.retries
+
+
+def test_acceptance_all_fault_classes_4x_budget_pipeline(chaos, tmp_path):
+    """ISSUE 6 acceptance: a seeded plan injecting ≥1 of each fault class
+    (worker exception, spill corruption/missing, ENOSPC) into the 4×-budget
+    groupby+dedup pipeline completes bit-identical to the fault-free run
+    with every retry/recompute/overrun attributed in ExecStats."""
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    csv = tmp_path / "big.csv"
+    _write_csv(csv, 20_000)
+    plan = "worker:0.3,slow:0.1,corrupt:0.5,missing:0.3,enospc:0.4"
+
+    def run(inject=False):
+        # chaos is scoped to *statement execution* — configured after the
+        # plan is built and cleared before the final result materialization
+        # — so every injection lands inside the executor's attribution
+        # windows and ExecStats can be asserted EXACTLY, not just >= 1
+        s = set_session(Session(mode=EvalMode.LAZY))
+        try:
+            df = read_csv(str(csv))
+            total = s.frames["frame_0"].nbytes()
+            df["y"] = df["x"] * 2.0 + 1.0
+            out = (df[df["v"] > 10].groupby("k")
+                   .agg({"y": "sum", "x": "mean"}).drop_duplicates())
+            if inject:
+                faults.configure(plan=plan, seed=5)
+            pf = s.executor.evaluate(out._node)    # the chaos window
+            fired = faults.injected_snapshot()
+            injected = faults.injected_total()
+            faults.reset()
+            res = pf.to_frame().to_pydict()
+            return res, total, s.executor.stats, fired, injected
+        finally:
+            s.close()
+
+    ref, total, st0, _, _ = run()           # fault-free, unbudgeted
+    assert st0.spills == 0 and st0.faults_injected == 0
+
+    chaos.setenv("REPRO_MEM_BUDGET", str(total // 4))
+    chaos.setenv("REPRO_FAULT_SLOW_MS", "1")
+    reset_store()
+    got, _, st, fired, injected = run(inject=True)
+
+    assert got == ref                       # bit-identical under full chaos
+    assert fired.get("worker", 0) >= 1      # ≥1 of each injected class
+    assert fired.get("corrupt", 0) + fired.get("missing", 0) >= 1
+    assert fired.get("enospc", 0) >= 1
+    # exact attribution: ExecStats saw what the store and the plan recorded
+    store_stats = get_store().stats
+    assert st.retries > 0
+    assert st.task_failures >= st.retries
+    assert st.checksum_failures == store_stats.checksum_failures > 0
+    assert st.recomputed_blocks == store_stats.recomputed_blocks > 0
+    assert st.budget_overruns == store_stats.budget_overruns > 0
+    assert st.faults_injected == injected > 0
+    assert store_stats.leaked_spill_files == 0
+
+
+def test_zero_fault_run_stays_clean(chaos):
+    """With injection disabled the whole layer is inert: no injected
+    faults, no retries, no integrity work — the production path."""
+    chaos.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    frame = _frame(2000, seed=5)
+    pf = PartitionedFrame.from_frame(frame, row_parts=4)
+    ex = Executor({"f": pf}, optimize=True)
+    out = ex.evaluate(_pipeline_plan(alg.Source("f", 2000, 2)))
+    assert out.nrows > 0
+    assert not faults.active()
+    assert ex.stats.faults_injected == 0 and ex.stats.retries == 0
+    assert ex.stats.task_failures == 0 and ex.stats.checksum_failures == 0
+
+
+def test_session_knobs_configure_retries_and_plan(chaos):
+    s = set_session(Session(mode=EvalMode.LAZY, task_retries=5,
+                            retry_backoff_ms=0, task_timeout_ms=0,
+                            fault_plan="worker:0.0", fault_seed=9))
+    try:
+        assert schedule.task_retries() == 5
+        assert schedule.retry_backoff_ms() == 0
+        assert faults.active()
+        p = faults._plan()
+        assert p is not None and p.seed == 9
+    finally:
+        s.close()
