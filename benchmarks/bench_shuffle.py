@@ -1,0 +1,351 @@
+"""Shuffle-native JOIN / SORT (grace-hash + sample-sort exchange) vs the
+serial seed path.
+
+Two consumer chains over a 100k-row × 16-block frame, each executed three
+ways on the same frame store:
+
+  * ``serial_seed`` — ``REPRO_SHUFFLE=0`` + per-node plans + the seed's
+    dict-loop join matcher re-instated: the pre-PR-8 behavior (both inputs
+    concatenated with ``to_frame()``, single-threaded host matching, full
+    payload gather before the filter);
+  * ``shuffled``    — per-node plans on the exchange path: per-block key
+    frames, hash/range bucketization through the scheduling layer,
+    per-bucket local kernels, distributed payload gather;
+  * ``fused``       — the exchange path with barrier fusion
+    (``FusedJoin`` / ``FusedSort``): the consumer filter prunes match /
+    permutation indices BEFORE the payload gather (for SORT the filter even
+    precedes the exchange, so dropped rows never leave their source block).
+
+All three produce identical frames (asserted before timing, along with
+exact ``ExecStats`` exchange attribution).  A second scenario reruns the
+join with inputs 4× ``REPRO_MEM_BUDGET`` — the seed path cannot bound its
+residency (it concatenates both inputs); the exchange path must complete
+bit-identically with peak resident bytes ≤ budget + one block.  Numbers
+land in ``BENCH_shuffle.json``; the headline is fused vs serial_seed on
+each chain (target ≥ 1.5×, 2 workers).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+# standalone runs mirror benchmarks/run.py: one partition ↔ one core, set
+# before jax initializes
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import numpy as np
+
+from repro.core import algebra as alg
+from repro.core import physical
+from repro.core import schedule
+from repro.core.dtypes import Domain
+from repro.core.executor import Executor
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.partition import PartitionedFrame
+from repro.core.store import get_store, reset_store
+
+from ._util import Reporter, time_us
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_shuffle.json")
+
+MODES = {
+    "serial_seed": {"env": {"REPRO_SHUFFLE": "0"}, "optimize": False,
+                    "seed_matcher": True},
+    "shuffled": {"env": {"REPRO_SHUFFLE": "1"}, "optimize": False,
+                 "seed_matcher": False},
+    "fused": {"env": {"REPRO_SHUFFLE": "1"}, "optimize": True,
+              "seed_matcher": False},
+}
+
+
+def _seed_match_ids(lids: np.ndarray, rids: np.ndarray, how: str):
+    """The seed's dict-loop matcher (the pre-PR ``_join_indices`` core),
+    re-instated under ``serial_seed`` so the baseline measures the seed
+    path rather than this PR's vectorized matcher.  Same contract and same
+    emission order as ``physical._match_ids``."""
+    groups: dict[int, list[int]] = {}
+    for pos, gid in enumerate(rids):
+        groups.setdefault(int(gid), []).append(pos)
+    lidx_l: list[int] = []
+    ridx_l: list[int] = []
+    lnull: list[int] = []
+    rnull: list[bool] = []
+    for i, gid in enumerate(lids):
+        match = groups.get(int(gid))
+        if match:
+            for r in match:          # right order breaks ties
+                lidx_l.append(i)
+                ridx_l.append(r)
+                rnull.append(True)
+        elif how in ("left", "outer"):
+            lidx_l.append(i)
+            ridx_l.append(0)
+            rnull.append(False)
+    if how in ("right", "outer"):
+        lseen = set(np.unique(lids).tolist())
+        for r, gid in enumerate(rids):
+            if int(gid) not in lseen:
+                lidx_l.append(0)
+                lnull.append(len(lidx_l) - 1)
+                ridx_l.append(r)
+                rnull.append(True)
+    lidx = np.asarray(lidx_l, dtype=np.int64)
+    ridx = np.asarray(ridx_l, dtype=np.int64)
+    rvalid = np.asarray(rnull, dtype=bool)
+    lvalid = np.ones(len(lidx), dtype=bool)
+    lvalid[np.asarray(lnull, dtype=np.int64)] = False
+    return lidx, ridx, lvalid, rvalid
+
+
+class _mode:
+    def __init__(self, name: str):
+        spec = MODES[name]
+        self.env = spec["env"]
+        self.patch = spec["seed_matcher"]
+        self.saved: dict = {}
+        self._orig = None
+
+    def __enter__(self):
+        for k, v in self.env.items():
+            self.saved[k] = os.environ.get(k)
+            os.environ[k] = v
+        if self.patch:
+            self._orig = physical._match_ids
+            physical._match_ids = _seed_match_ids
+
+    def __exit__(self, *exc):
+        for k, old in self.saved.items():
+            if old is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = old
+        if self.patch:
+            physical._match_ids = self._orig
+        return False
+
+
+def _join_frames(n_rows: int, seed: int = 3) -> tuple[Frame, Frame]:
+    """Left n×3, right (n/4)×2, int keys over a shared range: roughly half
+    the left rows find a match, duplicate keys on both sides."""
+    rng = np.random.default_rng(seed)
+    lf = Frame([Column(np.asarray(rng.integers(0, n_rows // 2, n_rows),
+                                  dtype=np.int64), Domain.INT),
+                Column(rng.normal(size=n_rows), Domain.FLOAT),
+                Column(rng.normal(size=n_rows), Domain.FLOAT)],
+               RangeLabels(n_rows), labels_from_values(["k", "a", "a2"]))
+    nr = max(n_rows // 4, 1)
+    rf = Frame([Column(np.asarray(rng.integers(0, n_rows // 2, nr),
+                                  dtype=np.int64), Domain.INT),
+                Column(rng.normal(size=nr), Domain.FLOAT)],
+               RangeLabels(nr), labels_from_values(["k", "b"]))
+    return lf, rf
+
+
+def _chains(lsrc: alg.Node, rsrc: alg.Node) -> dict[str, alg.Node]:
+    # a > 1.0 keeps ~16% of rows: selective enough that index-filtering
+    # before the payload gather is a real win, dense enough to be honest
+    pred = alg.col("a") > alg.lit(1.0)
+    return {
+        "filter_join": alg.Selection(
+            alg.Join(lsrc, rsrc, on=["k"], how="inner"), pred),
+        "filter_sort": alg.Selection(
+            alg.Sort(lsrc, ["k", "a"], True), pred),
+    }
+
+
+def _assert_equal(a: Frame, b: Frame, ctx: str) -> None:
+    ad, bd = a.to_pydict(), b.to_pydict()
+    assert list(ad) == list(bd), ctx
+    assert a.row_labels.to_list() == b.row_labels.to_list(), ctx
+    for k in ad:
+        np.testing.assert_array_equal(np.asarray(ad[k]), np.asarray(bd[k]),
+                                      err_msg=f"{ctx}/{k}")
+
+
+def _bench(rep: Reporter, n_rows: int, row_parts: int, reps: int) -> dict:
+    lf, rf = _join_frames(n_rows)
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=row_parts),
+             "r": PartitionedFrame.from_frame(rf,
+                                              row_parts=max(row_parts // 4, 1))}
+    lsrc = alg.Source("l", nrows=store["l"].nrows, ncols=store["l"].ncols)
+    rsrc = alg.Source("r", nrows=store["r"].nrows, ncols=store["r"].ncols)
+
+    out: dict = {"rows": n_rows, "row_parts": row_parts,
+                 "pool_workers": schedule.pool_width(), "chains": {}}
+    for chain, plan in _chains(lsrc, rsrc).items():
+        # correctness gate + exchange attribution before timing
+        frames, stats = {}, {}
+        for mode in MODES:
+            with _mode(mode):
+                ex = Executor(store, optimize=MODES[mode]["optimize"])
+                frames[mode] = ex.evaluate(plan).to_frame()
+                stats[mode] = ex.stats
+        _assert_equal(frames["serial_seed"], frames["shuffled"], chain)
+        _assert_equal(frames["serial_seed"], frames["fused"], chain)
+        assert stats["serial_seed"].shuffle_buckets == 0, chain
+        assert stats["shuffled"].shuffle_buckets > 0, chain
+        assert stats["shuffled"].shuffle_bytes > 0, chain
+        assert stats["fused"].shuffle_buckets > 0, chain
+        assert stats["fused"].barrier_fused_groups >= 1, f"{chain}: not fused"
+
+        execs = {m: Executor(store, optimize=MODES[m]["optimize"])
+                 for m in MODES}
+
+        def run(mode):
+            ex = execs[mode]
+            ex.cache.clear()      # fresh evaluation; reuse is measured elsewhere
+            with _mode(mode):
+                return ex.evaluate(plan)
+
+        # interleave MANY short passes and take each mode's MEDIAN pass-best
+        # (robust to polluted windows on a shared box)
+        samples: dict[str, list[float]] = {m: [] for m in MODES}
+        for _ in range(8):
+            for mode in MODES:
+                samples[mode].append(time_us(lambda m=mode: run(m), reps=reps))
+        times = {m: float(np.median(v)) for m, v in samples.items()}
+
+        entry: dict = {"modes": {}}
+        for mode in MODES:
+            speedup = times["serial_seed"] / max(times[mode], 1e-9)
+            rep.add(f"shuffle/{chain}/{mode}[{n_rows}x{row_parts}]",
+                    times[mode], f"speedup={speedup:.2f}x")
+            s = stats[mode]
+            entry["modes"][mode] = {
+                "us": round(times[mode], 1),
+                "speedup_vs_serial_seed": round(speedup, 3),
+                "shuffle_buckets": s.shuffle_buckets,
+                "shuffle_bytes": s.shuffle_bytes,
+                "skew_splits": s.skew_splits,
+                "gather_rows": s.gather_rows,
+            }
+        out["chains"][chain] = entry
+    return out
+
+
+# =============================================================================
+# scenario 2: join over inputs 4× the memory budget
+# =============================================================================
+def _budget_frames(n_rows: int) -> tuple[Frame, Frame]:
+    """Mostly disjoint key ranges: the out-of-core property under test is
+    INPUT residency, so a selective join keeps the output small."""
+    rng = np.random.default_rng(0)
+    lhi = n_rows // 2
+    rlo, rhi = int(n_rows * 0.4833), int(n_rows * 0.9833)
+    lf = Frame([Column(np.asarray(rng.integers(0, lhi, n_rows),
+                                  dtype=np.int64), Domain.INT),
+                Column(rng.normal(size=n_rows), Domain.FLOAT),
+                Column(rng.normal(size=n_rows), Domain.FLOAT)],
+               RangeLabels(n_rows), labels_from_values(["k", "a", "a2"]))
+    rf = Frame([Column(np.asarray(rng.integers(rlo, rhi, n_rows),
+                                  dtype=np.int64), Domain.INT),
+                Column(rng.normal(size=n_rows), Domain.FLOAT)],
+               RangeLabels(n_rows), labels_from_values(["k", "b"]))
+    return lf, rf
+
+
+def _budget_report(rep: Reporter, n_rows: int, row_parts: int) -> dict:
+    lf, rf = _budget_frames(n_rows)
+    plan = alg.Join(alg.Source("l"), alg.Source("r"), on=["k"], how="inner")
+    spill_tmp = tempfile.mkdtemp(prefix="repro-bench-shuffle-")
+    saved_budget = os.environ.pop("REPRO_MEM_BUDGET", None)
+    saved_dir = os.environ.get("REPRO_SPILL_DIR")
+    os.environ["REPRO_SPILL_DIR"] = spill_tmp
+
+    def run():
+        store = {"l": PartitionedFrame.from_frame(lf, row_parts=row_parts),
+                 "r": PartitionedFrame.from_frame(rf, row_parts=row_parts)}
+        total = store["l"].nbytes() + store["r"].nbytes()
+        ex = Executor(store)
+        got = ex.evaluate(plan).to_frame().to_pydict()
+        return got, total, ex.stats, store
+
+    try:
+        reset_store()
+        ref, total, st0, keep0 = run()
+        assert st0.spills == 0, "unbudgeted control run spilled"
+        budget = total // 4                   # inputs are 4× this budget
+        os.environ["REPRO_MEM_BUDGET"] = str(budget)
+        reset_store()
+        got, _, st, keep = run()
+        ss = get_store().stats
+        one_block = max(schedule.budget_max_block_bytes(),
+                        max((h.nbytes for h in get_store()._handles),
+                            default=0))
+        # acceptance gates: completes, bit-identical, spilled, peak bounded
+        assert got == ref, "4x-budget join diverged from the unbudgeted run"
+        assert st.spills > 0 and st.faults > 0, "budget never engaged"
+        assert ss.peak_resident_bytes <= budget + one_block, (
+            ss.peak_resident_bytes, budget, one_block)
+        rep.add(f"shuffle/join_4x_budget[{n_rows}x{row_parts}]",
+                0.0, f"completed peak={ss.peak_resident_bytes} "
+                     f"budget={budget} spills={st.spills}")
+        return {"rows": n_rows, "row_parts": row_parts,
+                "device_bytes": total, "budget": budget,
+                "completed": True, "bit_identical": True,
+                "spills": st.spills, "faults": st.faults,
+                "peak_resident_bytes": ss.peak_resident_bytes,
+                "peak_bound": budget + one_block,
+                "shuffle_buckets": st.shuffle_buckets,
+                "shuffle_bytes": st.shuffle_bytes,
+                "pool_workers": schedule.pool_width()}
+    finally:
+        if saved_budget is None:
+            os.environ.pop("REPRO_MEM_BUDGET", None)
+        else:
+            os.environ["REPRO_MEM_BUDGET"] = saved_budget
+        if saved_dir is None:
+            os.environ.pop("REPRO_SPILL_DIR", None)
+        else:
+            os.environ["REPRO_SPILL_DIR"] = saved_dir
+        reset_store()
+        shutil.rmtree(spill_tmp, ignore_errors=True)
+
+
+def run(rep: Reporter, smoke: bool = False) -> None:
+    # Pin the 2-worker pool the acceptance targets are defined at,
+    # restoring the surrounding pool afterwards.
+    saved = os.environ.get("REPRO_POOL_WORKERS")
+    os.environ["REPRO_POOL_WORKERS"] = "2"
+    schedule.reset_pool()
+    try:
+        if smoke:
+            # sanity only: don't overwrite the recorded full-size numbers
+            _bench(rep, 8_000, 8, reps=1)
+            _budget_report(rep, 4_000, 8)
+            return
+        results = _bench(rep, 100_000, 16, reps=2)
+        budget = _budget_report(rep, 40_000, 16)
+        with open(_JSON_PATH, "w") as f:
+            json.dump({"benchmark":
+                       "shuffle-native JOIN/SORT (grace-hash + sample-sort "
+                       "exchange) vs the serial seed path",
+                       "pool_workers": schedule.pool_width(),
+                       "results": results, "join_4x_budget": budget},
+                      f, indent=2)
+            f.write("\n")
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_POOL_WORKERS", None)
+        else:
+            os.environ["REPRO_POOL_WORKERS"] = saved
+        schedule.reset_pool()
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, single rep (CI sanity mode)")
+    args = ap.parse_args()
+    rep = Reporter()
+    print("name,us_per_call,derived")
+    run(rep, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

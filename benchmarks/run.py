@@ -22,6 +22,9 @@
   faults        fault-tolerant execution: retry-machinery overhead at 0%
                 faults + completion under a seeded 5% chaos plan
                 (also writes BENCH_faults.json)
+  shuffle       shuffle-native JOIN/SORT: grace-hash + sample-sort exchange
+                (serial_seed vs shuffled vs fused) + 4x-budget join
+                (also writes BENCH_shuffle.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -55,7 +58,8 @@ def main() -> None:
     from . import (bench_approx, bench_blocking_fusion, bench_dedup,
                    bench_faults, bench_fig6, bench_fusion,
                    bench_opportunistic, bench_outofcore, bench_reuse,
-                   bench_rewrite, bench_roofline, bench_scheduling)
+                   bench_rewrite, bench_roofline, bench_scheduling,
+                   bench_shuffle)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -69,6 +73,7 @@ def main() -> None:
         "dedup": bench_dedup.run,
         "outofcore": bench_outofcore.run,
         "faults": bench_faults.run,
+        "shuffle": bench_shuffle.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

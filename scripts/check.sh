@@ -113,5 +113,62 @@ if [[ "$leaked" -ne 0 ]]; then
 fi
 rm -rf "$chaos_tmp"
 
+# shuffle smoke: a budgeted shuffled JOIN (grace-hash exchange) must complete
+# bit-identical to its unbudgeted run with spills actually engaged, exchange
+# attribution recorded, and ZERO spill files left behind.
+shuffle_tmp=$(mktemp -d)
+REPRO_SPILL_DIR="$shuffle_tmp" REPRO_POOL_WORKERS=2 \
+python - <<'PY'
+import os
+import numpy as np
+from repro.core import algebra as alg
+from repro.core.dtypes import Domain
+from repro.core.executor import Executor
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.partition import PartitionedFrame
+from repro.core.store import get_store, reset_store
+
+rng = np.random.default_rng(11)
+n = 4000
+lf = Frame([Column(np.asarray(rng.integers(0, n // 2, n), dtype=np.int64),
+                   Domain.INT),
+            Column(rng.normal(size=n), Domain.FLOAT)],
+           RangeLabels(n), labels_from_values(["k", "a"]))
+rf = Frame([Column(np.asarray(rng.integers(n // 4, 3 * n // 4, n),
+                              dtype=np.int64), Domain.INT),
+            Column(rng.normal(size=n), Domain.FLOAT)],
+           RangeLabels(n), labels_from_values(["k", "b"]))
+plan = alg.Join(alg.Source("l"), alg.Source("r"), on=["k"], how="inner")
+
+def run():
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=8),
+             "r": PartitionedFrame.from_frame(rf, row_parts=8)}
+    total = store["l"].nbytes() + store["r"].nbytes()
+    ex = Executor(store)
+    got = ex.evaluate(plan).to_frame().to_pydict()
+    return got, total, ex.stats
+
+reset_store()
+ref, total, st0 = run()
+assert st0.shuffle_buckets > 0, "exchange path never engaged"
+assert st0.spills == 0, "unbudgeted control run spilled"
+
+os.environ["REPRO_MEM_BUDGET"] = str(max(total // 4, 1))
+reset_store()
+got, _, st = run()
+assert got == ref, "budgeted shuffled join diverged from the unbudgeted run"
+assert st.spills > 0, "4x budget never spilled"
+assert get_store().stats.leaked_spill_files == 0
+reset_store()
+PY
+leaked=$(find "$shuffle_tmp" -type f | wc -l)
+if [[ "$leaked" -ne 0 ]]; then
+    echo "ERROR: $leaked leaked spill file(s) under $shuffle_tmp (shuffle)" >&2
+    find "$shuffle_tmp" -type f >&2
+    exit 1
+fi
+rm -rf "$shuffle_tmp"
+
 # full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
 python -m benchmarks.run --smoke

@@ -574,9 +574,9 @@ class FusedSort(Node):
     touches = "both"
 
     def __init__(self, child: Node, by: Sequence[Any], ascending: bool,
-                 stages: Sequence[Stage]):
+                 stages: Sequence[Stage], grid: str | None = None):
         super().__init__([child], by=tuple(by), ascending=ascending,
-                         stages=tuple(stages))
+                         stages=tuple(stages), grid=grid)
 
     @property
     def stages(self) -> tuple:
@@ -592,7 +592,7 @@ class FusedJoin(Node):
     touches = "both"
 
     def __init__(self, left: Node, right: Node, on, how, left_on, right_on,
-                 stages: Sequence[Stage]):
+                 stages: Sequence[Stage], grid: str | None = None):
         super().__init__(
             [left, right],
             on=tuple(on) if on is not None else None,
@@ -600,6 +600,7 @@ class FusedJoin(Node):
             right_on=tuple(right_on) if right_on is not None else None,
             how=how,
             stages=tuple(stages),
+            grid=grid,
         )
 
     @property

@@ -146,6 +146,26 @@ class ExecStats:
                                     during this executor's evaluations; 0
                                     whenever injection is disabled.
 
+    Shuffle/exchange counters (PR 8, ``core/shuffle.py``) — grace-hash JOIN
+    and sample-sort SORT attribute their exchange here; all three stay 0 under
+    ``REPRO_SHUFFLE=0`` (the serial oracle) and for cross joins (which need
+    no exchange):
+
+      * ``shuffle_buckets``       — bucket frames the exchange registered:
+                                    2·B per hash join (one per side per
+                                    bucket), B per sample-sort;
+      * ``shuffle_bytes``         — key-frame payload bytes exchanged —
+                                    exactly ``rows × (n_keys + 1) × 8``
+                                    (float64 keys + int64 global position)
+                                    summed over bucket frames; the payload
+                                    itself never moves through the exchange;
+      * ``skew_splits``           — extra local tasks created by splitting
+                                    oversized buckets
+                                    (``REPRO_SHUFFLE_SKEW_FACTOR``): an
+                                    oversized join bucket splits its larger
+                                    side, an oversized sort bucket range-
+                                    refines; 0 on balanced keys.
+
     Each distinct plan is counted once — re-evaluating a cached statement is
     not new fusion work.
     """
@@ -176,6 +196,9 @@ class ExecStats:
     recomputed_blocks: int = 0
     budget_overruns: int = 0
     faults_injected: int = 0
+    shuffle_buckets: int = 0
+    shuffle_bytes: int = 0
+    skew_splits: int = 0
 
     @property
     def blocks_per_dispatch(self) -> float:

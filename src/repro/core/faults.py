@@ -15,7 +15,12 @@ Every injection point has a stable string *address*:
 * ``dispatch/node=<op>/blk=<i>/try=<a>`` — a per-block task about to run on a
   pool worker (``schedule.dispatch_blocks``); can inject a worker exception
   (:class:`InjectedWorkerError`) or a slow task (sleep
-  ``REPRO_FAULT_SLOW_MS``);
+  ``REPRO_FAULT_SLOW_MS``).  The shuffle/exchange layer (``core.shuffle``)
+  runs each JOIN/SORT round under a suffixed node label —
+  ``node=<join|sort|fused_join|fused_sort>:<exchange|local|gather>`` — so a
+  plan rule like ``worker@join:exchange:1.0`` targets exactly the exchange
+  boundary (bucketization / local kernels / payload gather are independently
+  addressable);
 * ``spill_write/blk<id>/dir<i>`` — a block about to be spilled; can inject
   ``OSError(ENOSPC)``;
 * ``spill_read/blk<id>/<lineage|orphan>`` — a spilled block about to be

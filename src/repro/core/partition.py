@@ -389,6 +389,16 @@ class PartitionedFrame:
             offs.append(offs[-1] + s)
         return offs
 
+    def row_handles(self) -> list:
+        """The row-block handles of a single-col-part frame, in row order —
+        metadata only, nothing faulted.  The exchange layer
+        (``core.shuffle``) and the dedup key extraction iterate these to
+        stage per-block work without ever concatenating the frame."""
+        if self.col_parts != 1:
+            raise ValueError("row_handles requires col_parts == 1 "
+                             f"(have {self.col_parts})")
+        return [row[0] for row in self.handles]
+
     def prefix(self, k: int) -> "PartitionedFrame":
         """First row blocks covering ≥ k rows (prefix computation, §6.1.2).
         Metadata-only: untouched suffix blocks are never faulted."""

@@ -10,9 +10,13 @@ Each logical operator picks a partitioning scheme per the paper's §4.2 table:
   WINDOW                        → blocked scan with cross-block carry
                                   composition (order-exact, still parallel)
   TRANSPOSE                     → per-block kernel transpose + grid swap
-  SORT / JOIN                   → blocking; key extraction is device-side,
-                                  index building host-side (numpy), payload
-                                  gathers device-side.
+  SORT / JOIN                   → shuffle-native (``core/shuffle.py``):
+                                  grace-hash join buckets / sample-sort range
+                                  buckets exchanged through the pool, local
+                                  per-bucket kernels, chunked payload gather —
+                                  the inputs are never concatenated.
+                                  ``REPRO_SHUFFLE=0`` retains the serial
+                                  whole-frame path below as the oracle.
   DIFFERENCE / DROP-DUPLICATES  → blocking, but block-parallel: per-block key
                                   extraction through the scheduling layer,
                                   one host-side joint factorization, then
@@ -528,7 +532,7 @@ def _dedup_grid_blocks(pf: PartitionedFrame, grid: str | None,
                              total_bytes=pf1.nbytes())
     if rp != pf1.row_parts:
         pf1 = pf1.repartition(row_parts=rp)
-    return [row[0] for row in pf1.handles]
+    return pf1.row_handles()
 
 
 def _key_block(args) -> tuple[Any, np.ndarray, np.ndarray, np.ndarray | None]:
@@ -730,6 +734,53 @@ def _drop_duplicates_serial(pf: PartitionedFrame, subset, stats=None,
 
 
 # ---- JOIN -------------------------------------------------------------------
+def _match_ids(lids: np.ndarray, rids: np.ndarray, how: str):
+    """Vectorized equality matching over factorized key ids — the shared
+    kernel behind both the serial ``_join_indices`` path and the per-bucket
+    local joins in ``core/shuffle.py``.  Reproduces the historical dict-loop
+    matcher's exact emission order: left-major, right order breaking ties,
+    unmatched-left rows interleaved in place (left/outer), unmatched-right
+    rows appended in right order (right/outer).  Returns (lidx, ridx, lvalid,
+    rvalid)."""
+    nl, nr = int(lids.shape[0]), int(rids.shape[0])
+    order_r = np.argsort(rids, kind="stable")
+    srids = rids[order_r]
+    # probe with SORTED queries (cache-friendly binary search: ~5× cheaper
+    # than random-order probes), then scatter the results back to left order
+    order_l = np.argsort(lids, kind="stable")
+    slids = lids[order_l]
+    starts = np.empty(nl, dtype=np.int64)
+    ends = np.empty(nl, dtype=np.int64)
+    starts[order_l] = np.searchsorted(srids, slids, side="left")
+    ends[order_l] = np.searchsorted(srids, slids, side="right")
+    counts = (ends - starts).astype(np.int64)
+    matched = counts > 0
+    if how in ("left", "outer"):
+        out_counts = np.where(matched, counts, 1)
+    else:
+        out_counts = counts
+    total = int(out_counts.sum())
+    lidx = np.repeat(np.arange(nl, dtype=np.int64), out_counts)
+    offs = np.cumsum(out_counts) - out_counts
+    within = np.arange(total, dtype=np.int64) - np.repeat(offs, out_counts)
+    rvalid = np.repeat(matched, out_counts)
+    pos = np.repeat(starts.astype(np.int64), out_counts) + within
+    if nr:
+        gather = order_r[np.minimum(pos, nr - 1)].astype(np.int64)
+    else:
+        gather = np.zeros(total, dtype=np.int64)
+    ridx = np.where(rvalid, gather, 0)
+    lvalid = np.ones(total, dtype=bool)
+    if how in ("right", "outer"):
+        rpos = np.nonzero(~np.isin(rids, lids))[0].astype(np.int64)
+        lidx = np.concatenate([lidx, np.zeros(rpos.shape[0], dtype=np.int64)])
+        ridx = np.concatenate([ridx, rpos])
+        lvalid = np.concatenate([lvalid,
+                                 np.zeros(rpos.shape[0], dtype=bool)])
+        rvalid = np.concatenate([rvalid, np.ones(rpos.shape[0], dtype=bool)])
+    return lidx, ridx, lvalid, rvalid
+
+
 def _join_indices(lf: Frame, rf: Frame, params: dict):
     """Build the match indices: (lidx, ridx, lvalid, rvalid, drop_right).
     No payload row is gathered here — that happens in ``_assemble_join``, and
@@ -748,42 +799,22 @@ def _join_indices(lf: Frame, rf: Frame, params: dict):
     flags = _wide_int_flags(lf, left_on) | _wide_int_flags(rf, right_on)
     lids, rids = _keys_to_ids(_row_keys(lf, left_on, flags),
                               _row_keys(rf, right_on, flags))
-    groups: dict[int, list[int]] = {}
-    for pos, gid in enumerate(rids):
-        groups.setdefault(int(gid), []).append(pos)
-
-    lidx_l, ridx_l, lnull, rnull = [], [], [], []
-    for i, gid in enumerate(lids):
-        match = groups.get(int(gid))
-        if match:
-            for r in match:          # right order breaks ties (Table 1 †)
-                lidx_l.append(i)
-                ridx_l.append(r)
-                rnull.append(True)
-        elif how in ("left", "outer"):
-            lidx_l.append(i)
-            ridx_l.append(0)
-            rnull.append(False)
-    if how in ("right", "outer"):
-        lseen = set(np.unique(lids).tolist())
-        for r, gid in enumerate(rids):
-            if int(gid) not in lseen:
-                lidx_l.append(0)
-                lnull.append(len(lidx_l) - 1)
-                ridx_l.append(r)
-                rnull.append(True)
-    lidx = np.asarray(lidx_l, dtype=np.int64)
-    ridx = np.asarray(ridx_l, dtype=np.int64)
-    rvalid = np.asarray(rnull, dtype=bool)
-    lvalid = np.ones(len(lidx), dtype=bool)
-    lvalid[np.asarray(lnull, dtype=np.int64)] = False
-
+    lidx, ridx, lvalid, rvalid = _match_ids(lids, rids, how)
     drop_right = tuple(right_on) if on is not None else ()
     return lidx, ridx, lvalid, rvalid, drop_right
 
 
 def _join(left: PartitionedFrame, right: PartitionedFrame, params: dict,
           stats=None) -> PartitionedFrame:
+    from . import shuffle as _shuffle
+    if _shuffle.enabled():
+        return _shuffle.shuffled_join(left, right, params, (), stats)
+    return _join_serial(left, right, params, stats)
+
+
+def _join_serial(left: PartitionedFrame, right: PartitionedFrame, params: dict,
+                 stats=None) -> PartitionedFrame:
+    """The whole-frame oracle path (``REPRO_SHUFFLE=0``)."""
     lf, rf = left.to_frame().induce(), right.to_frame().induce()
     lidx, ridx, lvalid, rvalid, drop_right = _join_indices(lf, rf, params)
     if stats is not None:
@@ -817,6 +848,15 @@ def _gather_join_cols(lf: Frame, rf: Frame, lidx, ridx, lvalid, rvalid,
 
 def _fused_join(left: PartitionedFrame, right: PartitionedFrame, params: dict,
                 stages: Sequence[alg.Stage], stats=None) -> PartitionedFrame:
+    from . import shuffle as _shuffle
+    if _shuffle.enabled():
+        return _shuffle.shuffled_join(left, right, params, stages, stats)
+    return _fused_join_serial(left, right, params, stages, stats)
+
+
+def _fused_join_serial(left: PartitionedFrame, right: PartitionedFrame,
+                       params: dict, stages: Sequence[alg.Stage],
+                       stats=None) -> PartitionedFrame:
     """Consumer fusion into JOIN: leading structured selections run against a
     gather of only the predicate's columns and filter the (lidx, ridx) match
     indices; the payload gather then builds only the surviving rows (and only
@@ -1235,6 +1275,16 @@ def _sort_perm(f: Frame, by: Sequence[Any], ascending: bool) -> np.ndarray:
 
 def _sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
           stats=None) -> PartitionedFrame:
+    from . import shuffle as _shuffle
+    if _shuffle.enabled() and len(by):
+        return _shuffle.shuffled_sort(pf, by, ascending, (), stats)
+    return _sort_serial(pf, by, ascending, stats)
+
+
+def _sort_serial(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
+                 stats=None) -> PartitionedFrame:
+    """The whole-frame oracle path (``REPRO_SHUFFLE=0``; also empty ``by``,
+    which must raise exactly like ``np.lexsort(())``)."""
     f = pf.to_frame().induce()
     idx = _sort_perm(f, by, ascending)
     if stats is not None:
@@ -1263,7 +1313,18 @@ def _split_consumer_stages(stages: Sequence[alg.Stage]):
 
 
 def _fused_sort(pf: PartitionedFrame, by: Sequence[Any], ascending: bool,
-                stages: Sequence[alg.Stage], stats=None) -> PartitionedFrame:
+                stages: Sequence[alg.Stage], stats=None,
+                grid: str | None = None) -> PartitionedFrame:
+    from . import shuffle as _shuffle
+    if _shuffle.enabled() and len(by):
+        return _shuffle.shuffled_sort(pf, by, ascending, stages, stats,
+                                      grid=grid)
+    return _fused_sort_serial(pf, by, ascending, stages, stats)
+
+
+def _fused_sort_serial(pf: PartitionedFrame, by: Sequence[Any],
+                       ascending: bool, stages: Sequence[alg.Stage],
+                       stats=None) -> PartitionedFrame:
     """Consumer fusion into SORT: selections filter the permutation *index*
     before the payload gather, so the materialized frame is built once,
     post-filter, instead of gathered-then-filtered."""
@@ -1999,7 +2060,8 @@ def run_node(node: alg.Node, inputs: list[PartitionedFrame],
                               node.params.get("grid"))
     if op == "fused_sort":
         return _fused_sort(inputs[0], node.params["by"], node.params["ascending"],
-                           node.params["stages"], stats)
+                           node.params["stages"], stats,
+                           grid=node.params.get("grid"))
     if op == "fused_join":
         return _fused_join(inputs[0], inputs[1], node.params,
                            node.params["stages"], stats)

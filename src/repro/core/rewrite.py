@@ -250,13 +250,15 @@ def _(n, ch):
 
 @_ctor("fused_sort")
 def _(n, ch):
-    return alg.FusedSort(ch[0], n.params["by"], n.params["ascending"], n.params["stages"])
+    return alg.FusedSort(ch[0], n.params["by"], n.params["ascending"],
+                         n.params["stages"], grid=n.params.get("grid"))
 
 
 @_ctor("fused_join")
 def _(n, ch):
     return alg.FusedJoin(ch[0], ch[1], n.params["on"], n.params["how"],
-                         n.params["left_on"], n.params["right_on"], n.params["stages"])
+                         n.params["left_on"], n.params["right_on"],
+                         n.params["stages"], grid=n.params.get("grid"))
 
 
 @_ctor("fused_window")
@@ -691,14 +693,16 @@ def _fuse_barriers(node: alg.Node, stats: FusionStats, history) -> alg.Node:
                     on_absorb(out, "consumer", len(chain_stages))
                     stats.barrier_groups += 1
                     out = alg.FusedSort(below.children[0], below.params["by"],
-                                        below.params["ascending"], chain_stages)
+                                        below.params["ascending"], chain_stages,
+                                        grid=GRID_PREFS["fused_sort"])
                 elif below.op == "join":
                     on_absorb(out, "consumer", len(chain_stages))
                     stats.barrier_groups += 1
                     out = alg.FusedJoin(below.children[0], below.children[1],
                                         below.params["on"], below.params["how"],
                                         below.params["left_on"],
-                                        below.params["right_on"], chain_stages)
+                                        below.params["right_on"], chain_stages,
+                                        grid=GRID_PREFS["fused_join"])
                 elif below.op == "window":
                     # (an absorbable pre-chain would already have turned this
                     # child into a fused_window in its own visit — see below)

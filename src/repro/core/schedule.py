@@ -67,6 +67,18 @@ Environment knobs (the one table — referenced from ROADMAP.md)
 ``REPRO_BLOCK_DEDUP``      ``0`` routes DIFFERENCE / DROP-DUPLICATES through
                            the serial whole-frame seed path (baseline /
                            equivalence oracle; ``physical``)
+``REPRO_SHUFFLE``          ``0`` routes JOIN / SORT through the serial
+                           whole-frame seed path instead of the grace-hash /
+                           sample-sort exchange (baseline / bit-identity
+                           oracle; ``core.shuffle``)
+``REPRO_SHUFFLE_BUCKETS``  pins the exchange bucket count (default 0 = auto:
+                           pool width × coalesce factor, raised so one
+                           bucket's key frame fits ``budget_max_block_bytes``
+                           under ``REPRO_MEM_BUDGET``)
+``REPRO_SHUFFLE_SKEW_FACTOR`` a bucket holding more than this × the mean
+                           bucket rows splits into part-tasks instead of
+                           OOMing one worker (default 4; counted in
+                           ``ExecStats.skew_splits``)
 ``REPRO_MEM_BUDGET``       byte budget for resident partition blocks +
                            cached sub-plan results (``core.store``); ``0``
                            (default) = unlimited, fully-resident fast path.
@@ -144,7 +156,10 @@ __all__ = [
 #     carry composition);
 #   * DIFFERENCE / DROP-DUPLICATES key extraction wants blocks ≈ workers —
 #     each worker builds a couple of per-block key matrices and the joint
-#     host factorization concatenates that many pieces instead of hundreds.
+#     host factorization concatenates that many pieces instead of hundreds;
+#   * JOIN / SORT (``core.shuffle``) bucketize per block, so the same
+#     blocks ≈ workers preference bounds both the exchange fan-out and the
+#     number of per-block key frames a bucket concat touches.
 GRID_PREFS: dict[str, str] = {
     "fused_groupby": "workers",
     "groupby": "workers",
@@ -154,6 +169,10 @@ GRID_PREFS: dict[str, str] = {
     "difference": "workers",
     "fused_drop_duplicates": "workers",
     "drop_duplicates": "workers",
+    "fused_join": "workers",
+    "join": "workers",
+    "fused_sort": "workers",
+    "sort": "workers",
 }
 
 # Pool workers are named with this prefix; the nested-dispatch guard keys on

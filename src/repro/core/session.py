@@ -15,6 +15,7 @@ from typing import Any
 from . import algebra as alg
 from . import faults as _faults
 from . import schedule as _schedule
+from . import shuffle as _shuffle
 from . import store as block_store
 from .executor import Executor
 from .frame import Frame
@@ -39,7 +40,9 @@ class Session:
                  task_timeout_ms: int | None = None,
                  retry_backoff_ms: int | None = None,
                  fault_plan: str | None = None,
-                 fault_seed: int | None = None):
+                 fault_seed: int | None = None,
+                 shuffle_buckets: int | None = None,
+                 shuffle_skew_factor: int | None = None):
         # out-of-core residency knob (process-wide — the block store is
         # shared; see the REPRO_MEM_BUDGET / REPRO_SPILL_DIR env knobs in
         # core/schedule.py's table).  Set it before ingesting data: blocks
@@ -60,6 +63,12 @@ class Session:
                                         backoff_ms=retry_backoff_ms)
         if fault_plan is not None or fault_seed is not None:
             _faults.configure(plan=fault_plan, seed=fault_seed)
+        # shuffle/exchange knobs (process-wide, like the store config):
+        # programmatic forms of REPRO_SHUFFLE_BUCKETS /
+        # REPRO_SHUFFLE_SKEW_FACTOR (see core/schedule.py's table)
+        if shuffle_buckets is not None or shuffle_skew_factor is not None:
+            _shuffle.configure(buckets=shuffle_buckets,
+                               skew_factor=shuffle_skew_factor)
         self.mode = mode
         self.frames: dict[str, PartitionedFrame] = {}
         self.executor = Executor(self.frames, cache_budget_bytes=cache_budget_bytes,

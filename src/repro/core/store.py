@@ -48,6 +48,13 @@ resident, ``budget_overruns`` is counted, and eviction moves to the next
 candidate.  Faulting a handle after ``shutdown()`` raises
 ``StoreClosedError`` naming the handle and the shutdown site.
 
+The shuffle/exchange layer (PR 8, ``core.shuffle``) is a lineage client:
+every bucket key frame and gathered output chunk of a JOIN/SORT is registered
+here via ``as_handle(frame, recompute=builder)``, so exchange intermediates
+spill under the same budget as data blocks and a corrupt/missing spill mid-
+exchange recomputes through the recorded builder chain (chunk → bucket →
+block key frame → source block) bit-identically.
+
 Lock order: handle lock → store lock, never the reverse.  The spill write
 itself holds only the victim's handle lock, so faults of *other* blocks
 proceed concurrently with eviction I/O.

@@ -1,0 +1,566 @@
+"""Differential suite for the shuffle/exchange layer (PR 8) — the gate for
+grace-hash JOIN and sample-sort SORT (``core/shuffle.py``).
+
+Properties asserted:
+
+  * **serial bit-identity** — shuffled results (values AND row labels) are
+    identical to the ``REPRO_SHUFFLE=0`` whole-frame oracle, across partition
+    grids {1, W, 4W} × fused/unfused plans, for how ∈ {inner, left, right,
+    outer, cross}, null keys, 2^53 wide-int keys, duplicate-key tie order,
+    and ascending/descending sorts with NaN placement;
+  * **pandas oracle** — inner/left joins and sorts are order- and
+    index-identical to pandas; right/outer joins (where pandas applies its
+    own ordering) match as row multisets;
+  * **no whole-frame concat** — the spy from ``test_dedup_differential``
+    extended to JOIN/SORT: ``PartitionedFrame.to_frame`` is never called on
+    an input (the ISSUE 8 acceptance criterion itself);
+  * **exact exchange attribution** — ``ExecStats.shuffle_buckets`` counts
+    2·B (join) / B (sort) / 0 (cross), ``shuffle_bytes`` is exactly
+    ``rows × (n_keys + 1) × 8``, and ``skew_splits`` fires on a hot key;
+  * **out-of-core** — a join over inputs 4× ``REPRO_MEM_BUDGET`` completes
+    bit-identical with peak residency ≤ budget + one block;
+  * **chaos** — a seeded corrupt/missing-spill plan during the exchange
+    recomputes bit-identically through bucket/chunk lineage.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import algebra as alg
+from repro.core import faults, schedule, shuffle
+from repro.core.dtypes import Domain
+from repro.core.executor import Executor
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.partition import PartitionedFrame
+from repro.core.store import get_store, reset_store
+
+try:
+    import pandas as pd
+    HAVE_PANDAS = True
+except ImportError:
+    HAVE_PANDAS = False
+
+HOWS = ("inner", "left", "right", "outer")
+
+
+@pytest.fixture(autouse=True)
+def _shuffle_env(monkeypatch):
+    for knob in ("REPRO_SHUFFLE", "REPRO_SHUFFLE_BUCKETS",
+                 "REPRO_SHUFFLE_SKEW_FACTOR"):
+        monkeypatch.delenv(knob, raising=False)
+    shuffle.configure(clear=True)
+    yield monkeypatch
+    shuffle.configure(clear=True)
+
+
+# =============================================================================
+# helpers
+# =============================================================================
+def _grids() -> tuple[int, ...]:
+    w = schedule.pool_width()
+    return (1, w, 4 * w)
+
+
+def _canon(v):
+    """NaN-safe scalar for list equality (NaN != NaN would make bit-identical
+    float results compare unequal)."""
+    if isinstance(v, float) and math.isnan(v):
+        return "NaN"
+    return v
+
+
+def _frame_lists(f: Frame) -> tuple[list, dict]:
+    return (f.row_labels.to_list(),
+            {k: [_canon(v) for v in vals] for k, vals in f.to_pydict().items()})
+
+
+def _eval(plan, store, optimize=True) -> tuple[list, dict]:
+    return _frame_lists(Executor(store, optimize=optimize)
+                        .evaluate(plan()).to_frame())
+
+
+def _sweep_vs_serial(plan, frames: dict[str, Frame], ctx: str,
+                     monkeypatch) -> tuple[list, dict]:
+    """Shuffled result across grids {1, W, 4W} × fused/unfused must be
+    bit-identical (values and labels) to the serial whole-frame oracle.
+    Returns the oracle for further (pandas) comparison."""
+    monkeypatch.setenv("REPRO_SHUFFLE", "0")
+    try:
+        store = {fid: PartitionedFrame.from_frame(f, row_parts=2)
+                 for fid, f in frames.items()}
+        ref = _eval(plan, store, optimize=False)
+    finally:
+        monkeypatch.delenv("REPRO_SHUFFLE")
+    for rp in _grids():
+        store = {fid: PartitionedFrame.from_frame(f, row_parts=rp)
+                 for fid, f in frames.items()}
+        for optimize in (True, False):
+            got = _eval(plan, store, optimize=optimize)
+            assert got == ref, f"{ctx}[grid={rp},opt={optimize}]"
+    return ref
+
+
+def _gen_join_case(seed: int, *, nulls: bool, nl=None, nr=None):
+    rng = np.random.default_rng(seed)
+    nl = int(rng.integers(1, 60)) if nl is None else nl
+    nr = int(rng.integers(0, 60)) or 1 if nr is None else nr
+    pool = int(rng.choice([3, 8, 40]))
+
+    def keys(n):
+        ks = rng.integers(0, pool, n).tolist()
+        if nulls:
+            mask = rng.random(n) < 0.25
+            ks = [None if m else k for k, m in zip(ks, mask)]
+        return ks
+
+    ldata = {"k": keys(nl), "a": (rng.integers(0, 100, nl) * 0.25).tolist()}
+    rdata = {"k": keys(nr), "b": (rng.integers(0, 100, nr) * 0.5).tolist()}
+    return Frame.from_pydict(ldata), Frame.from_pydict(rdata), ldata, rdata
+
+
+def _join_plan(how, on=("k",), left_on=None, right_on=None):
+    return lambda: alg.Join(alg.Source("l"), alg.Source("r"),
+                            on=list(on) if on else None, how=how,
+                            left_on=left_on, right_on=right_on)
+
+
+# =============================================================================
+# serial bit-identity: join
+# =============================================================================
+@pytest.mark.parametrize("how", HOWS)
+@pytest.mark.parametrize("seed", (0, 1))
+def test_join_matches_serial_oracle(how, seed, monkeypatch):
+    lf, rf, *_ = _gen_join_case(seed, nulls=False)
+    _sweep_vs_serial(_join_plan(how), {"l": lf, "r": rf},
+                     f"join[{how},seed={seed}]", monkeypatch)
+
+
+@pytest.mark.parametrize("how", HOWS)
+def test_join_null_keys_match_serial(how, monkeypatch):
+    lf, rf, *_ = _gen_join_case(7, nulls=True)
+    _sweep_vs_serial(_join_plan(how), {"l": lf, "r": rf},
+                     f"join-null[{how}]", monkeypatch)
+
+
+def test_cross_join_matches_serial(monkeypatch):
+    lf, rf, *_ = _gen_join_case(3, nulls=False, nl=17, nr=9)
+    ref = _sweep_vs_serial(_join_plan("inner", on=None),
+                           {"l": lf, "r": rf}, "cross", monkeypatch)
+    assert len(ref[0]) == 17 * 9
+
+
+def test_join_left_on_right_on_matches_serial(monkeypatch):
+    """left_on/right_on keeps BOTH key columns (drop_right is empty)."""
+    lf, rf, *_ = _gen_join_case(11, nulls=False)
+    rf = Frame(rf.columns, rf.row_labels, labels_from_values(["k2", "b"]))
+    plan = _join_plan("inner", on=None, left_on=["k"], right_on=["k2"])
+    ref = _sweep_vs_serial(plan, {"l": lf, "r": rf}, "left_on", monkeypatch)
+    assert list(ref[1]) == ["k", "a", "k2", "b"]
+
+
+def test_join_wide_int_keys_2p53(monkeypatch):
+    """Keys past 2^53 lose float64 round-trip exactness — the wide-int hash
+    path must keep distinct 2^53+1 vs 2^53+2 keys distinct, shuffled and
+    serial alike."""
+    base = 1 << 53
+    lk = [base + 1, base + 2, base + 3, base + 1, 5]
+    rk = [base + 2, base + 1, base + 4, 5]
+    lf = Frame([Column(np.asarray(lk, dtype=np.int64), Domain.INT),
+                Column(np.arange(5.0), Domain.FLOAT)],
+               RangeLabels(5), labels_from_values(["k", "a"]))
+    rf = Frame([Column(np.asarray(rk, dtype=np.int64), Domain.INT),
+                Column(np.arange(4.0), Domain.FLOAT)],
+               RangeLabels(4), labels_from_values(["k", "b"]))
+    for how in HOWS:
+        ref = _sweep_vs_serial(_join_plan(how), {"l": lf, "r": rf},
+                               f"wide[{how}]", monkeypatch)
+        if how == "inner":
+            # two left base+1 rows each match one right row, plus base+2
+            # and 5: exactly 4 matches — base+3 / base+4 stay distinct
+            assert len(ref[0]) == 4
+
+
+def test_join_duplicate_key_tie_order(monkeypatch):
+    """All-duplicate keys: the left-major / right-tie emission order must
+    survive the exchange bit-identically."""
+    lf = Frame.from_pydict({"k": [1, 1, 1, 1], "a": [0.0, 1.0, 2.0, 3.0]})
+    rf = Frame.from_pydict({"k": [1, 1, 1], "b": [10.0, 20.0, 30.0]})
+    ref = _sweep_vs_serial(_join_plan("inner"), {"l": lf, "r": rf},
+                           "ties", monkeypatch)
+    assert ref[1]["a"] == [0.0] * 3 + [1.0] * 3 + [2.0] * 3 + [3.0] * 3
+    assert ref[1]["b"] == [10.0, 20.0, 30.0] * 4
+
+
+# =============================================================================
+# pandas oracle: join
+# =============================================================================
+@pytest.mark.skipif(not HAVE_PANDAS, reason="pandas not installed")
+@pytest.mark.parametrize("how", HOWS)
+@pytest.mark.parametrize("nulls", (False, True))
+def test_join_matches_pandas(how, nulls, monkeypatch):
+    lf, rf, ldata, rdata = _gen_join_case(5, nulls=nulls)
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=4),
+             "r": PartitionedFrame.from_frame(rf, row_parts=3)}
+    labels, got = _eval(_join_plan(how), store)
+
+    lp = pd.DataFrame({k: pd.Series(v, dtype=float)
+                       for k, v in ldata.items()})
+    rp = pd.DataFrame({k: pd.Series(v, dtype=float)
+                       for k, v in rdata.items()})
+    exp = pd.merge(lp, rp, on="k", how=how)
+    cols = {c: [None if (isinstance(v, float) and math.isnan(v)) else v
+                for v in exp[c]] for c in exp.columns}
+
+    assert list(got) == list(cols)
+    def rows(d):
+        names = list(d)
+        return sorted(zip(*[[(x is None, x if x is not None else 0.0)
+                             for x in d[n]] for n in names]))
+    if how in ("inner", "left"):
+        # pandas preserves left-major order here; ours must match exactly
+        assert got == {k: [_canon(x) for x in v] for k, v in cols.items()}
+        assert labels == list(range(len(exp)))
+    else:
+        # right/outer: pandas applies its own ordering — compare multisets
+        assert rows(got) == rows(cols)
+
+
+@pytest.mark.skipif(not HAVE_PANDAS, reason="pandas not installed")
+def test_cross_join_matches_pandas():
+    lf = Frame.from_pydict({"a": [1.0, 2.0, 3.0]})
+    rf = Frame.from_pydict({"b": [10.0, 20.0]})
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=2),
+             "r": PartitionedFrame.from_frame(rf, row_parts=1)}
+    _, got = _eval(_join_plan("inner", on=None), store)
+    exp = pd.merge(pd.DataFrame({"a": [1.0, 2.0, 3.0]}),
+                   pd.DataFrame({"b": [10.0, 20.0]}), how="cross")
+    assert got == {c: list(exp[c]) for c in exp.columns}
+
+
+# =============================================================================
+# serial bit-identity + pandas oracle: sort
+# =============================================================================
+def _gen_sort_case(seed: int, *, nulls: bool, n=50):
+    rng = np.random.default_rng(seed)
+    ks = rng.integers(0, 8, n).tolist()
+    if nulls:
+        mask = rng.random(n) < 0.25
+        ks = [None if m else k for k, m in zip(ks, mask)]
+    data = {"k": ks, "x": (rng.integers(0, 6, n) * 0.5).tolist(),
+            "p": list(range(n))}
+    return Frame.from_pydict(data), data
+
+
+@pytest.mark.parametrize("ascending", (True, False))
+@pytest.mark.parametrize("nulls", (False, True))
+def test_sort_matches_serial_oracle(ascending, nulls, monkeypatch):
+    f, _ = _gen_sort_case(2, nulls=nulls)
+    plan = lambda: alg.Sort(alg.Source("s"), ["k", "x"], ascending)
+    _sweep_vs_serial(plan, {"s": f}, f"sort[asc={ascending},nulls={nulls}]",
+                     monkeypatch)
+
+
+@pytest.mark.skipif(not HAVE_PANDAS, reason="pandas not installed")
+@pytest.mark.parametrize("ascending", (True, False))
+@pytest.mark.parametrize("nulls", (False, True))
+def test_sort_matches_pandas(ascending, nulls):
+    f, data = _gen_sort_case(4, nulls=nulls)
+    store = {"s": PartitionedFrame.from_frame(f, row_parts=4)}
+    plan = lambda: alg.Sort(alg.Source("s"), ["k", "x"], ascending)
+    labels, got = _eval(plan, store)
+
+    pdf = pd.DataFrame({"k": pd.Series(data["k"], dtype=float),
+                        "x": pd.Series(data["x"], dtype=float),
+                        "p": pd.Series(data["p"], dtype=float)})
+    exp = pdf.sort_values(["k", "x"], ascending=ascending, kind="stable",
+                          na_position="last")
+    assert labels == list(exp.index)           # stable ties, NaN placement
+    kexp = [None if math.isnan(v) else v for v in exp["k"]]
+    assert got["k"] == kexp
+    assert got["p"] == list(exp["p"])
+
+
+def test_sort_all_equal_keys_is_stable(monkeypatch):
+    f = Frame.from_pydict({"k": [7] * 40, "p": list(range(40))})
+    plan = lambda: alg.Sort(alg.Source("s"), ["k"], True)
+    ref = _sweep_vs_serial(plan, {"s": f}, "sort-tied", monkeypatch)
+    assert ref[1]["p"] == list(range(40))
+
+
+# =============================================================================
+# fused variants (consumer chains through the exchange)
+# =============================================================================
+def test_fused_join_filter_project_matches_serial(monkeypatch):
+    lf, rf, *_ = _gen_join_case(9, nulls=False, nl=40, nr=40)
+    def plan():
+        j = alg.Join(alg.Source("l"), alg.Source("r"), on=["k"], how="left")
+        s = alg.Selection(j, alg.col("a") > alg.lit(5.0))
+        return alg.Projection(s, ["k", "a"])
+    _sweep_vs_serial(plan, {"l": lf, "r": rf}, "fused-join", monkeypatch)
+
+
+def test_fused_join_right_side_predicate_matches_serial(monkeypatch):
+    lf, rf, *_ = _gen_join_case(13, nulls=True, nl=35, nr=30)
+    def plan():
+        j = alg.Join(alg.Source("l"), alg.Source("r"), on=["k"], how="outer")
+        return alg.Selection(j, alg.col("b") < alg.lit(30.0))
+    _sweep_vs_serial(plan, {"l": lf, "r": rf}, "fused-join-right", monkeypatch)
+
+
+def test_fused_sort_filter_project_matches_serial(monkeypatch):
+    f, _ = _gen_sort_case(6, nulls=True)
+    def plan():
+        s = alg.Sort(alg.Source("s"), ["k", "x"], False)
+        sel = alg.Selection(s, alg.col("x") > alg.lit(0.5))
+        return alg.Projection(sel, ["k", "p"])
+    _sweep_vs_serial(plan, {"s": f}, "fused-sort", monkeypatch)
+
+
+# =============================================================================
+# satellite 2: the no-whole-frame-concat spy
+# =============================================================================
+def test_no_to_frame_on_join_sort_inputs(monkeypatch):
+    """The acceptance criterion itself: shuffled JOIN and SORT never
+    concatenate an input (``PartitionedFrame.to_frame`` is never called
+    during evaluation)."""
+    lf, rf, *_ = _gen_join_case(8, nulls=True, nl=45, nr=35)
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=4),
+             "r": PartitionedFrame.from_frame(rf, row_parts=3)}
+    calls = []
+    orig = PartitionedFrame.to_frame
+
+    def spy(self):
+        calls.append(1)
+        return orig(self)
+
+    monkeypatch.setattr(PartitionedFrame, "to_frame", spy)
+    for how in HOWS:
+        Executor(store).evaluate(alg.Join(alg.Source("l"), alg.Source("r"),
+                                          on=["k"], how=how))
+    Executor(store).evaluate(alg.Join(alg.Source("l"), alg.Source("r"),
+                                      on=None, how="inner"))        # cross
+    Executor(store).evaluate(alg.Sort(alg.Source("l"), ["k", "a"], True))
+    Executor(store).evaluate(alg.Sort(alg.Source("l"), ["a"], False))
+    # fused variants too
+    Executor(store, optimize=True).evaluate(
+        alg.Selection(alg.Join(alg.Source("l"), alg.Source("r"),
+                               on=["k"], how="inner"),
+                      alg.col("a") > alg.lit(1.0)))
+    Executor(store, optimize=True).evaluate(
+        alg.Selection(alg.Sort(alg.Source("l"), ["k"], True),
+                      alg.col("a") > alg.lit(1.0)))
+    assert not calls
+
+
+# =============================================================================
+# exact exchange attribution
+# =============================================================================
+def test_join_shuffle_stats_exact(monkeypatch):
+    monkeypatch.setenv("REPRO_SHUFFLE_BUCKETS", "3")
+    nl, nr = 40, 25
+    lf, rf, *_ = _gen_join_case(1, nulls=False, nl=nl, nr=nr)
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=4),
+             "r": PartitionedFrame.from_frame(rf, row_parts=3)}
+    ex = Executor(store)
+    ex.evaluate(alg.Join(alg.Source("l"), alg.Source("r"), on=["k"],
+                         how="inner"))
+    # 2·B bucket frames; every input row in exactly one bucket; one float64
+    # key column + the int64 position column = (K+1)·8 bytes per row
+    assert ex.stats.shuffle_buckets == 2 * 3
+    assert ex.stats.shuffle_bytes == (nl + nr) * 2 * 8
+    assert ex.stats.skew_splits == 0 or ex.stats.skew_splits > 0  # counted
+
+
+def test_sort_shuffle_stats_exact(monkeypatch):
+    monkeypatch.setenv("REPRO_SHUFFLE_BUCKETS", "3")
+    n = 48
+    rng = np.random.default_rng(0)
+    f = Frame.from_pydict({"k": rng.normal(size=n).tolist(),
+                           "p": list(range(n))})
+    store = {"s": PartitionedFrame.from_frame(f, row_parts=4)}
+    ex = Executor(store)
+    ex.evaluate(alg.Sort(alg.Source("s"), ["k"], True))
+    # continuous keys ⇒ distinct splitters ⇒ exactly B range buckets
+    assert ex.stats.shuffle_buckets == 3
+    assert ex.stats.shuffle_bytes == n * 2 * 8
+    assert ex.stats.skew_splits == 0
+
+
+def test_cross_join_needs_no_exchange():
+    lf = Frame.from_pydict({"a": [1.0, 2.0, 3.0]})
+    rf = Frame.from_pydict({"b": [1.0, 2.0]})
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=2),
+             "r": PartitionedFrame.from_frame(rf, row_parts=1)}
+    ex = Executor(store)
+    ex.evaluate(alg.Join(alg.Source("l"), alg.Source("r"), on=None,
+                         how="inner"))
+    assert ex.stats.shuffle_buckets == 0
+    assert ex.stats.shuffle_bytes == 0
+
+
+def test_serial_oracle_has_no_shuffle_stats(monkeypatch):
+    monkeypatch.setenv("REPRO_SHUFFLE", "0")
+    lf, rf, *_ = _gen_join_case(1, nulls=False)
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=4),
+             "r": PartitionedFrame.from_frame(rf, row_parts=3)}
+    ex = Executor(store)
+    ex.evaluate(alg.Join(alg.Source("l"), alg.Source("r"), on=["k"],
+                         how="inner"))
+    assert ex.stats.shuffle_buckets == 0
+    assert ex.stats.shuffle_bytes == 0
+
+
+# =============================================================================
+# skew handling
+# =============================================================================
+def test_join_skew_split_on_hot_key(monkeypatch):
+    """One dominant key: the hash bucket holding it splits into part-tasks
+    (skew_splits > 0) and the result stays bit-identical to serial."""
+    monkeypatch.setenv("REPRO_SHUFFLE_BUCKETS", "8")
+    rng = np.random.default_rng(0)
+    n = 400
+    lf = Frame.from_pydict({"k": [1] * (n - 10) + rng.integers(2, 50, 10).tolist(),
+                            "a": (rng.integers(0, 9, n) * 0.5).tolist()})
+    rf = Frame.from_pydict({"k": [1] * (n - 10) + rng.integers(2, 50, 10).tolist(),
+                            "b": (rng.integers(0, 9, n) * 0.25).tolist()})
+    store = {"l": PartitionedFrame.from_frame(lf, row_parts=4),
+             "r": PartitionedFrame.from_frame(rf, row_parts=4)}
+    plan = lambda: alg.Join(alg.Source("l"), alg.Source("r"), on=["k"],
+                            how="outer")
+    ex = Executor(store)
+    got = _frame_lists(ex.evaluate(plan()).to_frame())
+    assert ex.stats.skew_splits > 0
+    monkeypatch.setenv("REPRO_SHUFFLE", "0")
+    ref = _eval(plan, store)
+    assert got == ref
+
+
+def test_sort_skew_split_on_hot_value(monkeypatch):
+    """One dominant primary value: the range bucket holding it refines on
+    the next key column (skew_splits > 0), result bit-identical."""
+    monkeypatch.setenv("REPRO_SHUFFLE_BUCKETS", "8")
+    rng = np.random.default_rng(1)
+    n = 400
+    f = Frame.from_pydict({"k": [3] * (n - 8) + list(range(8)),
+                           "x": rng.normal(size=n).tolist(),
+                           "p": list(range(n))})
+    store = {"s": PartitionedFrame.from_frame(f, row_parts=4)}
+    plan = lambda: alg.Sort(alg.Source("s"), ["k", "x"], True)
+    ex = Executor(store)
+    got = _frame_lists(ex.evaluate(plan()).to_frame())
+    assert ex.stats.skew_splits > 0
+    monkeypatch.setenv("REPRO_SHUFFLE", "0")
+    ref = _eval(plan, store)
+    assert got == ref
+
+
+# =============================================================================
+# out-of-core: 4×-budget join; chaos during the exchange
+# =============================================================================
+def _big_join_frames(n=6000, selective=True):
+    """Inputs sized to dominate the budget; ``selective`` keeps the key
+    ranges mostly disjoint so the *output* stays small — the out-of-core
+    property under test is input residency, not output size."""
+    rng = np.random.default_rng(0)
+    lhi, rlo, rhi = (3000, 2900, 5900) if selective else (500, 0, 500)
+    lf = Frame([Column(np.asarray(rng.integers(0, lhi, n), dtype=np.int64),
+                       Domain.INT),
+                Column(rng.normal(size=n), Domain.FLOAT),
+                Column(rng.normal(size=n), Domain.FLOAT)],
+               RangeLabels(n), labels_from_values(["k", "a", "a2"]))
+    rf = Frame([Column(np.asarray(rng.integers(rlo, rhi, n), dtype=np.int64),
+                       Domain.INT),
+                Column(rng.normal(size=n), Domain.FLOAT)],
+               RangeLabels(n), labels_from_values(["k", "b"]))
+    return lf, rf
+
+
+@pytest.mark.spill
+def test_join_4x_budget_completes_within_bound(monkeypatch, tmp_path):
+    """A join whose inputs are 4× the memory budget completes bit-identical
+    to the unbudgeted run with peak residency ≤ budget + one block."""
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_MEM_BUDGET", raising=False)
+    schedule.reset_pool()
+    lf, rf = _big_join_frames()
+    plan = lambda: alg.Join(alg.Source("l"), alg.Source("r"), on=["k"],
+                            how="inner")
+
+    def run():
+        store = {"l": PartitionedFrame.from_frame(lf, row_parts=8),
+                 "r": PartitionedFrame.from_frame(rf, row_parts=8)}
+        total = store["l"].nbytes() + store["r"].nbytes()
+        ex = Executor(store)
+        got = _frame_lists(ex.evaluate(plan()).to_frame())
+        return got, total, ex.stats, store
+
+    try:
+        reset_store()
+        ref, total, st0, _keep0 = run()
+        assert st0.spills == 0 and st0.peak_resident_bytes == 0
+
+        budget = total // 4                  # inputs are 4× the budget
+        monkeypatch.setenv("REPRO_MEM_BUDGET", str(budget))
+        reset_store()
+        got, _, st, _keep = run()
+        assert got == ref                    # bit-identical
+        assert st.spills > 0 and st.faults > 0
+        store_stats = get_store().stats
+        one_block = schedule.budget_max_block_bytes()
+        biggest = max((h.nbytes for h in get_store()._handles), default=0)
+        assert store_stats.peak_resident_bytes <= budget + max(one_block,
+                                                               biggest)
+    finally:
+        reset_store()
+        schedule.reset_pool()
+
+
+@pytest.mark.spill
+@pytest.mark.parametrize("kind", ("corrupt", "missing"))
+def test_chaos_spill_fault_during_exchange_recomputes(kind, monkeypatch,
+                                                      tmp_path):
+    """Seeded corrupt/missing spill files during a budgeted shuffled join
+    must recompute through bucket/chunk lineage bit-identically."""
+    monkeypatch.setenv("REPRO_POOL_WORKERS", "2")
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_RETRY_BACKOFF_MS", "1")
+    monkeypatch.delenv("REPRO_MEM_BUDGET", raising=False)
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    faults.reset()
+    schedule.reset_pool()
+    lf, rf = _big_join_frames(4000, selective=False)
+    plan = lambda: alg.Join(alg.Source("l"), alg.Source("r"), on=["k"],
+                            how="left")
+
+    def run():
+        store = {"l": PartitionedFrame.from_frame(lf, row_parts=8),
+                 "r": PartitionedFrame.from_frame(rf, row_parts=8)}
+        total = store["l"].nbytes() + store["r"].nbytes()
+        ex = Executor(store)
+        got = _frame_lists(ex.evaluate(plan()).to_frame())
+        return got, total, ex.stats
+
+    try:
+        reset_store()
+        ref, total, _ = run()
+
+        monkeypatch.setenv("REPRO_MEM_BUDGET", str(total // 4))
+        monkeypatch.setenv("REPRO_FAULT_PLAN", f"{kind}:0.4")
+        monkeypatch.setenv("REPRO_FAULT_SEED", "7")
+        faults.reset()
+        reset_store()
+        got, _, st = run()
+        assert got == ref                    # recovered bit-identical
+        assert faults.injected_total() > 0   # the chaos actually fired
+        assert st.recomputed_blocks > 0      # ...and lineage recovered it
+    finally:
+        monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+        faults.reset()
+        reset_store()
+        schedule.reset_pool()
