@@ -124,8 +124,11 @@ def _pipeline(path: str):
     got = out.collect()
     total = s.frames["frame_0"].nbytes()
     stats = s.executor.stats
+    # snapshot while the frames are live: _handles is a WeakSet, and close()
+    # vacates the default-session slot, so the handles are collectable after
+    biggest = max((h.nbytes for h in get_store()._handles), default=0)
     s.close()
-    return got, total, stats
+    return got, total, stats, biggest
 
 
 def _bench_outofcore(rep: Reporter, n_rows: int, reps: int) -> dict:
@@ -135,18 +138,18 @@ def _bench_outofcore(rep: Reporter, n_rows: int, reps: int) -> dict:
 
     os.environ.pop("REPRO_MEM_BUDGET", None)
     reset_store()
-    ref, total, _ = _pipeline(path)
+    ref, total, _, _ = _pipeline(path)
     budget = total // 4                       # the dataset is 4× this budget
 
     os.environ["REPRO_MEM_BUDGET"] = str(budget)
     reset_store()
     try:
-        got, _, st = _pipeline(path)
+        got, _, st, one_block = _pipeline(path)
         ss = get_store().stats
         # acceptance gates: completes, bit-identical, spilled, peak bounded
         assert got.to_pydict() == ref.to_pydict(), "budgeted run diverged"
         assert st.spills > 0 and st.faults > 0, "budget never engaged"
-        one_block = max(h.nbytes for h in get_store()._handles)
+        assert one_block > 0
         assert ss.peak_resident_bytes <= budget + one_block, (
             ss.peak_resident_bytes, budget, one_block)
 

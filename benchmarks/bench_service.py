@@ -1,0 +1,196 @@
+"""Multi-session query service: concurrent-tenant throughput vs one tenant.
+
+The serving-tier argument (``core/service.py``), numbers landing in
+``BENCH_service.json``: interactive tenants spend most of their wall-clock
+*thinking* between statements, so one service hosting many sessions over a
+2-worker pool should deliver far more aggregate queries/second than a single
+session — think time overlaps other tenants' compute, the admission
+controller keeps the pool fed fairly, and cross-session MQO (tenants sharing
+plan prefixes over a shared table) turns repeated work into cache hits.
+
+Headline gate (ISSUE 9 acceptance): 16-session aggregate qps ≥ 3× the
+1-session qps on the same 2-worker pool, same per-tenant query stream and
+think time.  Correctness is asserted before timing: every tenant's results
+must be bit-identical to a serial, isolated run of its stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+# standalone runs mirror benchmarks/run.py: one partition ↔ one core, set
+# before jax initializes
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import numpy as np
+
+from repro.core import EvalMode, QueryService, Session, schedule
+from repro.core.algebra import GroupBy, Map, Selection, Udf, col, lit
+from repro.core.dtypes import Domain
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+
+from ._util import Reporter
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_service.json")
+
+_TENANT_CLASSES = 4      # sessions i and i+4 share a query stream (MQO seam)
+
+
+def _table(n: int, seed: int = 0) -> Frame:
+    rng = np.random.default_rng(seed)
+    return Frame(
+        [Column(np.asarray(rng.integers(0, 16, n, dtype=np.int32)), Domain.INT),
+         Column(np.asarray(rng.standard_normal(n)), Domain.FLOAT),
+         Column(np.asarray(rng.standard_normal(n)), Domain.FLOAT)],
+        RangeLabels(n), labels_from_values(["k", "x", "y"]))
+
+
+def _query(shared, tenant_class: int, j: int):
+    """One statement of a tenant's stream: filter → map → groupby.  Plans
+    are distinct per (tenant_class, j) but SHARED across the sessions of a
+    class — the cross-session MQO surface."""
+    scale = 1.0 + tenant_class + 0.25 * j
+
+    def fn(cols, frame, scale=scale):
+        out = dict(cols)
+        c = cols["x"]
+        out["x"] = Column(c.data * scale + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+
+    udf = Udf(name=f"svc_q_c{tenant_class}_j{j}", fn=fn,
+              deps=frozenset(["x"]), elementwise=True)
+    return GroupBy(Selection(Map(shared, udf), col("k") < lit(12)),
+                   ("k",), [("x", "sum", "x"), ("y", "mean", "y")])
+
+
+def _run_stream(session, shared, tenant_class: int, queries: int,
+                think_s: float) -> list:
+    """A tenant's interactive loop: submit (async, admission-controlled) →
+    think → inspect.  Returns the collected results."""
+    out = []
+    for j in range(queries):
+        node = session.statement(_query(shared, tenant_class, j))
+        time.sleep(think_s)              # think time: other tenants' window
+        out.append(session.collect(node).to_pydict())
+    return out
+
+
+def _measure(n_sessions: int, queries: int, think_s: float, rows: int,
+             expected: list | None = None):
+    """Wall-clock one service run of ``n_sessions`` concurrent tenants;
+    returns (qps, results-per-session, service)."""
+    svc = QueryService(background_workers=2)
+    try:
+        shared = svc.register_frame(_table(rows), row_parts=4)
+        sessions = [svc.session(mode=EvalMode.OPPORTUNISTIC)
+                    for _ in range(n_sessions)]
+        results: list = [None] * n_sessions
+        errors: list = []
+
+        def tenant(i: int) -> None:
+            try:
+                results[i] = _run_stream(sessions[i], shared,
+                                         i % _TENANT_CLASSES, queries, think_s)
+            except BaseException as e:   # noqa: BLE001 - surfaced below
+                errors.append((i, e))
+
+        t0 = time.perf_counter()
+        if n_sessions == 1:
+            tenant(0)
+        else:
+            threads = [threading.Thread(target=tenant, args=(i,))
+                       for i in range(n_sessions)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        wall = time.perf_counter() - t0
+        if errors:
+            raise errors[0][1]
+        if expected is not None:
+            for i, got in enumerate(results):
+                assert got == expected[i % _TENANT_CLASSES], (
+                    f"tenant {i} diverged from its serial isolated run")
+        # per-session attribution must sum to the service's global counters
+        per = sum(s.stats.evaluated_nodes for s in sessions)
+        assert per == svc.stats.evaluated_nodes, (per, svc.stats.evaluated_nodes)
+        qps = (n_sessions * queries) / wall
+        return qps, wall, svc.stats
+    finally:
+        svc.close()
+
+
+def _serial_reference(queries: int, rows: int) -> list:
+    """Each tenant class's stream, run serially in an isolated session."""
+    expected = []
+    for c in range(_TENANT_CLASSES):
+        s = Session(mode=EvalMode.LAZY)
+        try:
+            shared = s.register_frame(_table(rows), row_parts=4)
+            expected.append([s.collect(_query(shared, c, j)).to_pydict()
+                             for j in range(queries)])
+        finally:
+            s.close()
+    return expected
+
+
+def _bench(rep: Reporter, n_sessions: int, queries: int, think_ms: float,
+           rows: int, *, gate: bool) -> dict:
+    think_s = think_ms / 1000.0
+    expected = _serial_reference(queries, rows)
+
+    qps1, wall1, _ = _measure(1, queries, think_s, rows, expected)
+    qpsN, wallN, stats = _measure(n_sessions, queries, think_s, rows, expected)
+    ratio = qpsN / max(qps1, 1e-9)
+
+    rep.add(f"service/qps/1session[{queries}q,{think_ms:g}ms]",
+            wall1 * 1e6 / queries, f"qps={qps1:.1f}")
+    rep.add(f"service/qps/{n_sessions}sessions[{queries}q,{think_ms:g}ms]",
+            wallN * 1e6 / (n_sessions * queries),
+            f"qps={qpsN:.1f} ratio={ratio:.2f}x "
+            f"mqo_hits={stats.cache_hits} joins={stats.inflight_joins}")
+    if gate:
+        assert ratio >= 3.0, (
+            f"{n_sessions}-session qps only {ratio:.2f}x the 1-session qps "
+            "(acceptance floor: 3x)")
+    return {"sessions": n_sessions, "queries_per_session": queries,
+            "think_ms": think_ms, "rows": rows,
+            "qps_1session": round(qps1, 2),
+            f"qps_{n_sessions}sessions": round(qpsN, 2),
+            "ratio": round(ratio, 3),
+            "wall_1session_s": round(wall1, 4),
+            f"wall_{n_sessions}sessions_s": round(wallN, 4),
+            "mqo_cache_hits": stats.cache_hits,
+            "inflight_joins": stats.inflight_joins,
+            "pool_workers": schedule.pool_width()}
+
+
+def run(rep: Reporter, smoke: bool = False) -> None:
+    # Pin the acceptance configuration (2-worker pool) regardless of host.
+    saved = os.environ.get("REPRO_POOL_WORKERS")
+    os.environ["REPRO_POOL_WORKERS"] = "2"
+    schedule.reset_pool()
+    try:
+        if smoke:
+            # sanity only: tiny stream, no ratio gate (noise-bound at this
+            # size), no JSON overwrite
+            _bench(rep, 4, 2, 10.0, 20_000, gate=False)
+            return
+        result = _bench(rep, 16, 8, 30.0, 100_000, gate=True)
+        with open(_JSON_PATH, "w") as f:
+            json.dump({"benchmark":
+                       "concurrent multi-session query service — aggregate "
+                       "qps of 16 think-time tenants vs 1 on a 2-worker "
+                       "pool (admission control + cross-session MQO)",
+                       "service": result}, f, indent=2)
+            f.write("\n")
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_POOL_WORKERS", None)
+        else:
+            os.environ["REPRO_POOL_WORKERS"] = saved
+        schedule.reset_pool()

@@ -25,6 +25,9 @@
   shuffle       shuffle-native JOIN/SORT: grace-hash + sample-sort exchange
                 (serial_seed vs shuffled vs fused) + 4x-budget join
                 (also writes BENCH_shuffle.json)
+  service       concurrent multi-session query service: 16 think-time
+                tenants vs 1 on a 2-worker pool — admission control +
+                cross-session MQO (also writes BENCH_service.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -59,7 +62,7 @@ def main() -> None:
                    bench_faults, bench_fig6, bench_fusion,
                    bench_opportunistic, bench_outofcore, bench_reuse,
                    bench_rewrite, bench_roofline, bench_scheduling,
-                   bench_shuffle)
+                   bench_service, bench_shuffle)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -74,6 +77,7 @@ def main() -> None:
         "outofcore": bench_outofcore.run,
         "faults": bench_faults.run,
         "shuffle": bench_shuffle.run,
+        "service": bench_service.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

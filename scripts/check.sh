@@ -170,5 +170,88 @@ if [[ "$leaked" -ne 0 ]]; then
 fi
 rm -rf "$shuffle_tmp"
 
+# concurrency smoke: 4 tenant sessions — each with its OWN seeded fault plan
+# — run a pipeline concurrently on ONE budgeted QueryService (shared byte
+# budget, shared executor).  Every concurrent result must be bit-identical
+# to that tenant's serial isolated run, per-session spill attribution must
+# sum to the service's global counters, and the shared store's teardown must
+# leave ZERO spill files behind.
+svc_tmp=$(mktemp -d)
+SVC_TMP="$svc_tmp" REPRO_POOL_WORKERS=2 REPRO_RETRY_BACKOFF_MS=1 \
+python - <<'PY'
+import os, threading
+import numpy as np
+from repro.core import EvalMode, QueryService, Session
+from repro.core.algebra import GroupBy, Map, Selection, Udf, col, lit
+from repro.core.dtypes import Domain
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.store import get_store
+
+def table(seed, n=3000):
+    rng = np.random.default_rng(seed)
+    return Frame(
+        [Column(np.asarray(rng.integers(0, 8, n, dtype=np.int32)), Domain.INT),
+         Column(np.asarray(rng.standard_normal(n)), Domain.FLOAT)],
+        RangeLabels(n), labels_from_values(["k", "x"]))
+
+def plan(src, i):
+    def fn(cols, frame, s=1.0 + i):
+        out = dict(cols)
+        c = cols["x"]
+        out["x"] = Column(c.data * s + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+    udf = Udf(name=f"ci_svc_{i}", fn=fn, deps=frozenset(["x"]),
+              elementwise=True)
+    return GroupBy(Selection(Map(src, udf), col("k") < lit(6)),
+                   ("k",), [("x", "sum", "x"), ("x", "count", "n")])
+
+expected = []                            # serial isolated reference per tenant
+for i in range(4):
+    s = Session(mode=EvalMode.LAZY)
+    src = s.register_frame(table(i), row_parts=4)
+    expected.append(s.collect(plan(src, i)).to_pydict())
+    s.close()
+
+svc = QueryService(background_workers=2, mem_budget_bytes=8192,
+                   spill_dir=os.environ["SVC_TMP"])
+sessions = [svc.session(mode=EvalMode.OPPORTUNISTIC, task_retries=2,
+                        fault_plan="worker:0.3", fault_seed=i)
+            for i in range(4)]
+results = [None] * 4
+errors = []
+
+def tenant(i):
+    try:
+        s = sessions[i]
+        src = s.register_frame(table(i), row_parts=4)
+        node = s.statement(plan(src, i))
+        results[i] = s.collect(node).to_pydict()
+    except BaseException as e:
+        errors.append((i, e))
+
+threads = [threading.Thread(target=tenant, args=(i,)) for i in range(4)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+assert not errors, errors
+for i in range(4):
+    assert results[i] == expected[i], f"tenant {i} diverged under concurrency"
+assert svc.stats.spills > 0, "shared budget never spilled"
+assert sum(s.stats.spills for s in sessions) == svc.stats.spills, \
+    "per-session spill attribution does not sum to the global counter"
+assert svc.stats.faults_injected > 0, "per-session fault plans never fired"
+assert get_store().stats.spills == 0, "process store was touched"
+svc.close()
+PY
+leaked=$(find "$svc_tmp" -type f | wc -l)
+if [[ "$leaked" -ne 0 ]]; then
+    echo "ERROR: $leaked leaked spill file(s) under $svc_tmp (service)" >&2
+    find "$svc_tmp" -type f >&2
+    exit 1
+fi
+rm -rf "$svc_tmp"
+
 # full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
 python -m benchmarks.run --smoke

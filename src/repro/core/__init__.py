@@ -10,10 +10,14 @@ Public surface:
 """
 from . import algebra  # noqa: F401
 from .api import DataFrame, concat, from_pydict, get_dummies, read_csv  # noqa: F401
+from .config import CancelToken, SessionConfig  # noqa: F401
 from .dtypes import Domain  # noqa: F401
 from .frame import Column, Frame  # noqa: F401
 from .partition import PartitionedFrame  # noqa: F401
 from .faults import (  # noqa: F401
-    IngestError, SpillIntegrityError, StoreClosedError, TaskError)
-from .session import EvalMode, Session, get_session, set_session  # noqa: F401
+    ExecutorClosedError, IngestError, SpillIntegrityError,
+    StatementCancelled, StoreClosedError, TaskError)
+from .service import QueryService  # noqa: F401
+from .session import (  # noqa: F401
+    EvalMode, Session, StatementHandle, get_session, set_session)
 from .store import BlockHandle, BlockStore, get_store, reset_store  # noqa: F401

@@ -53,6 +53,14 @@ def progressive_aggregate(pf: PartitionedFrame, column: Any,
     assert func in ("sum", "count", "mean")
     total_rows = pf.nrows
     pf1 = pf.repartition(col_parts=1)
+    if pf1.row_parts == 0 or total_rows == 0:
+        # zero-block / zero-row frame: the block loop would yield NOTHING,
+        # so a caller draining until final=True never terminates.  Emit one
+        # final exact estimate: the empty sum/count are 0, the empty mean is
+        # undefined (NaN).
+        value = float("nan") if func == "mean" else 0.0
+        yield Estimate(value, value, value, 0, total_rows, True)
+        return
     seen = 0
     vals_sum = 0.0
     vals_sumsq = 0.0
@@ -81,10 +89,16 @@ def progressive_aggregate(pf: PartitionedFrame, column: Any,
         else:  # count (valid rows)
             frac = vals_cnt / max(1, seen)
             est = frac * total_rows
-            se = total_rows * math.sqrt(frac * (1 - frac) / max(1, seen))
+            # CI denominator: the VALID-row count, consistently with the
+            # n used for the mean/variance estimates above — the previous
+            # max(1, seen) denominator understated the interval on sparse
+            # (mostly-null) columns
+            se = total_rows * math.sqrt(frac * (1 - frac) / max(1, vals_cnt))
         if final:
             if func == "mean":
-                est, se = mean, 0.0
+                # the exact mean of zero valid rows is undefined, not the
+                # running 0.0 the estimator would report
+                est, se = (mean if vals_cnt else float("nan")), 0.0
             elif func == "sum":
                 est, se = vals_sum, 0.0
             else:

@@ -38,11 +38,13 @@ from . import algebra as alg
 from . import physical, rewrite
 from .frame import Frame
 from .partition import PartitionedFrame, default_grid
+from . import config as _config
 from . import faults as _faults
+from .faults import ExecutorClosedError, StatementCancelled
 from .schedule import node_scope, stats_scope
 from .store import get_store
 
-__all__ = ["Executor", "CacheEntry", "ExecStats"]
+__all__ = ["Executor", "CacheEntry", "ExecStats", "StatsTee"]
 
 
 @dataclass
@@ -205,6 +207,40 @@ class ExecStats:
         return self.dispatched_blocks / max(1, self.dispatches)
 
 
+_TEE_LOCK = threading.Lock()
+
+
+class StatsTee:
+    """Duck-typed ``ExecStats`` writer that mirrors every counter mutation
+    onto several targets — the executor's global stats plus the active
+    session's per-session stats (``config.SessionConfig.stats``), used when
+    many service sessions share one executor (``core.service``).
+
+    Counter sites write ``st.counter += n``; ``__setattr__`` recovers the
+    delta against the primary target under one process-wide lock and applies
+    it to EVERY target, so a concurrent session sees exactly its own work
+    while the global counters stay the sum of the per-session ones (lost
+    updates under contention hit all targets identically, preserving the sum
+    invariant).  Reads come from the primary (global) target.  Non-additive
+    gauges (``peak_resident_bytes``) must not be assigned through the tee —
+    ``Executor._attribute_store_delta`` handles them explicitly per target."""
+
+    __slots__ = ("_targets",)
+
+    def __init__(self, *targets: ExecStats):
+        object.__setattr__(self, "_targets", targets)
+
+    def __getattr__(self, name: str):
+        return getattr(self._targets[0], name)
+
+    def __setattr__(self, name: str, value) -> None:
+        ts = self._targets
+        with _TEE_LOCK:
+            delta = value - getattr(ts[0], name)
+            for t in ts:
+                setattr(t, name, getattr(t, name) + delta)
+
+
 class Executor:
     def __init__(self, frame_store: dict[str, PartitionedFrame], *,
                  cache_budget_bytes: int = 1 << 30, optimize: bool = True,
@@ -214,6 +250,7 @@ class Executor:
         self.cache_budget = cache_budget_bytes
         self.optimize = optimize
         self.stats = ExecStats()
+        self._closed = False
         self._lock = threading.Lock()
         self._inflight: dict[tuple, _fut.Future] = {}
         # plan keys already counted in fusion stats (bounded FIFO: stats-only
@@ -242,6 +279,21 @@ class Executor:
         self._bg = _fut.ThreadPoolExecutor(max_workers=background_workers,
                                            thread_name_prefix="repro-bg")
 
+    def _stats(self) -> Any:
+        """Stats sink for the calling context: the executor's global counters,
+        teed into the active session's per-session ``ExecStats`` when one is
+        installed (multi-session attribution under a ``QueryService``)."""
+        cfg = _config.current()
+        ss = cfg.stats if cfg is not None else None
+        if ss is None or ss is self.stats:
+            return self.stats
+        return StatsTee(self.stats, ss)
+
+    def _require_open(self) -> None:
+        if self._closed:
+            raise ExecutorClosedError(
+                "executor is shut down — the owning session/service was closed")
+
     # ------------------------------------------------------------------
     # plan optimization entry
     # ------------------------------------------------------------------
@@ -262,7 +314,7 @@ class Executor:
             return hit
         out = rewrite.optimize(node, self._source_columns)
         if out is not node:
-            self.stats.rewrites_applied += 1
+            self._stats().rewrites_applied += 1
         with self._lock:
             while len(self._opt_memo) >= self._fused_seen_max:
                 self._opt_memo.pop(next(iter(self._opt_memo)))
@@ -277,6 +329,7 @@ class Executor:
         available as the comparison baseline."""
         if not self.optimize:
             return node
+        st = self._stats()
         in_key = node.cache_key()
         with self._lock:
             hit = self._fuse_memo.get(in_key)
@@ -296,11 +349,11 @@ class Executor:
                     while len(self._fused_seen) >= self._fused_seen_max:  # is
                         self._fused_seen.pop(next(iter(self._fused_seen)))
                     self._fused_seen[key] = None  # not new fusion work
-                    self.stats.fused_groups += fs.groups
-                    self.stats.fused_stage_ops += fs.fused_ops
-                    self.stats.barrier_fused_groups += fs.barrier_groups
-                    self.stats.producer_stage_ops += fs.producer_ops
-                    self.stats.consumer_stage_ops += fs.consumer_ops
+                    st.fused_groups += fs.groups
+                    st.fused_stage_ops += fs.fused_ops
+                    st.barrier_fused_groups += fs.barrier_groups
+                    st.producer_stage_ops += fs.producer_ops
+                    st.consumer_stage_ops += fs.consumer_ops
         return out
 
     def note_statement(self, node: alg.Node) -> None:
@@ -333,6 +386,7 @@ class Executor:
         # resolves a source block, which may fault a spilled one back in) —
         # attribute that residency work here so statement execution accounts
         # for EVERY spill/fault/recompute, not just the per-node windows
+        self._require_open()
         s0 = get_store().stats.snapshot()
         f0 = _faults.injected_total()
         prepared = self._prepared(node)
@@ -341,22 +395,44 @@ class Executor:
 
     def _attribute_store_delta(self, s0, f0) -> None:
         """Fold the store/fault counter movement since snapshot ``s0`` /
-        injected-count ``f0`` into this executor's ``ExecStats``."""
+        injected-count ``f0`` into this executor's ``ExecStats`` — and into
+        the active session's per-session stats when one is installed, so
+        multi-tenant attribution sums to the global counters."""
         s1 = get_store().stats.snapshot()
-        self.stats.spills += s1[0] - s0[0]
-        self.stats.faults += s1[1] - s0[1]
-        self.stats.spilled_bytes += s1[2] - s0[2]
-        self.stats.checksum_failures += s1[4] - s0[4]
-        self.stats.recomputed_blocks += s1[5] - s0[5]
-        self.stats.budget_overruns += s1[6] - s0[6]
-        self.stats.faults_injected += _faults.injected_total() - f0
-        # peak is attributed only when this window raised the store's
-        # high-water mark — a fresh executor must not inherit an earlier
-        # session's peak from the process-wide gauge
-        if s1[3] > s0[3] and s1[3] > self.stats.peak_resident_bytes:
-            self.stats.peak_resident_bytes = s1[3]
+        df = _faults.injected_total() - f0
+        cfg = _config.current()
+        ss = cfg.stats if cfg is not None else None
+        targets = ((self.stats,) if ss is None or ss is self.stats
+                   else (self.stats, ss))
+        with _TEE_LOCK:
+            for t in targets:
+                t.spills += s1[0] - s0[0]
+                t.faults += s1[1] - s0[1]
+                t.spilled_bytes += s1[2] - s0[2]
+                t.checksum_failures += s1[4] - s0[4]
+                t.recomputed_blocks += s1[5] - s0[5]
+                t.budget_overruns += s1[6] - s0[6]
+                t.faults_injected += df
+                # peak is attributed only when this window raised the store's
+                # high-water mark — a fresh executor must not inherit an
+                # earlier session's peak from the process-wide gauge
+                if s1[3] > s0[3] and s1[3] > t.peak_resident_bytes:
+                    t.peak_resident_bytes = s1[3]
+
+    def _join(self, fut: _fut.Future, node: alg.Node) -> PartitionedFrame:
+        """Join another statement's in-flight evaluation.  If that producer
+        was *cancelled* (its session's CancelToken fired) the cancellation
+        must not leak into us — re-evaluate the sub-plan ourselves.  A
+        producer that failed for any other reason (including the executor
+        shutting down) propagates its typed error."""
+        try:
+            return fut.result()
+        except StatementCancelled:
+            return self._eval(node)
 
     def _eval(self, node: alg.Node) -> PartitionedFrame:
+        self._require_open()
+        st = self._stats()
         key = node.cache_key()
         # cache and in-flight are consulted under ONE lock hold (a split
         # would let a finishing thread fill the cache AND retire its future
@@ -367,15 +443,15 @@ class Executor:
             fut = None
             if ent is not None:
                 ent.hits += 1
-                self.stats.cache_hits += 1
+                st.cache_hits += 1
             else:
                 fut = self._inflight.get(key)
         if ent is not None:
             self._sync_store_benefit(ent)
             return ent.result
         if fut is not None:
-            self.stats.inflight_joins += 1
-            return fut.result()
+            st.inflight_joins += 1
+            return self._join(fut, node)
 
         promise: _fut.Future = _fut.Future()
         with self._lock:
@@ -384,7 +460,7 @@ class Executor:
             fut = None
             if ent is not None:
                 ent.hits += 1
-                self.stats.cache_hits += 1
+                st.cache_hits += 1
             else:
                 existing = self._inflight.get(key)
                 if existing is not None:
@@ -395,8 +471,8 @@ class Executor:
             self._sync_store_benefit(ent)   # same policy as the fast path
             return ent.result
         if fut is not None:
-            self.stats.inflight_joins += 1
-            return fut.result()
+            st.inflight_joins += 1
+            return self._join(fut, node)
 
         try:
             t0 = time.monotonic()
@@ -410,16 +486,23 @@ class Executor:
                 # the contextvar scope can't see them
                 s0 = get_store().stats.snapshot()
                 f0 = _faults.injected_total()
-                with stats_scope(self.stats), node_scope(node.op):
-                    result = physical.run_node(node, inputs, self.stats)
+                with stats_scope(st), node_scope(node.op):
+                    result = physical.run_node(node, inputs, st)
                 self._attribute_store_delta(s0, f0)
             dt = time.monotonic() - t0
-            self.stats.evaluated_nodes += 1
+            st.evaluated_nodes += 1
             self._store(key, result, dt)
-            promise.set_result(result)
+            try:
+                promise.set_result(result)
+            except _fut.InvalidStateError:
+                pass   # shutdown() failed this promise first; our own
+                       # caller still gets the computed result
             return result
         except BaseException as e:
-            promise.set_exception(e)
+            try:
+                promise.set_exception(e)
+            except _fut.InvalidStateError:
+                pass
             raise
         finally:
             with self._lock:
@@ -472,18 +555,35 @@ class Executor:
     # ------------------------------------------------------------------
     # opportunistic background scheduling (§6.1.1)
     # ------------------------------------------------------------------
-    def submit(self, node: alg.Node) -> _fut.Future:
+    def submit(self, node: alg.Node, *,
+               cancel: _config.CancelToken | None = None) -> _fut.Future:
         """Schedule evaluation in the background; returns a future.  The
-        user-facing handle keeps composing; an inspect call joins it."""
+        user-facing handle keeps composing; an inspect call joins it.
+
+        The caller's session config scope is captured HERE and re-installed
+        on the background thread (contextvars are per-thread, so they do not
+        cross ``ThreadPoolExecutor.submit`` by themselves).  ``cancel`` makes
+        the background run cancellable at the next dispatch boundary — the
+        run raises the typed ``faults.StatementCancelled``."""
+        self._require_open()
         node = self._prepared(node)
-        self.stats.background_tasks += 1
-        return self._bg.submit(self._eval, node)
+        self._stats().background_tasks += 1
+        cfg = _config.current()
+        if cancel is None:
+            cancel = _config.current_cancel()
+
+        def run() -> PartitionedFrame:
+            with _config.propagate(cfg, cancel):
+                return self._eval(node)
+
+        return self._bg.submit(run)
 
     # ------------------------------------------------------------------
     # prefix computation (§6.1.2)
     # ------------------------------------------------------------------
     def evaluate_prefix(self, node: alg.Node, k: int) -> PartitionedFrame:
         """Produce (at least) the first k result rows cheaply when legal."""
+        self._require_open()
         node = self._prepared(node)
         key = node.cache_key()
         with self._lock:
@@ -494,7 +594,7 @@ class Executor:
         if not alg.prefix_safe(node):
             return _head(self._eval(node), k)
 
-        self.stats.prefix_evals += 1
+        self._stats().prefix_evals += 1
         src = next(n for n in node.walk() if n.op == "source")
         total = self.frames[src.params["frame_id"]].nrows
         take = max(k, 4096)
@@ -512,6 +612,24 @@ class Executor:
         return self._eval(substitute(node))
 
     def shutdown(self):
+        """Close the executor: new work is refused (``ExecutorClosedError``)
+        and every in-flight promise that has not resolved yet is FAILED with
+        the same typed error instead of being abandoned — a ``collect``
+        racing a ``close`` raises immediately, it never blocks on a future
+        nobody will complete.  (A producer thread that finishes anyway hits
+        ``InvalidStateError`` on its own ``set_result`` and ignores it.)
+        Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            pending = [f for f in self._inflight.values() if not f.done()]
+        err = ExecutorClosedError("executor shut down with statements in flight")
+        for f in pending:
+            try:
+                f.set_exception(err)
+            except _fut.InvalidStateError:
+                pass   # producer resolved it between our look and now — fine
         self._bg.shutdown(wait=False, cancel_futures=True)
 
 

@@ -67,9 +67,12 @@ import threading
 import time
 import warnings
 
+from . import config as _config
+
 __all__ = [
     "TaskError", "InjectedWorkerError", "SpillIntegrityError",
-    "StoreClosedError", "IngestError", "is_retryable",
+    "StoreClosedError", "IngestError", "StatementCancelled",
+    "ExecutorClosedError", "is_retryable",
     "env_int", "active", "fault_point", "spill_write_fault",
     "spill_read_chaos", "injected_total", "injected_snapshot",
     "configure", "reset", "FaultPlan",
@@ -121,12 +124,31 @@ class IngestError(RuntimeError):
     between the byte-range planning pass and chunk tokenization."""
 
 
+class StatementCancelled(RuntimeError):
+    """An async statement's :class:`config.CancelToken` was set: the dispatch
+    layer stopped at the next block boundary.  Never retried; a waiter joined
+    on the cancelled statement's in-flight future re-evaluates instead of
+    inheriting the cancellation (``Executor._eval``)."""
+
+    def __init__(self, message: str, *, node: str | None = None):
+        self.node = node
+        super().__init__(message + (f" [node={node}]" if node else ""))
+
+
+class ExecutorClosedError(RuntimeError):
+    """A statement was submitted to — or was still in flight on — an executor
+    that has been shut down (``Session.close`` racing a ``collect``).  The
+    typed replacement for the old behavior of abandoning in-flight promise
+    futures, which left waiters blocked forever."""
+
+
 #: Exception classes the dispatch layer treats as transient and retries.
 #: Deterministic user errors (ValueError, KeyError, OverflowError, ...)
 #: propagate unchanged — retrying them wastes the budget and masks the
 #: original type the caller's tests expect.
 _RETRYABLE = (InjectedWorkerError, OSError, TimeoutError, ConnectionError)
-_NEVER_RETRY = (TaskError, SpillIntegrityError, StoreClosedError, IngestError)
+_NEVER_RETRY = (TaskError, SpillIntegrityError, StoreClosedError, IngestError,
+                StatementCancelled, ExecutorClosedError)
 
 
 def is_retryable(exc: BaseException) -> bool:
@@ -282,13 +304,29 @@ def injected_snapshot() -> dict[str, int]:
 
 def active() -> bool:
     """Cheap per-dispatch gate: is ANY fault plan configured?  False is the
-    production path — injection costs one env lookup and nothing else."""
+    production path — injection costs one contextvar + env lookup and nothing
+    else.  Session-scoped resolution: the active :class:`config.SessionConfig`
+    wins (``fault_plan=""`` explicitly *shields* a session from a process-wide
+    plan), then the programmatic override, then ``REPRO_FAULT_PLAN``."""
+    cfg = _config.current()
+    if cfg is not None and cfg.fault_plan is not None:
+        return bool(cfg.fault_plan)
     return (_OVERRIDE_PLAN is not None
             or bool(os.environ.get("REPRO_FAULT_PLAN")))
 
 
 def _plan() -> FaultPlan | None:
     global _CACHED
+    cfg = _config.current()
+    if cfg is not None and cfg.fault_plan is not None:
+        if not cfg.fault_plan:
+            return None              # "" = injection off for this session
+        seed = cfg.fault_seed if cfg.fault_seed is not None else \
+            env_int("REPRO_FAULT_SEED", 0)
+        p = cfg._plan_cache
+        if p is None or p.spec != cfg.fault_plan or p.seed != seed:
+            p = cfg._plan_cache = FaultPlan(cfg.fault_plan, seed)
+        return p
     raw = _OVERRIDE_PLAN if _OVERRIDE_PLAN is not None else \
         os.environ.get("REPRO_FAULT_PLAN", "")
     if not raw:
@@ -304,8 +342,11 @@ def _plan() -> FaultPlan | None:
 
 
 def configure(plan: str | None = None, seed: int | None = None) -> None:
-    """Programmatic override of ``REPRO_FAULT_PLAN`` / ``REPRO_FAULT_SEED``
-    (the ``Session(fault_plan=...)`` path).  Sticky until :func:`reset`."""
+    """Process-wide programmatic override of ``REPRO_FAULT_PLAN`` /
+    ``REPRO_FAULT_SEED`` (CI smokes, chaos harnesses).  Sticky until
+    :func:`reset`.  ``Session(fault_plan=...)`` no longer calls this — its
+    plan is session-scoped via ``config.SessionConfig`` and shadows this
+    override only inside that session's statements."""
     global _OVERRIDE_PLAN, _OVERRIDE_SEED
     if plan is not None:
         FaultPlan(plan)          # validate eagerly: fail at configure time

@@ -117,7 +117,23 @@ Environment knobs (the one table — referenced from ROADMAP.md)
                            decision)
 ``REPRO_FAULT_SLOW_MS``    sleep injected by a ``slow`` fault rule
                            (default 25)
+``REPRO_MAX_INFLIGHT``     per-session bound on concurrently *admitted*
+                           async statements under a ``core.service``
+                           ``QueryService`` (default 2); excess submissions
+                           queue in the admission controller
+                           (FIFO-with-aging) until a slot frees
 =========================  ==================================================
+
+Session-scoped override semantics (``core.config``): every knob in the
+store / retry / fault / shuffle groups above can also be set per ``Session``
+(``Session(task_retries=..., fault_plan=..., mem_budget_bytes=...)``).  Those
+values live in a ``config.SessionConfig`` carried in a contextvar that the
+session installs around each statement and this module propagates into pool
+workers — they shadow the process-wide ``configure*()`` overrides and the
+``REPRO_*`` env values *inside that session only*.  Resolution order for
+every knob: active session config → process ``configure()`` override →
+``REPRO_*`` env → default.  Env knobs therefore remain process defaults; a
+second session can no longer clobber the first session's configuration.
 
 Failure semantics: a dispatched statement either completes **bit-identical**
 to the fault-free run (transient failures retried with exponential backoff;
@@ -134,14 +150,15 @@ import threading
 import time
 from typing import Callable, Sequence
 
+from . import config as _config
 from . import faults as _faults
-from .faults import TaskError, env_int, is_retryable
+from .faults import StatementCancelled, TaskError, env_int, is_retryable
 
 __all__ = [
     "get_pool", "pool_width", "reset_pool", "dispatch_blocks",
     "coalesce_factor", "preferred_row_parts", "output_row_parts",
     "budget_max_block_bytes", "stats_scope", "node_scope", "GRID_PREFS",
-    "task_retries", "retry_backoff_ms", "task_timeout_ms",
+    "task_retries", "retry_backoff_ms", "task_timeout_ms", "max_inflight",
     "configure_retries",
 ]
 
@@ -234,7 +251,12 @@ _TIMEOUT_OVERRIDE: int | None = None
 
 def task_retries() -> int:
     """Bounded retries per block task for transient failures (injected
-    worker faults, OSError, TimeoutError, ConnectionError).  0 disables."""
+    worker faults, OSError, TimeoutError, ConnectionError).  0 disables.
+    Session-scoped resolution: active ``SessionConfig`` → process override →
+    ``REPRO_TASK_RETRIES``."""
+    cfg = _config.current()
+    if cfg is not None and cfg.task_retries is not None:
+        return max(0, cfg.task_retries)
     if _RETRIES_OVERRIDE is not None:
         return _RETRIES_OVERRIDE
     return env_int("REPRO_TASK_RETRIES", 2, minimum=0)
@@ -242,6 +264,9 @@ def task_retries() -> int:
 
 def retry_backoff_ms() -> int:
     """Base backoff between retry attempts; doubles per attempt."""
+    cfg = _config.current()
+    if cfg is not None and cfg.retry_backoff_ms is not None:
+        return max(0, cfg.retry_backoff_ms)
     if _BACKOFF_OVERRIDE is not None:
         return _BACKOFF_OVERRIDE
     return env_int("REPRO_RETRY_BACKOFF_MS", 5, minimum=0)
@@ -250,17 +275,33 @@ def retry_backoff_ms() -> int:
 def task_timeout_ms() -> int:
     """Per-dispatch deadline (0 = none).  A dispatch that blows it raises
     ``TaskError`` with ``kind="timeout"``."""
+    cfg = _config.current()
+    if cfg is not None and cfg.task_timeout_ms is not None:
+        return max(0, cfg.task_timeout_ms)
     if _TIMEOUT_OVERRIDE is not None:
         return _TIMEOUT_OVERRIDE
     return env_int("REPRO_TASK_TIMEOUT_MS", 0, minimum=0)
+
+
+def max_inflight() -> int:
+    """Per-session bound on concurrently *admitted* async statements under a
+    ``core.service.QueryService`` (excess submissions queue in the admission
+    controller until a slot frees).  Session-scoped resolution: active
+    ``SessionConfig`` → ``REPRO_MAX_INFLIGHT`` (default 2)."""
+    cfg = _config.current()
+    if cfg is not None and cfg.max_inflight is not None:
+        return max(1, cfg.max_inflight)
+    return env_int("REPRO_MAX_INFLIGHT", 2, minimum=1)
 
 
 def configure_retries(retries: int | None = None,
                       timeout_ms: int | None = None,
                       backoff_ms: int | None = None,
                       *, clear: bool = False) -> None:
-    """Programmatic override of the retry/deadline env knobs (the
-    ``Session(task_retries=...)`` path).  Sticky until ``clear=True``."""
+    """Process-wide programmatic override of the retry/deadline env knobs.
+    Sticky until ``clear=True``.  ``Session(task_retries=...)`` no longer
+    calls this — its values are session-scoped (``config.SessionConfig``)
+    and shadow this override only inside that session's statements."""
     global _RETRIES_OVERRIDE, _TIMEOUT_OVERRIDE, _BACKOFF_OVERRIDE
     if clear:
         _RETRIES_OVERRIDE = _TIMEOUT_OVERRIDE = _BACKOFF_OVERRIDE = None
@@ -347,14 +388,23 @@ def _bump(st, name: str, d: int = 1) -> None:
             setattr(st, name, getattr(st, name) + d)
 
 
+def _check_cancel(cancel, label: str) -> None:
+    """Cooperative cancellation check between block tasks (the cancel token
+    travels with the dispatch via ``config.propagate``)."""
+    if cancel is not None and cancel.cancelled:
+        raise StatementCancelled(
+            "statement cancelled at a dispatch boundary", node=label)
+
+
 def _run_one(fn: Callable, x, bi: int, retries: int, backoff_ms: int,
-             label: str, st, chaos: bool):
+             label: str, st, chaos: bool, cancel=None):
     """One block task under the retry policy: transient failures retry with
     exponential backoff up to ``retries`` times, then surface as TaskError
     with full provenance; deterministic errors propagate unchanged on the
     first attempt."""
     attempt = 0
     while True:
+        _check_cancel(cancel, label)
         try:
             if chaos:
                 _faults.fault_point(
@@ -459,34 +509,58 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     chaos = _faults.active()
     guarded = chaos or retries > 0
     label = _NODE.get() or "?"
+    # session scope travels with the dispatch: the knob accessors above ran
+    # on the caller thread (where the session's contextvar config is
+    # installed); the per-block fn may consult the store / fault plan from a
+    # POOL thread, so the config — and the statement's cancel token — are
+    # captured here and re-installed inside every pool task
+    cfg = _config.current()
+    cancel = _config.current_cancel()
+    _check_cancel(cancel, label)
 
     def run_chunk(chunk_and_idxs) -> list:
         chunk, cidx = chunk_and_idxs
-        if not guarded:
-            return [fn(x) for x in chunk]
-        if not chaos:
-            # hot path: one try around the plain loop — the per-block retry
-            # machinery is only paid when something actually failed
-            try:
-                return [fn(x) for x in chunk]
-            except Exception as e:
-                if not is_retryable(e):
-                    raise
-                _bump(st, "task_failures")
-        # chaos run, or a coalesced chunk hit a transient failure: split and
-        # run per block so one poison block is isolated (fn is pure, so
-        # re-running the chunk's other blocks is bit-identical)
-        return [_run_one(fn, x, bi, retries, backoff, label, st, chaos)
-                for x, bi in zip(chunk, cidx)]
+        with _config.propagate(cfg, cancel):
+            if not guarded:
+                if cancel is None:
+                    return [fn(x) for x in chunk]
+                out = []
+                for x in chunk:
+                    _check_cancel(cancel, label)
+                    out.append(fn(x))
+                return out
+            if not chaos:
+                # hot path: one try around the plain loop — the per-block
+                # retry machinery is only paid when something actually failed
+                try:
+                    out = []
+                    for x in chunk:
+                        _check_cancel(cancel, label)
+                        out.append(fn(x))
+                    return out
+                except Exception as e:
+                    if not is_retryable(e):
+                        raise
+                    _bump(st, "task_failures")
+            # chaos run, or a coalesced chunk hit a transient failure: split
+            # and run per block so one poison block is isolated (fn is pure,
+            # so re-running the chunk's other blocks is bit-identical)
+            return [_run_one(fn, x, bi, retries, backoff, label, st, chaos,
+                             cancel)
+                    for x, bi in zip(chunk, cidx)]
 
     if _in_worker():
         # nested dispatch from a pool worker: run inline — queueing behind
         # ourselves on a saturated pool would deadlock
         if guarded:
-            out = [_run_one(fn, x, bi, retries, backoff, label, st, chaos)
+            out = [_run_one(fn, x, bi, retries, backoff, label, st, chaos,
+                            cancel)
                    for x, bi in zip(items, idxs)]
         else:
-            out = [fn(x) for x in items]
+            out = []
+            for x in items:
+                _check_cancel(cancel, label)
+                out.append(fn(x))
     elif timeout > 0:
         pool = get_pool()
         deadline = time.monotonic() + timeout / 1000.0
@@ -529,8 +603,27 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
                     rebuilt = True
             futs.append((fu, c))
         out = []
+        first_err: BaseException | None = None
         for fu, c in futs:
-            out.extend(fu.result() if fu is not None else run_chunk(c))
+            if first_err is not None:
+                # fail-fast with DETERMINISTIC teardown: a failed chunk must
+                # not leave sibling tasks running past this dispatch — their
+                # store/fault work would be misattributed to whatever
+                # statement (possibly another session's) runs next.  Cancel
+                # what hasn't started and drain what has, then raise.
+                if fu is not None:
+                    fu.cancel()
+                    try:
+                        fu.result()
+                    except BaseException:
+                        pass
+                continue
+            try:
+                out.extend(fu.result() if fu is not None else run_chunk(c))
+            except BaseException as e:
+                first_err = e
+        if first_err is not None:
+            raise first_err
     if perm is not None:
         restored: list = [None] * n
         for pos, orig in enumerate(perm):

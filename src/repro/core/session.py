@@ -5,29 +5,110 @@ evaluation mode, and statement bookkeeping.  Statements create plan nodes;
 queries are the DAGs those statements compose; the session-level machinery
 (§6) — opportunistic scheduling, multi-query sharing, materialization reuse —
 lives in the executor and is configured here.
+
+Multi-tenancy (ROADMAP serving tier): a session's store / retry / fault /
+shuffle knobs are **session-scoped** — they live in a ``config.SessionConfig``
+installed (contextvar) around every statement, never in process-wide state —
+so two concurrent sessions with different knobs cannot clobber each other.
+The ``REPRO_*`` env knobs and the modules' ``configure()`` functions remain
+the *process defaults* a knob-less session inherits.
+
+Async surface (§6.1.1): under OPPORTUNISTIC mode every statement is scheduled
+in the background and carries a cancellable :class:`StatementHandle`
+(``node.handle``); :meth:`Session.submit` is the explicit async entry point in
+any mode.  Cancellation is cooperative — the run stops at the next dispatch
+boundary with the typed ``faults.StatementCancelled`` — and a ``collect``
+racing a ``close`` raises ``faults.ExecutorClosedError`` instead of hanging.
+
+Sessions can also be *service-managed* (``core.service.QueryService``): the
+service owns ONE executor / frame store / byte budget shared by all tenant
+sessions, and each tenant session contributes its ``SessionConfig`` (with a
+per-session ``ExecStats`` attribution target) instead of owning an executor.
 """
 from __future__ import annotations
 
+import concurrent.futures as _fut
 import itertools
 import threading
 from typing import Any
 
 from . import algebra as alg
-from . import faults as _faults
-from . import schedule as _schedule
-from . import shuffle as _shuffle
+from . import config as _config
 from . import store as block_store
-from .executor import Executor
+from .config import CancelToken, SessionConfig
+from .executor import ExecStats, Executor
+from .faults import ExecutorClosedError, StatementCancelled
 from .frame import Frame
 from .partition import PartitionedFrame, default_grid
 
-__all__ = ["Session", "EvalMode", "get_session", "set_session"]
+__all__ = ["Session", "EvalMode", "StatementHandle", "get_session",
+           "set_session"]
 
 
 class EvalMode:
     EAGER = "eager"                  # pandas semantics (paper-faithful baseline)
     LAZY = "lazy"                    # Spark semantics
     OPPORTUNISTIC = "opportunistic"  # §6.1.1 — background compute in think time
+
+
+class StatementHandle:
+    """Grip on one asynchronously submitted statement (§6.1.1 async surface).
+
+    ``cancel()`` requests cooperative cancellation: the background run stops
+    at its next dispatch boundary (block kernels are pure, so a cancelled
+    statement never leaves partial state — a later re-run is bit-identical).
+    ``result()`` joins the run and raises the run's typed error:
+    ``faults.StatementCancelled`` after a cancel, ``faults.ExecutorClosedError``
+    when the owning session/service was closed while the statement was in
+    flight."""
+
+    __slots__ = ("node", "token", "_future")
+
+    def __init__(self, node: alg.Node, token: CancelToken, future: _fut.Future):
+        self.node = node
+        self.token = token
+        self._future = future
+
+    def cancel(self) -> None:
+        """Request cancellation (cooperative; a statement that already
+        finished is unaffected and its cached result stays valid)."""
+        self.token.cancel()
+
+    @property
+    def cancelled(self) -> bool:
+        return self.token.cancelled
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: float | None = None) -> PartitionedFrame:
+        try:
+            return self._future.result(timeout)
+        except _fut.CancelledError:
+            # the pool dropped the queued task before it ever started
+            # (executor shutdown with cancel_futures=True)
+            if self.token.cancelled:
+                raise StatementCancelled(
+                    "statement cancelled before it started") from None
+            raise ExecutorClosedError(
+                "executor shut down before this statement started") from None
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        try:
+            return self._future.exception(timeout)
+        except _fut.CancelledError:
+            if self.token.cancelled:
+                return StatementCancelled("statement cancelled before it started")
+            return ExecutorClosedError(
+                "executor shut down before this statement started")
+
+    def __repr__(self) -> str:
+        state = ("cancelled" if self.token.cancelled
+                 else "done" if self._future.done() else "running")
+        return f"StatementHandle({self.node.op}, {state})"
+
+
+_SESSION_IDS = itertools.count()
 
 
 class Session:
@@ -42,97 +123,183 @@ class Session:
                  fault_plan: str | None = None,
                  fault_seed: int | None = None,
                  shuffle_buckets: int | None = None,
-                 shuffle_skew_factor: int | None = None):
-        # out-of-core residency knob (process-wide — the block store is
-        # shared; see the REPRO_MEM_BUDGET / REPRO_SPILL_DIR env knobs in
-        # core/schedule.py's table).  Set it before ingesting data: blocks
-        # registered under an earlier store configuration stay fully
-        # resident.
-        if mem_budget_bytes is not None or spill_dir is not None:
-            block_store.configure(budget_bytes=mem_budget_bytes,
-                                  spill_dir=spill_dir)
-        # fault-tolerance knobs (process-wide, like the store config): retry
-        # policy for transient block-task failures and the deterministic
-        # fault-injection plan — programmatic forms of REPRO_TASK_RETRIES /
-        # REPRO_TASK_TIMEOUT_MS / REPRO_RETRY_BACKOFF_MS and
-        # REPRO_FAULT_PLAN / REPRO_FAULT_SEED (see core/schedule.py's table)
-        if (task_retries is not None or task_timeout_ms is not None
-                or retry_backoff_ms is not None):
-            _schedule.configure_retries(retries=task_retries,
-                                        timeout_ms=task_timeout_ms,
-                                        backoff_ms=retry_backoff_ms)
-        if fault_plan is not None or fault_seed is not None:
-            _faults.configure(plan=fault_plan, seed=fault_seed)
-        # shuffle/exchange knobs (process-wide, like the store config):
-        # programmatic forms of REPRO_SHUFFLE_BUCKETS /
-        # REPRO_SHUFFLE_SKEW_FACTOR (see core/schedule.py's table)
-        if shuffle_buckets is not None or shuffle_skew_factor is not None:
-            _shuffle.configure(buckets=shuffle_buckets,
-                               skew_factor=shuffle_skew_factor)
+                 shuffle_skew_factor: int | None = None,
+                 max_inflight: int | None = None,
+                 _service: Any | None = None,
+                 _executor: Executor | None = None,
+                 _frames: dict[str, PartitionedFrame] | None = None,
+                 _store: Any | None = None,
+                 _session_id: str | None = None):
+        sid = _session_id or f"s{next(_SESSION_IDS)}"
+        # every knob is SESSION-scoped: it lives in this config, which is
+        # installed (contextvar) around each statement — never written into
+        # process-wide state, so concurrent sessions cannot clobber each
+        # other.  None fields inherit the process default (programmatic
+        # configure() override, else the REPRO_* env knob) — see the table
+        # in core/schedule.py.
+        self._private_store = None
+        store = _store
+        if store is None and (mem_budget_bytes is not None
+                              or spill_dir is not None):
+            # session-PRIVATE out-of-core store: this session's frames and
+            # cached sub-plans charge against its own budget and spill into
+            # its own directory, torn down on close()
+            store = self._private_store = block_store.BlockStore(
+                mem_budget_bytes or 0, spill_dir)
+        self.config = SessionConfig(
+            session_id=sid, store=store,
+            task_retries=task_retries, task_timeout_ms=task_timeout_ms,
+            retry_backoff_ms=retry_backoff_ms,
+            fault_plan=fault_plan, fault_seed=fault_seed,
+            shuffle_buckets=shuffle_buckets,
+            shuffle_skew_factor=shuffle_skew_factor,
+            stats=ExecStats() if _executor is not None else None,
+            max_inflight=max_inflight)
         self.mode = mode
-        self.frames: dict[str, PartitionedFrame] = {}
-        self.executor = Executor(self.frames, cache_budget_bytes=cache_budget_bytes,
-                                 optimize=optimize)
+        self.service = _service
+        self._closed = False
+        if _executor is not None:
+            # service-managed: share the service's executor + frame store
+            # (cross-session MQO and one cache); fid prefix keeps tenants'
+            # source tables distinct
+            self.frames = _frames if _frames is not None else _executor.frames
+            self.executor = _executor
+            self._fid_prefix = f"{sid}_"
+        else:
+            self.frames = {}
+            self.executor = Executor(self.frames,
+                                     cache_budget_bytes=cache_budget_bytes,
+                                     optimize=optimize)
+            self._fid_prefix = ""
         self._ids = itertools.count()
         self._lock = threading.Lock()
         self.default_row_parts = default_row_parts
         self.statements: list[alg.Node] = []   # session history (§3.5)
 
+    @property
+    def stats(self) -> ExecStats:
+        """This session's attribution target: the per-session stats under a
+        shared service executor, else the owned executor's globals."""
+        return self.config.stats or self.executor.stats
+
+    def _require_open(self) -> None:
+        if self._closed:
+            raise ExecutorClosedError(
+                f"session {self.config.session_id} is closed")
+
     # ------------------------------------------------------------------
     def register_frame(self, frame: Frame | PartitionedFrame,
                        row_parts: int | None = None, col_parts: int = 1) -> alg.Source:
         """Ingest a materialized frame; returns its Source node."""
-        if isinstance(frame, Frame):
-            rp = row_parts or self.default_row_parts
-            if rp is None:
-                rp, col_parts = default_grid(frame.nrows, frame.ncols)
-            pf = PartitionedFrame.from_frame(frame, rp, col_parts)
-        else:
-            pf = frame
-        fid = f"frame_{next(self._ids)}"
-        with self._lock:
-            self.frames[fid] = pf
-        return alg.Source(fid, nrows=pf.nrows, ncols=pf.ncols)
+        self._require_open()
+        with _config.scope(self.config):
+            if isinstance(frame, Frame):
+                rp = row_parts or self.default_row_parts
+                if rp is None:
+                    rp, col_parts = default_grid(frame.nrows, frame.ncols)
+                pf = PartitionedFrame.from_frame(frame, rp, col_parts)
+            else:
+                pf = frame
+            fid = f"{self._fid_prefix}frame_{next(self._ids)}"
+            with self._lock:
+                self.frames[fid] = pf
+            return alg.Source(fid, nrows=pf.nrows, ncols=pf.ncols)
 
     # ------------------------------------------------------------------
     def statement(self, node: alg.Node) -> alg.Node:
         """Record a statement; under opportunistic mode, schedule it now —
-        the background work the user gets for free during think time."""
+        the background work the user gets for free during think time.  The
+        scheduled run is cancellable: the returned node carries a
+        :class:`StatementHandle` as ``node.handle``."""
+        self._require_open()
         self.statements.append(node)
-        if self.mode == EvalMode.OPPORTUNISTIC:
-            self.executor.submit(node)
-        elif self.mode == EvalMode.EAGER:
-            self.executor.evaluate(node)
-        # AFTER preparation: this statement becomes an MQO fusion boundary for
-        # *later* plans (§6.2.1), never a barrier against its own fusion
-        self.executor.note_statement(node)
+        with _config.scope(self.config):
+            if self.mode == EvalMode.OPPORTUNISTIC:
+                node.handle = self._submit_scoped(node)
+            elif self.mode == EvalMode.EAGER:
+                self.executor.evaluate(node)
+            # AFTER preparation: this statement becomes an MQO fusion boundary
+            # for *later* plans (§6.2.1), never a barrier against its own
+            # fusion
+            self.executor.note_statement(node)
         return node
 
+    def submit(self, node: alg.Node) -> StatementHandle:
+        """Async statement submission (any mode): schedule ``node`` in the
+        background and return its cancellable :class:`StatementHandle`."""
+        self._require_open()
+        self.statements.append(node)
+        with _config.scope(self.config):
+            handle = self._submit_scoped(node)
+            self.executor.note_statement(node)
+        return handle
+
+    def _submit_scoped(self, node: alg.Node) -> StatementHandle:
+        if self.service is not None:
+            return self.service._submit(self, node)
+        token = CancelToken()
+        fut = self.executor.submit(node, cancel=token)
+        return StatementHandle(node, token, fut)
+
     def collect(self, node: alg.Node) -> Frame:
-        return self.executor.evaluate(node).to_frame()
+        self._require_open()
+        with _config.scope(self.config):
+            return self.executor.evaluate(node).to_frame()
 
     def head(self, node: alg.Node, k: int = 5) -> Frame:
-        return self.executor.evaluate_prefix(node, k).to_frame().head(k)
+        self._require_open()
+        with _config.scope(self.config):
+            return self.executor.evaluate_prefix(node, k).to_frame().head(k)
 
     def tail(self, node: alg.Node, k: int = 5) -> Frame:
-        return self.executor.evaluate(alg.Limit(node, k, tail=True)).to_frame()
+        self._require_open()
+        with _config.scope(self.config):
+            return self.executor.evaluate(alg.Limit(node, k, tail=True)).to_frame()
 
     def close(self):
-        self.executor.shutdown()
-        self.frames.clear()
+        """Tear the session down: in-flight statements FAIL with the typed
+        ``faults.ExecutorClosedError`` (they are never silently abandoned),
+        the session-private store (if any) drops its spill files, and the
+        default-session slot is vacated if this session held it.
+        Idempotent."""
+        global _DEFAULT
+        if self._closed:
+            return
+        self._closed = True
+        if self.service is not None:
+            # shared executor/store belong to the service — only detach
+            self.service._session_closed(self)
+        else:
+            self.executor.shutdown()
+            self.frames.clear()
+        if self._private_store is not None:
+            self._private_store.shutdown()
+        with _DEFAULT_LOCK:
+            if _DEFAULT is self:
+                _DEFAULT = None
 
 
 _DEFAULT: Session | None = None
+_DEFAULT_LOCK = threading.Lock()
 
 
 def get_session() -> Session:
+    """The process default session, created on first use.  Thread-safe
+    (double-checked under a lock — two racing first calls used to build two
+    sessions and leak one executor's background pool) and close-aware: a
+    closed default is replaced, never handed out again."""
     global _DEFAULT
-    if _DEFAULT is None:
-        _DEFAULT = Session()
-    return _DEFAULT
+    s = _DEFAULT
+    if s is not None and not s._closed:
+        return s
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None or _DEFAULT._closed:
+            _DEFAULT = Session()
+        return _DEFAULT
 
 
 def set_session(s: Session) -> Session:
     global _DEFAULT
-    _DEFAULT = s
+    with _DEFAULT_LOCK:
+        _DEFAULT = s
     return s

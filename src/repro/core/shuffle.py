@@ -59,6 +59,7 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from . import algebra as alg
+from . import config as _config
 from .dtypes import Domain
 from .faults import env_int
 from .frame import Column, Frame
@@ -89,9 +90,11 @@ def enabled() -> bool:
 
 def configure(buckets: int | None = None, skew_factor: int | None = None, *,
               clear: bool = False) -> None:
-    """Programmatic override of the shuffle knobs (the
-    ``Session(shuffle_buckets=..., shuffle_skew_factor=...)`` path) — sticky
-    and process-wide, like ``schedule.configure_retries``."""
+    """Process-wide programmatic override of the shuffle knobs — sticky,
+    like ``schedule.configure_retries``.  ``Session(shuffle_buckets=...)``
+    no longer calls this: its values are session-scoped
+    (``config.SessionConfig``) and shadow this override only inside that
+    session's statements."""
     global _BUCKETS_OVERRIDE, _SKEW_OVERRIDE
     if clear:
         _BUCKETS_OVERRIDE = None
@@ -108,8 +111,12 @@ def bucket_count(total_rows: int, key_bytes: int) -> int:
     kernels), raised to the budget floor so a single bucket's key frame never
     exceeds ``schedule.budget_max_block_bytes`` — buckets must stay spillable
     units under ``REPRO_MEM_BUDGET``."""
-    b = (_BUCKETS_OVERRIDE if _BUCKETS_OVERRIDE is not None
-         else env_int("REPRO_SHUFFLE_BUCKETS", 0, minimum=0))
+    cfg = _config.current()
+    if cfg is not None and cfg.shuffle_buckets is not None:
+        b = max(1, cfg.shuffle_buckets)
+    else:
+        b = (_BUCKETS_OVERRIDE if _BUCKETS_OVERRIDE is not None
+             else env_int("REPRO_SHUFFLE_BUCKETS", 0, minimum=0))
     if b <= 0:
         b = max(1, pool_width() * coalesce_factor())
     mb = budget_max_block_bytes()
@@ -120,6 +127,9 @@ def bucket_count(total_rows: int, key_bytes: int) -> int:
 
 def skew_factor() -> int:
     """A bucket holding more than ``skew_factor × mean`` rows splits."""
+    cfg = _config.current()
+    if cfg is not None and cfg.shuffle_skew_factor is not None:
+        return max(1, cfg.shuffle_skew_factor)
     if _SKEW_OVERRIDE is not None:
         return _SKEW_OVERRIDE
     return env_int("REPRO_SHUFFLE_SKEW_FACTOR", 4, minimum=1)

@@ -79,6 +79,7 @@ import numpy as np
 
 from .frame import Column, Frame
 from .dtypes import Domain
+from . import config as _config
 from . import faults as _faults
 from .faults import SpillIntegrityError, StoreClosedError, env_int
 
@@ -322,7 +323,14 @@ class BlockStore:
         self._dir_idx = 0                     # first dir that still has room
         self._closed = False
         self._closed_site: str | None = None
-        self._lock = threading.Lock()
+        # REENTRANT: dead-handle finalizers (_reap) take this lock, and the
+        # cyclic GC can run them on a thread that is already inside a locked
+        # section (any allocation — e.g. _reserve's victim sort — can trigger
+        # a collection).  With a plain Lock that is a self-deadlock; with an
+        # RLock the reentrant _reap is safe because it only adjusts gauges
+        # (resident_bytes, leaked_spill_files), which commute with every
+        # in-flight locked section.
+        self._lock = threading.RLock()
         self._handles: "weakref.WeakSet[BlockHandle]" = weakref.WeakSet()
         self.stats = StoreStats()
 
@@ -634,6 +642,15 @@ def _env_budget() -> int:
 
 
 def get_store() -> BlockStore:
+    """The block store for the *current scope*: a session with its own store
+    (``Session(mem_budget_bytes=...)`` private store, or the shared
+    ``QueryService`` store all tenants charge against) resolves to that store
+    while its ``config.SessionConfig`` is active; everything else gets the
+    process-wide singleton built from ``REPRO_MEM_BUDGET`` /
+    ``REPRO_SPILL_DIR`` (or the sticky :func:`configure` override)."""
+    cfg = _config.current()
+    if cfg is not None and cfg.store is not None:
+        return cfg.store
     global _STORE
     if _STORE is None:
         with _STORE_LOCK:
@@ -656,8 +673,11 @@ def reset_store() -> None:
 
 def configure(budget_bytes: int | None = None,
               spill_dir: str | None = None) -> BlockStore:
-    """Process-wide programmatic override of the env knobs (the
-    ``Session(mem_budget_bytes=...)`` path).  The override is sticky — it
+    """Process-wide programmatic override of the env knobs.
+    ``Session(mem_budget_bytes=...)`` no longer calls this — it builds a
+    session-*private* store resolved through ``config.SessionConfig``, so two
+    sessions with different budgets can no longer clobber each other's spill
+    state.  The override is sticky — it
     outlives the session that set it and shadows ``REPRO_MEM_BUDGET`` until
     changed again.
 

@@ -540,14 +540,25 @@ def test_zero_fault_run_stays_clean(chaos):
 
 
 def test_session_knobs_configure_retries_and_plan(chaos):
+    """Session knobs are SESSION-scoped: they apply inside the session's
+    statements (the installed config scope) and leave the process defaults
+    untouched — two concurrent sessions can no longer clobber each other."""
+    from repro.core import config
+
+    base_retries = schedule.task_retries()
     s = set_session(Session(mode=EvalMode.LAZY, task_retries=5,
                             retry_backoff_ms=0, task_timeout_ms=0,
                             fault_plan="worker:0.0", fault_seed=9))
     try:
-        assert schedule.task_retries() == 5
-        assert schedule.retry_backoff_ms() == 0
-        assert faults.active()
-        p = faults._plan()
-        assert p is not None and p.seed == 9
+        with config.scope(s.config):
+            assert schedule.task_retries() == 5
+            assert schedule.retry_backoff_ms() == 0
+            assert faults.active()
+            p = faults._plan()
+            assert p is not None and p.seed == 9
+        # outside the session's scope the process defaults still hold
+        assert schedule.task_retries() == base_retries
+        assert not faults.active()
+        assert faults._plan() is None
     finally:
         s.close()

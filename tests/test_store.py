@@ -138,6 +138,48 @@ def test_handle_gc_deletes_spill_file(fresh_store, monkeypatch, tmp_path):
     assert not any(p.exists() for p in files)
 
 
+def test_finalizer_under_store_lock_does_not_deadlock(fresh_store, tmp_path):
+    """A dead handle's finalizer (_reap) takes the store lock — and the
+    cyclic GC can run it on a thread that is ALREADY inside a locked store
+    section (any allocation can trigger a collection).  With a non-reentrant
+    lock that is a self-deadlock that froze the whole multi-tenant service
+    (every store user piles up behind the stuck thread)."""
+    import gc
+    import threading
+    from repro.core.store import BlockStore
+
+    store = BlockStore(10**6, str(tmp_path))
+    holder = [None]
+    holder[0] = store.put(_frame(64))      # cycle: only the gc collects it,
+    holder.append(holder)                  # so the finalizer runs IN the gc
+    del holder
+    gc.collect()                           # clear unrelated garbage first
+
+    class Cyc:
+        pass
+
+    c = Cyc()
+    c.h = store.put(_frame(64, seed=1))
+    c.self = c
+    del c
+    gc.disable()                           # keep the dead cycle pending
+    try:
+        done = []
+
+        def inside():
+            with store._lock:              # a mid-operation store section
+                gc.collect()               # runs _reap -> store lock again
+            done.append(True)
+
+        t = threading.Thread(target=inside, daemon=True)
+        t.start()
+        t.join(10)
+        assert done, "finalizer deadlocked against the held store lock"
+    finally:
+        gc.enable()
+    store.shutdown()
+
+
 def test_configure_same_settings_is_nondestructive(fresh_store, monkeypatch):
     """Re-configuring with the current budget must NOT reset the store —
     a second Session(mem_budget_bytes=N) would otherwise delete the first
@@ -298,19 +340,23 @@ def test_outofcore_pipeline_4x_budget(fresh_store, monkeypatch, tmp_path):
                    .agg({"y": "sum", "x": "mean"}).drop_duplicates())
             res = out.collect().to_pydict()
             total = s.frames["frame_0"].nbytes()
-            return res, total, s.executor.stats
+            # snapshot while the frames are live: _handles is a WeakSet, and
+            # close() vacates the default-session slot, so the handles are
+            # collectable afterwards
+            biggest = max((h.nbytes for h in get_store()._handles), default=0)
+            return res, total, s.executor.stats, biggest
         finally:
             s.close()
 
     monkeypatch.delenv("REPRO_MEM_BUDGET", raising=False)
     reset_store()
-    ref, total, st0 = run()
+    ref, total, st0, _ = run()
     assert st0.spills == 0 and st0.peak_resident_bytes == 0
 
     budget = total // 4                    # data is 4× the budget
     monkeypatch.setenv("REPRO_MEM_BUDGET", str(budget))
     reset_store()
-    got, _, st = run()
+    got, _, st, ingest_block = run()
 
     # bit-identical to the unbudgeted run
     assert got == ref
@@ -319,7 +365,7 @@ def test_outofcore_pipeline_4x_budget(fresh_store, monkeypatch, tmp_path):
     store_stats = get_store().stats
     assert store_stats.spills > 0
     one_block = schedule.budget_max_block_bytes()
-    ingest_block = max(h.nbytes for h in get_store()._handles)
+    assert ingest_block > 0
     assert store_stats.peak_resident_bytes <= budget + max(one_block,
                                                            ingest_block)
 
