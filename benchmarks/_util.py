@@ -1,6 +1,11 @@
-"""Benchmark plumbing: timing + the CSV contract (name,us_per_call,derived)."""
+"""Benchmark plumbing: timing + the CSV contract (name,us_per_call,derived),
+plus the provenance stamp every BENCH_*.json carries (commit, pool width,
+knob overrides) so recorded numbers can be traced back to a configuration."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 from typing import Callable
 
@@ -32,6 +37,35 @@ def time_us(fn: Callable, *, reps: int = 3, warmup: int = 1) -> float:
         _force(fn())
         best = min(best, time.perf_counter() - t0)
     return best * 1e6
+
+
+def bench_meta() -> dict:
+    """Provenance for BENCH_*.json: commit hash, pool width, and whichever
+    REPRO_* knobs were overridden when the numbers were recorded."""
+    from repro.core import schedule
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=repo,
+            capture_output=True, text=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        commit = "unknown"
+    return {
+        "commit": commit,
+        "pool_workers": schedule.pool_width(),
+        "knobs": {k: v for k, v in sorted(os.environ.items())
+                  if k.startswith("REPRO_")},
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Write one BENCH_*.json with the provenance stamp under ``meta``."""
+    doc = dict(payload)
+    doc["meta"] = bench_meta()
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
 
 
 class Reporter:

@@ -21,7 +21,6 @@ Numbers land in ``BENCH_blocking_fusion.json``.
 """
 from __future__ import annotations
 
-import json
 import os
 
 # standalone runs mirror benchmarks/run.py: one partition ↔ one core (the
@@ -39,7 +38,7 @@ from repro.core.frame import Column, Frame
 from repro.core.labels import RangeLabels, labels_from_values
 from repro.core.partition import PartitionedFrame
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_blocking_fusion.json")
@@ -158,10 +157,9 @@ def run(rep: Reporter, smoke: bool = False) -> None:
         _bench(rep, 100_000, 16, reps=5),
         _bench(rep, 200_000, 16, reps=5),
     ]
-    with open(_JSON_PATH, "w") as f:
-        json.dump({"benchmark": "barrier fusion through blocking operators",
-                   "results": results}, f, indent=2)
-        f.write("\n")
+    write_bench_json(_JSON_PATH, {
+        "benchmark": "barrier fusion through blocking operators",
+        "results": results})
 
 
 def main() -> None:

@@ -22,7 +22,6 @@ map→filter→drop_duplicates (target ≥ 1.5×).
 """
 from __future__ import annotations
 
-import json
 import os
 
 # standalone runs mirror benchmarks/run.py: one partition ↔ one core, set
@@ -41,7 +40,7 @@ from repro.core.frame import Column, Frame
 from repro.core.labels import RangeLabels, labels_from_values
 from repro.core.partition import PartitionedFrame
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_dedup.json")
 
@@ -204,13 +203,12 @@ def run(rep: Reporter, smoke: bool = False) -> None:
             _bench(rep, 100_000, 16, reps=2),
             _bench(rep, 200_000, 16, reps=2),
         ]
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"benchmark":
-                       "block-parallel + fused DIFFERENCE/DROP-DUPLICATES "
-                       "vs the serial seed path",
-                       "pool_workers": schedule.pool_width(),
-                       "results": results}, f, indent=2)
-            f.write("\n")
+        write_bench_json(_JSON_PATH, {
+            "benchmark":
+            "block-parallel + fused DIFFERENCE/DROP-DUPLICATES "
+            "vs the serial seed path",
+            "pool_workers": schedule.pool_width(),
+            "results": results})
     finally:
         if saved is None:
             os.environ.pop("REPRO_POOL_WORKERS", None)

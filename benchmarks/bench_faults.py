@@ -17,7 +17,6 @@ Correctness is asserted before timing, as in the other suites.
 """
 from __future__ import annotations
 
-import json
 import os
 import tempfile
 
@@ -33,7 +32,7 @@ from repro.core import faults, schedule
 from repro.core.api import read_csv
 from repro.core.store import get_store, reset_store
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
 
@@ -187,14 +186,13 @@ def run(rep: Reporter, smoke: bool = False) -> None:
         # for the retry machinery (ISSUE 6 acceptance: ≤ 1%)
         assert overhead["overhead_pct"] <= 1.0, (
             f"retry machinery overhead {overhead['overhead_pct']:.2f}% > 1%")
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"benchmark":
-                       "fault-tolerant execution (retry/recompute/"
-                       "degradation) — zero-fault overhead + 5%-chaos "
-                       "completion",
-                       "pool_workers": schedule.pool_width(),
-                       "overhead": overhead, "chaos": chaos}, f, indent=2)
-            f.write("\n")
+        write_bench_json(_JSON_PATH, {
+            "benchmark":
+            "fault-tolerant execution (retry/recompute/"
+            "degradation) — zero-fault overhead + 5%-chaos "
+            "completion",
+            "pool_workers": schedule.pool_width(),
+            "overhead": overhead, "chaos": chaos})
     finally:
         if saved is None:
             os.environ.pop("REPRO_POOL_WORKERS", None)

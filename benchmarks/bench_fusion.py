@@ -16,7 +16,6 @@ recorded alongside the ``ExecStats`` fusion counters that attribute it.
 """
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
@@ -29,7 +28,7 @@ from repro.core.frame import Column, Frame
 from repro.core.labels import RangeLabels, labels_from_values
 from repro.core.partition import PartitionedFrame
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fusion.json")
 
@@ -127,10 +126,8 @@ def run(rep: Reporter, smoke: bool = False) -> None:
         _bench(rep, 100_000, 16, reps=5),
         _bench(rep, 200_000, 32, reps=5),
     ]
-    with open(_JSON_PATH, "w") as f:
-        json.dump({"benchmark": "fused blockwise pipelines", "results": results},
-                  f, indent=2)
-        f.write("\n")
+    write_bench_json(_JSON_PATH, {
+        "benchmark": "fused blockwise pipelines", "results": results})
 
 
 def main() -> None:

@@ -18,7 +18,6 @@ Correctness is asserted before timing, as in the other suites.
 """
 from __future__ import annotations
 
-import json
 import os
 import tempfile
 
@@ -34,7 +33,7 @@ from repro.core import schedule
 from repro.core.api import read_csv
 from repro.core.store import get_store, reset_store
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_outofcore.json")
 
@@ -196,13 +195,12 @@ def run(rep: Reporter, smoke: bool = False) -> None:
         # numbers with a sub-threshold artifact
         assert ingest["speedup"] >= 1.5, (
             f"ingest speedup regressed: {ingest['speedup']:.2f}x < 1.5x")
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"benchmark":
-                       "out-of-core block store + streaming CSV ingest "
-                       "(spill/fault residency under REPRO_MEM_BUDGET)",
-                       "pool_workers": schedule.pool_width(),
-                       "ingest": ingest, "outofcore": ooc}, f, indent=2)
-            f.write("\n")
+        write_bench_json(_JSON_PATH, {
+            "benchmark":
+            "out-of-core block store + streaming CSV ingest "
+            "(spill/fault residency under REPRO_MEM_BUDGET)",
+            "pool_workers": schedule.pool_width(),
+            "ingest": ingest, "outofcore": ooc})
     finally:
         if saved is None:
             os.environ.pop("REPRO_POOL_WORKERS", None)

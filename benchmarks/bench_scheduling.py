@@ -22,7 +22,6 @@ Numbers land in ``BENCH_scheduling.json``.
 """
 from __future__ import annotations
 
-import json
 import os
 
 # standalone runs mirror benchmarks/run.py: one partition ↔ one core, set
@@ -42,7 +41,7 @@ from repro.core.labels import RangeLabels, labels_from_values
 from repro.core.partition import PartitionedFrame
 from repro.core.physical import _frames_bit_equal
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_scheduling.json")
@@ -189,11 +188,10 @@ def run(rep: Reporter, smoke: bool = False) -> None:
             _bench(rep, 20_000, 16, reps=1)
             return
         results = [_bench(rep, 200_000, p, reps=5) for p in (4, 16, 64, 256)]
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"benchmark": "adaptive block scheduling vs per-block dispatch",
-                       "pool_workers": schedule.pool_width(),
-                       "results": results}, f, indent=2)
-            f.write("\n")
+        write_bench_json(_JSON_PATH, {
+            "benchmark": "adaptive block scheduling vs per-block dispatch",
+            "pool_workers": schedule.pool_width(),
+            "results": results})
     finally:
         if saved is None:
             os.environ.pop("REPRO_POOL_WORKERS", None)

@@ -15,7 +15,6 @@ must be bit-identical to a serial, isolated run of its stream.
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 import time
@@ -33,7 +32,7 @@ from repro.core.dtypes import Domain
 from repro.core.frame import Column, Frame
 from repro.core.labels import RangeLabels, labels_from_values
 
-from ._util import Reporter
+from ._util import Reporter, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_service.json")
 
@@ -181,13 +180,12 @@ def run(rep: Reporter, smoke: bool = False) -> None:
             _bench(rep, 4, 2, 10.0, 20_000, gate=False)
             return
         result = _bench(rep, 16, 8, 30.0, 100_000, gate=True)
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"benchmark":
-                       "concurrent multi-session query service — aggregate "
-                       "qps of 16 think-time tenants vs 1 on a 2-worker "
-                       "pool (admission control + cross-session MQO)",
-                       "service": result}, f, indent=2)
-            f.write("\n")
+        write_bench_json(_JSON_PATH, {
+            "benchmark":
+            "concurrent multi-session query service — aggregate "
+            "qps of 16 think-time tenants vs 1 on a 2-worker "
+            "pool (admission control + cross-session MQO)",
+            "service": result})
     finally:
         if saved is None:
             os.environ.pop("REPRO_POOL_WORKERS", None)

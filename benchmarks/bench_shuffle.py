@@ -26,7 +26,6 @@ each chain (target ≥ 1.5×, 2 workers).
 """
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import tempfile
@@ -48,7 +47,7 @@ from repro.core.labels import RangeLabels, labels_from_values
 from repro.core.partition import PartitionedFrame
 from repro.core.store import get_store, reset_store
 
-from ._util import Reporter, time_us
+from ._util import Reporter, time_us, write_bench_json
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_shuffle.json")
 
@@ -320,14 +319,12 @@ def run(rep: Reporter, smoke: bool = False) -> None:
             return
         results = _bench(rep, 100_000, 16, reps=2)
         budget = _budget_report(rep, 40_000, 16)
-        with open(_JSON_PATH, "w") as f:
-            json.dump({"benchmark":
-                       "shuffle-native JOIN/SORT (grace-hash + sample-sort "
-                       "exchange) vs the serial seed path",
-                       "pool_workers": schedule.pool_width(),
-                       "results": results, "join_4x_budget": budget},
-                      f, indent=2)
-            f.write("\n")
+        write_bench_json(_JSON_PATH, {
+            "benchmark":
+            "shuffle-native JOIN/SORT (grace-hash + sample-sort "
+            "exchange) vs the serial seed path",
+            "pool_workers": schedule.pool_width(),
+            "results": results, "join_4x_budget": budget})
     finally:
         if saved is None:
             os.environ.pop("REPRO_POOL_WORKERS", None)

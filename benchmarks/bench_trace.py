@@ -1,0 +1,202 @@
+"""Statement tracing: disabled-path overhead + traced chaos exactness.
+
+Two scenarios, numbers landing in ``BENCH_trace.json``:
+
+  * ``overhead``  — the bench_scheduling fused chain (map→filter→groupby,
+                    200k rows × 64 partitions on a pinned ≤8-worker pool) run
+                    with tracing *disabled* vs a stripped baseline where
+                    ``trace.current`` is monkeypatched to a constant-None
+                    lambda (approximating the pre-instrumentation code path).
+                    The disabled path must cost ≤1% — it allocates no spans,
+                    only a handful of resolution checks per dispatch.
+  * ``chaos``     — a traced lazy statement under a seeded fault plan with a
+                    4x-over-budget spill pipeline: asserts the span-attached
+                    counter deltas sum *exactly* to the global ExecStats
+                    movement for the statement, exports the Chrome trace and
+                    validates it against the trace-event schema.
+
+Passes are interleaved (A/B/A/B…) and best-of, shielding the ratio from
+thermal/load drift on a shared box.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+# standalone runs mirror benchmarks/run.py: one partition ↔ one core, set
+# before jax initializes
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import algebra as alg
+from repro.core import schedule
+from repro.core import trace as trace_mod
+from repro.core.dtypes import Domain
+from repro.core.executor import Executor
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.session import Session
+
+from ._util import Reporter, time_us, write_bench_json
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_trace.json")
+
+_DELTA_KEYS = ("spills", "faults", "spilled_bytes", "checksum_failures",
+               "recomputed_blocks", "budget_overruns", "faults_injected")
+
+
+def _mk_frame(n_rows: int, seed: int = 5) -> Frame:
+    rng = np.random.default_rng(seed)
+    cols = [
+        Column(jnp.asarray(rng.integers(0, 8, n_rows, dtype=np.int32)), Domain.INT),
+        Column(jnp.asarray(rng.integers(-1000, 1000, n_rows, dtype=np.int32)), Domain.INT),
+        Column(jnp.asarray(rng.standard_normal(n_rows).astype(np.float32)), Domain.FLOAT),
+    ]
+    return Frame(cols, RangeLabels(n_rows), labels_from_values(["k", "v", "x"]))
+
+
+def _scale() -> alg.Udf:
+    def fn(cols, frame):
+        out = dict(cols)
+        c = cols["x"]
+        out["x"] = Column(c.data * 2.0 + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+    return alg.Udf(name="trace_bench_scale", fn=fn,
+                   deps=frozenset(["x"]), elementwise=True)
+
+
+def _chain(src: alg.Node) -> alg.Node:
+    return alg.GroupBy(
+        alg.Selection(alg.Map(src, _scale()), alg.col("v") > alg.lit(0)),
+        ("k",), [("x", "sum", "xs"), ("x", "mean", "xm"), ("v", "count", "vc")])
+
+
+def _overhead(rep: Reporter, n_rows: int, row_parts: int, reps: int) -> dict:
+    """Tracing-disabled vs stripped baseline on the bench_scheduling chain."""
+    from repro.core.partition import PartitionedFrame
+    pf = PartitionedFrame.from_frame(_mk_frame(n_rows), row_parts=row_parts)
+    store = {"bench": pf}
+    plan = _chain(alg.Source("bench", nrows=pf.nrows, ncols=pf.ncols))
+    ex = Executor(store, optimize=True)
+
+    def run():
+        ex.cache.clear()
+        return ex.evaluate(plan)
+
+    real_current = trace_mod.current
+    stripped = lambda *a, **k: None  # noqa: E731
+    impls = {"stripped": stripped, "disabled": real_current}
+    times = {"stripped": float("inf"), "disabled": float("inf")}
+    try:
+        # Interleave stripped (current ≡ None) vs disabled (real resolution),
+        # alternating the order each pass: min-of-many on both sides cancels
+        # the ±10% load drift a shared/1-core box shows between back-to-back
+        # passes of *identical* code.
+        order = list(impls)
+        for i in range(8):
+            for mode in (order if i % 2 == 0 else order[::-1]):
+                trace_mod.current = impls[mode]
+                times[mode] = min(times[mode], time_us(run, reps=reps))
+    finally:
+        trace_mod.current = real_current
+
+    assert trace_mod.current is real_current
+    overhead_pct = (times["disabled"] / max(times["stripped"], 1e-9) - 1) * 100
+    rep.add(f"trace/disabled_overhead[{n_rows}x{row_parts}]",
+            times["disabled"], f"overhead={overhead_pct:+.2f}%")
+    return {"rows": n_rows, "row_parts": row_parts,
+            "pool_workers": schedule.pool_width(),
+            "stripped_us": round(times["stripped"], 1),
+            "disabled_us": round(times["disabled"], 1),
+            "overhead_pct": round(overhead_pct, 2)}
+
+
+def _chaos(rep: Reporter, n_rows: int) -> dict:
+    """Traced statement under faults + 4x-over-budget spill: exactness +
+    Chrome-schema validity of the export."""
+    import repro.core.api as api
+    data = {"a": np.arange(n_rows, dtype=np.float64),
+            "b": (np.arange(n_rows) % 97).astype(np.float64)}
+    nbytes = n_rows * 8 * 2
+    s = Session(mode="lazy", trace=True, mem_budget_bytes=nbytes // 4,
+                fault_plan="worker:0.2,corrupt:0.5,enospc:0.5", fault_seed=7)
+    try:
+        df = api.from_pydict(data, session=s)
+        q = df[df["a"] > 1000.0].groupby("b").agg({"a": ["sum", "mean"]})
+        st0 = dataclasses.replace(s.stats)
+        us = time_us(q.collect, reps=1, warmup=0)
+        st1 = s.stats
+        tr = s.tracer
+        assert tr is not None and tr.open_spans() == 0, "leaked open spans"
+
+        stmt = tr.last_stmt
+        totals = tr.counter_totals(stmt)
+        deltas = {k: getattr(st1, k) - getattr(st0, k) for k in _DELTA_KEYS}
+        exact = all(totals.get(k, 0) == deltas[k] for k in _DELTA_KEYS)
+        assert exact, f"span deltas != ExecStats: {totals} vs {deltas}"
+
+        with tempfile.TemporaryDirectory() as td:
+            path = s.trace_json(os.path.join(td, "chaos_trace.json"))
+            import json
+            doc = json.load(open(path))
+        n_events = trace_mod.validate_chrome_trace(doc)
+        prof = tr.profile(stmt)
+        rep.add(f"trace/chaos[{n_rows}]", us,
+                f"spans={prof['spans']} events={n_events} exact={exact}")
+        return {"rows": n_rows, "wall_us": round(us, 1),
+                "spans": prof["spans"], "chrome_events": n_events,
+                "faults_fired": len(prof["faults_fired"]),
+                "store": prof["store"],
+                "counter_deltas": {k: int(deltas[k]) for k in _DELTA_KEYS},
+                "deltas_exact": exact}
+    finally:
+        s.close()
+
+
+def run(rep: Reporter, smoke: bool = False) -> None:
+    # Pin a ≤8-worker pool for THIS suite only (same regime as the
+    # bench_scheduling workload the overhead criterion is defined on), and
+    # restore the surrounding pool afterwards.
+    saved = os.environ.get("REPRO_POOL_WORKERS")
+    os.environ["REPRO_POOL_WORKERS"] = saved or str(min(8, os.cpu_count() or 4))
+    schedule.reset_pool()
+    try:
+        if smoke:
+            # sanity only: don't overwrite the recorded full-size numbers
+            _overhead(rep, 20_000, 16, reps=1)
+            _chaos(rep, 50_000)
+            return
+        overhead = _overhead(rep, 200_000, 64, reps=5)
+        chaos = _chaos(rep, 200_000)
+        write_bench_json(_JSON_PATH, {
+            "benchmark":
+            "statement tracing — disabled-path overhead on the "
+            "bench_scheduling chain + traced chaos exactness "
+            "(span counter deltas == ExecStats)",
+            "pool_workers": schedule.pool_width(),
+            "overhead": overhead, "chaos": chaos})
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_POOL_WORKERS", None)
+        else:
+            os.environ["REPRO_POOL_WORKERS"] = saved
+        schedule.reset_pool()
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, single rep (CI sanity mode)")
+    args = ap.parse_args()
+    rep = Reporter()
+    print("name,us_per_call,derived")
+    run(rep, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

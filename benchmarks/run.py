@@ -28,6 +28,9 @@
   service       concurrent multi-session query service: 16 think-time
                 tenants vs 1 on a 2-worker pool — admission control +
                 cross-session MQO (also writes BENCH_service.json)
+  trace         statement tracing: disabled-path overhead on the scheduling
+                chain + traced chaos span/ExecStats exactness
+                (also writes BENCH_trace.json)
 
 Prints ``name,us_per_call,derived`` CSV.  Select with ``--only fig6,reuse``.
 ``--smoke`` runs every suite at tiny sizes with no JSON/artifact overwrite —
@@ -62,7 +65,7 @@ def main() -> None:
                    bench_faults, bench_fig6, bench_fusion,
                    bench_opportunistic, bench_outofcore, bench_reuse,
                    bench_rewrite, bench_roofline, bench_scheduling,
-                   bench_service, bench_shuffle)
+                   bench_service, bench_shuffle, bench_trace)
     suites = {
         "fig6": bench_fig6.run,
         "opportunistic": bench_opportunistic.run,
@@ -78,6 +81,7 @@ def main() -> None:
         "faults": bench_faults.run,
         "shuffle": bench_shuffle.run,
         "service": bench_service.run,
+        "trace": bench_trace.run,
     }
     picked = suites if args.only == "all" else {
         k: suites[k] for k in args.only.split(",")}

@@ -253,5 +253,55 @@ if [[ "$leaked" -ne 0 ]]; then
 fi
 rm -rf "$svc_tmp"
 
+# trace smoke: the chaos spill pipeline again, this time under the statement
+# tracer — the traced run must stay bit-identical to the untraced run, the
+# exported span tree must validate against the Chrome trace-event schema
+# with no span left open, and the teardown must leave ZERO spill files.
+trace_tmp=$(mktemp -d)
+REPRO_SPILL_DIR="$trace_tmp" REPRO_POOL_WORKERS=2 REPRO_RETRY_BACKOFF_MS=1 \
+python - <<'PY'
+import json, os, tempfile
+import numpy as np
+from repro.core import EvalMode, Session, trace
+import repro.core.api as api
+
+n = 20_000
+data = {"a": np.arange(n, dtype=np.float64),
+        "b": (np.arange(n) % 53).astype(np.float64)}
+
+def run(traced):
+    s = Session(mode=EvalMode.LAZY, trace=traced,
+                mem_budget_bytes=n * 8 // 2,
+                fault_plan="worker:0.2,corrupt:0.5,enospc:0.5", fault_seed=7)
+    try:
+        df = api.from_pydict(data, session=s)
+        q = df[df["a"] > 100.0].groupby("b").agg({"a": ["sum", "mean"]})
+        got = q.collect().to_pydict()
+        tr = s.tracer
+        if traced:
+            assert tr is not None and tr.open_spans() == 0, "leaked open spans"
+            path = s.trace_json(os.path.join(tempfile.mkdtemp(), "t.json"))
+            doc = json.load(open(path))
+            n_ev = trace.validate_chrome_trace(doc)
+            assert n_ev > 0, "traced chaos run exported an empty span tree"
+            os.remove(path)
+        else:
+            assert tr is None, "tracing leaked into the untraced run"
+        return got
+    finally:
+        s.close()
+
+ref = run(traced=False)
+got = run(traced=True)
+assert got == ref, "traced chaos run diverged from the untraced run"
+PY
+leaked=$(find "$trace_tmp" -type f | wc -l)
+if [[ "$leaked" -ne 0 ]]; then
+    echo "ERROR: $leaked leaked spill file(s) under $trace_tmp (trace)" >&2
+    find "$trace_tmp" -type f >&2
+    exit 1
+fi
+rm -rf "$trace_tmp"
+
 # full-size numbers: python -m benchmarks.run  (writes BENCH_*.json)
 python -m benchmarks.run --smoke

@@ -21,3 +21,4 @@ from .service import QueryService  # noqa: F401
 from .session import (  # noqa: F401
     EvalMode, Session, StatementHandle, get_session, set_session)
 from .store import BlockHandle, BlockStore, get_store, reset_store  # noqa: F401
+from .trace import Metrics, Tracer  # noqa: F401

@@ -38,7 +38,7 @@ from typing import Any, Iterator
 
 __all__ = [
     "SessionConfig", "CancelToken", "current", "current_cancel",
-    "scope", "propagate",
+    "current_trace_ctx", "scope", "propagate",
 ]
 
 
@@ -72,6 +72,9 @@ class SessionConfig:
     shuffle_skew_factor: int | None = None
     stats: Any | None = None
     max_inflight: int | None = None
+    # session tracer (trace.Tracer) — None inherits the process default
+    # (REPRO_TRACE); False forces tracing off for this session
+    trace: Any | None = None
     # compiled FaultPlan cache (faults._plan fills it; never hashed/compared)
     _plan_cache: Any | None = dataclasses.field(
         default=None, repr=False, compare=False)
@@ -103,6 +106,12 @@ _ACTIVE: contextvars.ContextVar[SessionConfig | None] = contextvars.ContextVar(
     "repro-session-config", default=None)
 _CANCEL: contextvars.ContextVar[CancelToken | None] = contextvars.ContextVar(
     "repro-cancel-token", default=None)
+# current trace span (trace.Span) — the parent for spans opened below it;
+# propagate() carries it onto pool-worker threads so chunk spans parent to
+# the dispatch span that submitted them
+_TRACE_CTX: contextvars.ContextVar[Any | None] = contextvars.ContextVar(
+    "repro-trace-ctx", default=None)
+_TRACE_UNSET = object()
 
 
 def current() -> SessionConfig | None:
@@ -114,6 +123,12 @@ def current() -> SessionConfig | None:
 def current_cancel() -> CancelToken | None:
     """The active statement's cancellation token on this thread, if any."""
     return _CANCEL.get()
+
+
+def current_trace_ctx() -> Any | None:
+    """The current trace span on this thread (parent for new spans), if
+    tracing is active; None otherwise."""
+    return _TRACE_CTX.get()
 
 
 @contextlib.contextmanager
@@ -129,18 +144,24 @@ def scope(cfg: SessionConfig | None) -> Iterator[SessionConfig | None]:
 
 @contextlib.contextmanager
 def propagate(cfg: SessionConfig | None,
-              cancel: CancelToken | None = None) -> Iterator[None]:
-    """Re-install a config (+ cancel token) captured on another thread —
-    the bridge ``schedule.dispatch_blocks`` and ``Executor.submit`` use to
-    carry session scope into pool-worker / background threads (contextvars
-    are per-thread, so they do not cross ``ThreadPoolExecutor.submit``)."""
-    if cfg is None and cancel is None:
+              cancel: CancelToken | None = None,
+              trace: Any | None = None) -> Iterator[None]:
+    """Re-install a config (+ cancel token, + parent trace span) captured on
+    another thread — the bridge ``schedule.dispatch_blocks`` and
+    ``Executor.submit`` use to carry session scope into pool-worker /
+    background threads (contextvars are per-thread, so they do not cross
+    ``ThreadPoolExecutor.submit``).  ``trace`` is the dispatching side's
+    current span: spans the worker opens parent to it, which is how one
+    statement's span tree crosses thread boundaries."""
+    if cfg is None and cancel is None and trace is None:
         yield
         return
     t_cfg = _ACTIVE.set(cfg)
     t_can = _CANCEL.set(cancel)
+    t_trc = _TRACE_CTX.set(trace)
     try:
         yield
     finally:
+        _TRACE_CTX.reset(t_trc)
         _CANCEL.reset(t_can)
         _ACTIVE.reset(t_cfg)

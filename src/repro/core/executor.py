@@ -40,6 +40,7 @@ from .frame import Frame
 from .partition import PartitionedFrame, default_grid
 from . import config as _config
 from . import faults as _faults
+from . import trace as _trace
 from .faults import ExecutorClosedError, StatementCancelled
 from .schedule import node_scope, stats_scope
 from .store import get_store
@@ -168,8 +169,23 @@ class ExecStats:
                                     side, an oversized sort bucket range-
                                     refines; 0 on balanced keys.
 
-    Each distinct plan is counted once — re-evaluating a cached statement is
-    not new fusion work.
+    Timing counters (``core.trace`` PR) — wall-clock attribution in
+    nanoseconds, always on (one ``perf_counter_ns`` pair per window; the
+    span *tree* itself only exists under ``REPRO_TRACE``/``Session(trace=)``):
+
+      * ``node_wall_ns``          — time inside physical node programs (each
+                                    node's own run window; children are timed
+                                    in their own windows, never double-
+                                    counted);
+      * ``plan_prep_ns``          — time in plan preparation (rewrite +
+                                    fusion) per statement;
+      * ``queue_wait_ns``         — time async statements waited in the
+                                    admission queue (``core.service``) before
+                                    getting an inflight slot;
+      * ``slot_hold_ns``          — time admitted statements held their slot
+                                    (queue_wait + slot_hold ≈ the tenant's
+                                    pool pressure: ``QueryService.
+                                    tenant_report`` ranks sessions by these).
     """
 
     evaluated_nodes: int = 0
@@ -201,6 +217,10 @@ class ExecStats:
     shuffle_buckets: int = 0
     shuffle_bytes: int = 0
     skew_splits: int = 0
+    node_wall_ns: int = 0
+    plan_prep_ns: int = 0
+    queue_wait_ns: int = 0
+    slot_hold_ns: int = 0
 
     @property
     def blocks_per_dispatch(self) -> float:
@@ -381,23 +401,43 @@ class Executor:
     # ------------------------------------------------------------------
     # synchronous evaluation (with cache + in-flight dedupe)
     # ------------------------------------------------------------------
-    def evaluate(self, node: alg.Node) -> PartitionedFrame:
+    def evaluate(self, node: alg.Node, *,
+                 stmt: int | None = None) -> PartitionedFrame:
         # plan preparation can touch the store too (schema inference
         # resolves a source block, which may fault a spilled one back in) —
         # attribute that residency work here so statement execution accounts
         # for EVERY spill/fault/recompute, not just the per-node windows
         self._require_open()
+        tr = _trace.current()
+        st = self._stats()
         s0 = get_store().stats.snapshot()
         f0 = _faults.injected_total()
-        prepared = self._prepared(node)
-        self._attribute_store_delta(s0, f0)
-        return self._eval(prepared)
+        if tr is None:
+            tp0 = time.perf_counter_ns()
+            prepared = self._prepared(node)
+            st.plan_prep_ns += time.perf_counter_ns() - tp0
+            self._attribute_store_delta(s0, f0)
+            return self._eval(prepared)
+        with tr.statement(f"statement:{node.op}", stmt=stmt):
+            tp0 = time.perf_counter_ns()
+            with tr.span("plan_prep", "prep") as sp:
+                prepared = self._prepared(node)
+                sp.args = self._attribute_store_delta(s0, f0, want_delta=True)
+            st.plan_prep_ns += time.perf_counter_ns() - tp0
+            return self._eval(prepared)
 
-    def _attribute_store_delta(self, s0, f0) -> None:
+    def _attribute_store_delta(self, s0, f0,
+                               want_delta: bool = False) -> dict | None:
         """Fold the store/fault counter movement since snapshot ``s0`` /
         injected-count ``f0`` into this executor's ``ExecStats`` — and into
         the active session's per-session stats when one is installed, so
-        multi-tenant attribution sums to the global counters."""
+        multi-tenant attribution sums to the global counters.
+
+        ``want_delta=True`` (traced runs) additionally returns the delta as a
+        dict, which the caller attaches to the window's span — spans carry
+        exactly the counters ExecStats was credited with, which is why a
+        statement's span-attached deltas sum to its global ExecStats movement
+        (asserted by ``benchmarks/bench_trace.py`` and the CI trace smoke)."""
         s1 = get_store().stats.snapshot()
         df = _faults.injected_total() - f0
         cfg = _config.current()
@@ -418,6 +458,23 @@ class Executor:
                 # earlier session's peak from the process-wide gauge
                 if s1[3] > s0[3] and s1[3] > t.peak_resident_bytes:
                     t.peak_resident_bytes = s1[3]
+        if not want_delta:
+            return None
+        return {"spills": s1[0] - s0[0], "faults": s1[1] - s0[1],
+                "spilled_bytes": s1[2] - s0[2],
+                "checksum_failures": s1[4] - s0[4],
+                "recomputed_blocks": s1[5] - s0[5],
+                "budget_overruns": s1[6] - s0[6],
+                "faults_injected": df}
+
+    def _hit_event(self, node: alg.Node, *, inflight: bool = False) -> None:
+        """Cache-hit provenance for traced statements: an instant event names
+        the plan node a cached (or in-flight) result served, so ``profile()``
+        can say which sub-plans the MQO layer reused.  No-op untraced."""
+        tr = _trace.current()
+        if tr is not None:
+            kind = "inflight_join" if inflight else "cache_hit"
+            tr.instant(f"{kind}:{node.op}", "cache")
 
     def _join(self, fut: _fut.Future, node: alg.Node) -> PartitionedFrame:
         """Join another statement's in-flight evaluation.  If that producer
@@ -447,10 +504,12 @@ class Executor:
             else:
                 fut = self._inflight.get(key)
         if ent is not None:
+            self._hit_event(node)
             self._sync_store_benefit(ent)
             return ent.result
         if fut is not None:
             st.inflight_joins += 1
+            self._hit_event(node, inflight=True)
             return self._join(fut, node)
 
         promise: _fut.Future = _fut.Future()
@@ -468,10 +527,12 @@ class Executor:
                 else:
                     self._inflight[key] = promise
         if ent is not None:
+            self._hit_event(node)
             self._sync_store_benefit(ent)   # same policy as the fast path
             return ent.result
         if fut is not None:
             st.inflight_joins += 1
+            self._hit_event(node, inflight=True)
             return self._join(fut, node)
 
         try:
@@ -486,9 +547,23 @@ class Executor:
                 # the contextvar scope can't see them
                 s0 = get_store().stats.snapshot()
                 f0 = _faults.injected_total()
-                with stats_scope(st), node_scope(node.op):
-                    result = physical.run_node(node, inputs, st)
-                self._attribute_store_delta(s0, f0)
+                tr = _trace.current()
+                tn0 = time.perf_counter_ns()
+                if tr is None:
+                    with stats_scope(st), node_scope(node.op):
+                        result = physical.run_node(node, inputs, st)
+                    self._attribute_store_delta(s0, f0)
+                else:
+                    # children were evaluated above, in their own windows, so
+                    # this span's duration and counter delta are exactly this
+                    # node's own work — per-statement spans partition the
+                    # statement's ExecStats movement
+                    with tr.span(f"eval:{node.op}", "node") as span:
+                        with stats_scope(st), node_scope(node.op):
+                            result = physical.run_node(node, inputs, st)
+                        span.args = self._attribute_store_delta(
+                            s0, f0, want_delta=True)
+                st.node_wall_ns += time.perf_counter_ns() - tn0
             dt = time.monotonic() - t0
             st.evaluated_nodes += 1
             self._store(key, result, dt)
@@ -556,7 +631,8 @@ class Executor:
     # opportunistic background scheduling (§6.1.1)
     # ------------------------------------------------------------------
     def submit(self, node: alg.Node, *,
-               cancel: _config.CancelToken | None = None) -> _fut.Future:
+               cancel: _config.CancelToken | None = None,
+               stmt: int | None = None) -> _fut.Future:
         """Schedule evaluation in the background; returns a future.  The
         user-facing handle keeps composing; an inspect call joins it.
 
@@ -564,17 +640,37 @@ class Executor:
         on the background thread (contextvars are per-thread, so they do not
         cross ``ThreadPoolExecutor.submit`` by themselves).  ``cancel`` makes
         the background run cancellable at the next dispatch boundary — the
-        run raises the typed ``faults.StatementCancelled``."""
+        run raises the typed ``faults.StatementCancelled``.  ``stmt`` is the
+        trace statement id allocated at submission time (``Session.submit`` /
+        the admission controller), so the plan-prep span here, the queue-wait
+        span, and the statement span opened on the background thread all land
+        in one per-statement tree."""
         self._require_open()
-        node = self._prepared(node)
-        self._stats().background_tasks += 1
+        tr = _trace.current()
+        st = self._stats()
+        tp0 = time.perf_counter_ns()
+        if tr is None:
+            node = self._prepared(node)
+        else:
+            if stmt is None:
+                stmt = tr.next_stmt()
+            s0 = get_store().stats.snapshot()
+            f0 = _faults.injected_total()
+            with tr.span("plan_prep", "prep", stmt=stmt) as sp:
+                node = self._prepared(node)
+                sp.args = self._attribute_store_delta(s0, f0, want_delta=True)
+        st.plan_prep_ns += time.perf_counter_ns() - tp0
+        st.background_tasks += 1
         cfg = _config.current()
         if cancel is None:
             cancel = _config.current_cancel()
 
         def run() -> PartitionedFrame:
             with _config.propagate(cfg, cancel):
-                return self._eval(node)
+                if tr is None:
+                    return self._eval(node)
+                with tr.statement(f"statement:{node.op}", stmt=stmt):
+                    return self._eval(node)
 
         return self._bg.submit(run)
 

@@ -268,7 +268,7 @@ class FaultPlan:
                 if kind in ("corrupt", "missing") and not recoverable:
                     continue
             if _draw(self.seed, kind, address) < r.rate:
-                _record(kind)
+                _record(kind, address)
                 return True
         return False
 
@@ -284,11 +284,17 @@ _COUNTS: dict[str, int] = {}
 _TOTAL = 0
 
 
-def _record(kind: str) -> None:
+def _record(kind: str, address: str = "") -> None:
     global _TOTAL
     with _LOCK:
         _COUNTS[kind] = _COUNTS.get(kind, 0) + 1
         _TOTAL += 1
+    # trace imports this module, so the tracer is resolved lazily — and only
+    # on the fault-firing path, which is never the production hot path
+    from . import trace as _trace
+    tr = _trace.current()
+    if tr is not None:
+        tr.instant(f"fault:{kind}", "fault", args={"at": address})
 
 
 def injected_total() -> int:

@@ -122,6 +122,16 @@ Environment knobs (the one table — referenced from ROADMAP.md)
                            ``QueryService`` (default 2); excess submissions
                            queue in the admission controller
                            (FIFO-with-aging) until a slot frees
+``REPRO_TRACE``            statement tracing (``core.trace``): ``1`` records
+                           per-statement span trees (plan prep → node eval →
+                           dispatch → pool chunk → spill/fault/backoff) into
+                           a bounded process-wide ring; a *path* value also
+                           exports Chrome trace-event JSON there at process
+                           exit (open in Perfetto).  Default off — the
+                           disabled path allocates no spans and costs ≤1%
+                           (``BENCH_trace.json``)
+``REPRO_TRACE_RING``       finished-span ring capacity per tracer (default
+                           65536; the oldest spans fall off the back)
 =========================  ==================================================
 
 Session-scoped override semantics (``core.config``): every knob in the
@@ -152,6 +162,7 @@ from typing import Callable, Sequence
 
 from . import config as _config
 from . import faults as _faults
+from . import trace as _trace
 from .faults import StatementCancelled, TaskError, env_int, is_retryable
 
 __all__ = [
@@ -422,7 +433,17 @@ def _run_one(fn: Callable, x, bi: int, retries: int, backoff_ms: int,
                     cause=e) from e
             _bump(st, "retries")
             if backoff_ms > 0:
-                time.sleep(backoff_ms * (1 << attempt) / 1000.0)
+                delay = backoff_ms * (1 << attempt) / 1000.0
+                tr = _trace.current()
+                if tr is not None:
+                    # the backoff sleep is attributable stall time: record it
+                    # as a span so profile() can say how long retries idled
+                    with tr.span("backoff", "retry",
+                                 args={"node": label, "block": bi,
+                                       "attempt": attempt + 1}):
+                        time.sleep(delay)
+                else:
+                    time.sleep(delay)
             attempt += 1
 
 
@@ -517,38 +538,75 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
     cfg = _config.current()
     cancel = _config.current_cancel()
     _check_cancel(cancel, label)
+    # tracing (off = None: no span allocation anywhere below).  The dispatch
+    # span is begun here on the caller thread and travels to the pool workers
+    # via config.propagate, so every chunk span parents to it even though the
+    # two run on different threads.
+    tr = _trace.current(cfg)
+    dsp = None
+    if tr is not None:
+        dsp = tr.begin(f"dispatch:{label}", "dispatch")
+        dsp.args = {"blocks": n, "chunks": len(chunks)}
 
-    def run_chunk(chunk_and_idxs) -> list:
-        chunk, cidx = chunk_and_idxs
-        with _config.propagate(cfg, cancel):
-            if not guarded:
-                if cancel is None:
-                    return [fn(x) for x in chunk]
+    def chunk_body(chunk, cidx) -> list:
+        if not guarded:
+            if cancel is None:
+                return [fn(x) for x in chunk]
+            out = []
+            for x in chunk:
+                _check_cancel(cancel, label)
+                out.append(fn(x))
+            return out
+        if not chaos:
+            # hot path: one try around the plain loop — the per-block
+            # retry machinery is only paid when something actually failed
+            try:
                 out = []
                 for x in chunk:
                     _check_cancel(cancel, label)
                     out.append(fn(x))
                 return out
-            if not chaos:
-                # hot path: one try around the plain loop — the per-block
-                # retry machinery is only paid when something actually failed
-                try:
-                    out = []
-                    for x in chunk:
-                        _check_cancel(cancel, label)
-                        out.append(fn(x))
-                    return out
-                except Exception as e:
-                    if not is_retryable(e):
-                        raise
-                    _bump(st, "task_failures")
-            # chaos run, or a coalesced chunk hit a transient failure: split
-            # and run per block so one poison block is isolated (fn is pure,
-            # so re-running the chunk's other blocks is bit-identical)
-            return [_run_one(fn, x, bi, retries, backoff, label, st, chaos,
-                             cancel)
-                    for x, bi in zip(chunk, cidx)]
+            except Exception as e:
+                if not is_retryable(e):
+                    raise
+                _bump(st, "task_failures")
+        # chaos run, or a coalesced chunk hit a transient failure: split
+        # and run per block so one poison block is isolated (fn is pure,
+        # so re-running the chunk's other blocks is bit-identical)
+        return [_run_one(fn, x, bi, retries, backoff, label, st, chaos,
+                         cancel)
+                for x, bi in zip(chunk, cidx)]
 
+    def run_chunk(chunk_and_idxs) -> list:
+        chunk, cidx = chunk_and_idxs
+        with _config.propagate(cfg, cancel, dsp):
+            if tr is None:
+                return chunk_body(chunk, cidx)
+            with tr.span(f"chunk:{label}", "task",
+                         args={"blocks": len(cidx), "first_block": cidx[0]}):
+                return chunk_body(chunk, cidx)
+
+    try:
+        out = _collect_dispatch(run_chunk, chunks, items, idxs, fn, retries,
+                                backoff, timeout, label, st, chaos, guarded,
+                                cancel)
+    finally:
+        if dsp is not None:
+            tr.end(dsp)
+    if perm is not None:
+        restored: list = [None] * n
+        for pos, orig in enumerate(perm):
+            restored[orig] = out[pos]
+        return restored
+    return out
+
+
+def _collect_dispatch(run_chunk, chunks, items, idxs, fn, retries, backoff,
+                      timeout, label, st, chaos, guarded, cancel) -> list:
+    """The placement half of :func:`dispatch_blocks`: inline (nested from a
+    pool worker), deadline, or chunk-by-chunk submission with pool-loss
+    recovery and fail-fast sibling drain.  Split out so the dispatch span
+    brackets exactly this region."""
     if _in_worker():
         # nested dispatch from a pool worker: run inline — queueing behind
         # ourselves on a saturated pool would deadlock
@@ -624,11 +682,6 @@ def dispatch_blocks(fn: Callable, blocks: Sequence, stats=None, *,
                 first_err = e
         if first_err is not None:
             raise first_err
-    if perm is not None:
-        restored: list = [None] * n
-        for pos, orig in enumerate(perm):
-            restored[orig] = out[pos]
-        return restored
     return out
 
 

@@ -39,6 +39,7 @@ from . import algebra as alg
 from . import config as _config
 from . import schedule as _schedule
 from . import store as block_store
+from . import trace as _trace
 from .config import CancelToken, SessionConfig
 from .executor import ExecStats, Executor
 from .faults import ExecutorClosedError, StatementCancelled
@@ -55,10 +56,11 @@ _AGING_S = 0.25
 
 class _Ticket:
     __slots__ = ("seq", "sid", "node", "cfg", "token", "promise", "cap",
-                 "enqueued")
+                 "enqueued", "admitted", "stmt")
 
     def __init__(self, seq: int, sid: str, node: alg.Node, cfg: SessionConfig,
-                 token: "_TicketToken", promise: _fut.Future, cap: int):
+                 token: "_TicketToken", promise: _fut.Future, cap: int,
+                 stmt: int | None = None):
         self.seq = seq
         self.sid = sid
         self.node = node
@@ -67,6 +69,10 @@ class _Ticket:
         self.promise = promise
         self.cap = cap
         self.enqueued = time.monotonic()
+        self.admitted = self.enqueued
+        # trace statement id, allocated at submission so the queue-wait span,
+        # the plan-prep span, and the statement span share one tree
+        self.stmt = stmt
 
 
 class _TicketToken(CancelToken):
@@ -124,15 +130,17 @@ class AdmissionController:
         cap = _schedule.max_inflight()
         token = _TicketToken(self)
         promise: _fut.Future = _fut.Future()
+        tr = _trace.current(cfg)
+        stmt = tr.next_stmt() if tr is not None else None
         t = _Ticket(next(self._seq), session.config.session_id, node, cfg,
-                    token, promise, cap)
+                    token, promise, cap, stmt)
         token._ticket = t
         with self._cond:
             if self._closed:
                 raise ExecutorClosedError("query service is closed")
             self._queue.append(t)
             self._cond.notify_all()
-        return StatementHandle(node, token, promise)
+        return StatementHandle(node, token, promise, stmt=stmt, tracer=tr)
 
     # -- dispatcher ----------------------------------------------------
     def _pick_locked(self) -> _Ticket | None:
@@ -168,16 +176,20 @@ class AdmissionController:
             self._launch(t)
 
     def _launch(self, t: _Ticket) -> None:
+        t.admitted = time.monotonic()
         try:
             with _config.scope(t.cfg):
-                fut = self._executor.submit(t.node, cancel=t.token)
+                self._note_phase(t, "queue_wait",
+                                 int((t.admitted - t.enqueued) * 1e9))
+                fut = self._executor.submit(t.node, cancel=t.token,
+                                            stmt=t.stmt)
         except BaseException as e:
-            self._release(t.sid)
+            self._release(t)
             self._fail(t, e)
             return
 
         def _done(f: _fut.Future, t: _Ticket = t) -> None:
-            self._release(t.sid)
+            self._release(t)
             try:
                 r = f.result()
             except _fut.CancelledError:
@@ -202,9 +214,27 @@ class AdmissionController:
         except _fut.InvalidStateError:
             pass    # shutdown / cancel raced us — the promise already failed
 
-    def _release(self, sid: str) -> None:
+    def _note_phase(self, t: _Ticket, name: str, dur_ns: int) -> None:
+        """Attribute an admission phase (queue wait / slot hold) to the
+        tenant: bump the timing counter through the executor's stats tee
+        (global + this session's ``ExecStats``, under the ticket's config
+        scope) and, when the session is traced, record a span of the elapsed
+        duration — backdated, since the phase just ended."""
+        st = self._executor._stats()
+        setattr(st, f"{name}_ns", getattr(st, f"{name}_ns") + dur_ns)
+        tr = _trace.current()
+        if tr is not None:
+            sp = tr.begin(name, "service", parent=None, stmt=t.stmt)
+            sp.t0 -= dur_ns
+            sp.args = {"session": t.sid}
+            tr.end(sp)
+
+    def _release(self, t: _Ticket) -> None:
+        with _config.scope(t.cfg):
+            self._note_phase(t, "slot_hold",
+                             int((time.monotonic() - t.admitted) * 1e9))
         with self._cond:
-            self._running[sid] = self._running.get(sid, 1) - 1
+            self._running[t.sid] = self._running.get(t.sid, 1) - 1
             self._running_total -= 1
             self._cond.notify_all()
 
@@ -291,9 +321,13 @@ class QueryService:
                 shuffle_buckets: int | None = None,
                 shuffle_skew_factor: int | None = None,
                 max_inflight: int | None = None,
+                trace: Any = None,
                 session_id: str | None = None) -> Session:
         """Open a tenant session.  Knobs are session-scoped — they shadow the
-        process defaults inside this session's statements only."""
+        process defaults inside this session's statements only.  ``trace``
+        (True, or a ``trace.Tracer``) gives the tenant its own span ring —
+        ``Session.trace_json`` / ``explain_stats`` / handle ``profile`` then
+        cover exactly that tenant's statements."""
         self._require_open()
         sid = session_id or f"t{next(self._sids)}"
         s = Session(mode=mode, default_row_parts=default_row_parts,
@@ -302,7 +336,7 @@ class QueryService:
                     fault_plan=fault_plan, fault_seed=fault_seed,
                     shuffle_buckets=shuffle_buckets,
                     shuffle_skew_factor=shuffle_skew_factor,
-                    max_inflight=max_inflight,
+                    max_inflight=max_inflight, trace=trace,
                     _service=self, _executor=self.executor,
                     _frames=self.frames, _store=self.store, _session_id=sid)
         with self._lock:
@@ -354,6 +388,35 @@ class QueryService:
     def session_stats(self) -> dict[str, ExecStats]:
         with self._lock:
             return {sid: s.stats for sid, s in self._sessions.items()}
+
+    def tenant_report(self) -> list[dict]:
+        """Which session is burning the pool: per-tenant timing gauges
+        (node wall time, plan prep, admission queue wait, slot hold) plus the
+        work counters behind them, sorted by pool pressure (slot hold + node
+        wall) descending.  The per-tenant numbers come from each session's
+        ``ExecStats`` — the same tee the counter attribution uses — so they
+        sum to the service-global stats like every other counter."""
+        with self._lock:
+            items = list(self._sessions.items())
+        rows = []
+        for sid, s in items:
+            st = s.stats
+            rows.append({
+                "session": sid,
+                "node_wall_ns": st.node_wall_ns,
+                "plan_prep_ns": st.plan_prep_ns,
+                "queue_wait_ns": st.queue_wait_ns,
+                "slot_hold_ns": st.slot_hold_ns,
+                "evaluated_nodes": st.evaluated_nodes,
+                "dispatches": st.dispatches,
+                "dispatched_blocks": st.dispatched_blocks,
+                "spills": st.spills,
+                "faults": st.faults,
+                "retries": st.retries,
+            })
+        rows.sort(key=lambda r: r["slot_hold_ns"] + r["node_wall_ns"],
+                  reverse=True)
+        return rows
 
     def close(self) -> None:
         """Shut the service down: queued admissions and in-flight statements

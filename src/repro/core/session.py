@@ -35,6 +35,7 @@ from typing import Any
 from . import algebra as alg
 from . import config as _config
 from . import store as block_store
+from . import trace as _trace
 from .config import CancelToken, SessionConfig
 from .executor import ExecStats, Executor
 from .faults import ExecutorClosedError, StatementCancelled
@@ -60,14 +61,30 @@ class StatementHandle:
     ``result()`` joins the run and raises the run's typed error:
     ``faults.StatementCancelled`` after a cancel, ``faults.ExecutorClosedError``
     when the owning session/service was closed while the statement was in
-    flight."""
+    flight.
 
-    __slots__ = ("node", "token", "_future")
+    Traced sessions: the handle carries its trace statement id, so
+    :meth:`profile` answers *where this statement's wall-clock went* (per-node
+    time with counter deltas, dispatch/coalescing ratio, spill/retry/queue
+    stalls, cache-hit provenance) once the run is done."""
 
-    def __init__(self, node: alg.Node, token: CancelToken, future: _fut.Future):
+    __slots__ = ("node", "token", "_future", "stmt_id", "_tracer")
+
+    def __init__(self, node: alg.Node, token: CancelToken,
+                 future: _fut.Future, *, stmt: int | None = None,
+                 tracer: Any | None = None):
         self.node = node
         self.token = token
         self._future = future
+        self.stmt_id = stmt
+        self._tracer = tracer
+
+    def profile(self) -> dict | None:
+        """Per-statement time attribution (``trace.Tracer.profile``), or
+        None when the owning session is untraced."""
+        if self._tracer is None or self.stmt_id is None:
+            return None
+        return self._tracer.profile(self.stmt_id)
 
     def cancel(self) -> None:
         """Request cancellation (cooperative; a statement that already
@@ -125,6 +142,7 @@ class Session:
                  shuffle_buckets: int | None = None,
                  shuffle_skew_factor: int | None = None,
                  max_inflight: int | None = None,
+                 trace: Any = None,
                  _service: Any | None = None,
                  _executor: Executor | None = None,
                  _frames: dict[str, PartitionedFrame] | None = None,
@@ -146,6 +164,11 @@ class Session:
             # its own directory, torn down on close()
             store = self._private_store = block_store.BlockStore(
                 mem_budget_bytes or 0, spill_dir)
+        # trace=True builds a session-private tracer (bounded span ring);
+        # trace=False pins tracing OFF for this session even under a
+        # process-wide REPRO_TRACE; None inherits the process default
+        if trace is True:
+            trace = _trace.Tracer(session_id=sid)
         self.config = SessionConfig(
             session_id=sid, store=store,
             task_retries=task_retries, task_timeout_ms=task_timeout_ms,
@@ -154,7 +177,7 @@ class Session:
             shuffle_buckets=shuffle_buckets,
             shuffle_skew_factor=shuffle_skew_factor,
             stats=ExecStats() if _executor is not None else None,
-            max_inflight=max_inflight)
+            max_inflight=max_inflight, trace=trace)
         self.mode = mode
         self.service = _service
         self._closed = False
@@ -238,8 +261,10 @@ class Session:
         if self.service is not None:
             return self.service._submit(self, node)
         token = CancelToken()
-        fut = self.executor.submit(node, cancel=token)
-        return StatementHandle(node, token, fut)
+        tr = _trace.current()
+        stmt = tr.next_stmt() if tr is not None else None
+        fut = self.executor.submit(node, cancel=token, stmt=stmt)
+        return StatementHandle(node, token, fut, stmt=stmt, tracer=tr)
 
     def collect(self, node: alg.Node) -> Frame:
         self._require_open()
@@ -255,6 +280,44 @@ class Session:
         self._require_open()
         with _config.scope(self.config):
             return self.executor.evaluate(alg.Limit(node, k, tail=True)).to_frame()
+
+    # ------------------------------------------------------------------
+    # observability surfaces (core.trace)
+    # ------------------------------------------------------------------
+    @property
+    def tracer(self) -> Any | None:
+        """This session's resolved tracer: its private one
+        (``Session(trace=True)``), else the process tracer (``REPRO_TRACE``),
+        else None — the same resolution every instrumentation site uses."""
+        with _config.scope(self.config):
+            return _trace.current()
+
+    def trace_json(self, path: str) -> str | None:
+        """Export this session's span ring as Chrome trace-event JSON (open
+        in Perfetto / chrome://tracing; pool threads appear as named tracks,
+        cross-thread span parentage as flow arrows).  Returns the path, or
+        None when the session is untraced."""
+        tr = self.tracer
+        return tr.export(path) if tr is not None else None
+
+    def explain_stats(self, stmt: int | None = None) -> dict:
+        """Where did the time go?  This session's counter totals
+        (``ExecStats`` projected through the shared metrics shape) plus — for
+        traced sessions — the per-statement profile of ``stmt`` (default:
+        the most recent statement): per-node wall time with counter deltas,
+        dispatch/coalescing ratio, spill/retry/queue attribution, and
+        cache-hit provenance."""
+        tr = self.tracer
+        out = {
+            "session": self.config.session_id,
+            "stats": _trace.stats_metrics(
+                self.stats, name=self.config.session_id).export(),
+            "traced": tr is not None,
+        }
+        if tr is not None:
+            out["statements"] = tr.statements()
+            out["profile"] = tr.profile(stmt)
+        return out
 
     def close(self):
         """Tear the session down: in-flight statements FAIL with the typed

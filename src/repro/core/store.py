@@ -81,6 +81,7 @@ from .frame import Column, Frame
 from .dtypes import Domain
 from . import config as _config
 from . import faults as _faults
+from . import trace as _trace
 from .faults import SpillIntegrityError, StoreClosedError, env_int
 
 __all__ = [
@@ -392,7 +393,17 @@ class BlockStore:
                             "ingesting data)")
                     self._reserve(h.nbytes)
                     charged = True
-                    f = self._load_block(h, path)
+                    tr = _trace.current()
+                    if tr is None:
+                        f = self._load_block(h, path)
+                    else:
+                        # fault I/O runs on the worker that needed the block;
+                        # the span lands under that worker's chunk span, so a
+                        # profile shows WHICH dispatch paid the disk stall
+                        with tr.span("fault", "store",
+                                     args={"block": h._id,
+                                           "bytes": h.nbytes}):
+                            f = self._load_block(h, path)
                     with self._lock:
                         h._frame = f
                         h._rec.charged = h.nbytes
@@ -500,7 +511,14 @@ class BlockStore:
                         return True  # raced with a fault/pin: nothing to do
                 path = h._rec.path
                 if path is None:
-                    path = self._write_spill(h, f)
+                    tr = _trace.current()
+                    if tr is None:
+                        path = self._write_spill(h, f)
+                    else:
+                        with tr.span("spill", "store",
+                                     args={"block": h._id,
+                                           "bytes": h.nbytes}):
+                            path = self._write_spill(h, f)
                     if path is None:
                         return False
                     h._rec.path = path

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.trace import Metrics
 from ..models.model import Model
 from ..data.tokenizer import EOS, PAD, HashTokenizer
 
@@ -47,7 +48,7 @@ class ServeEngine:
         self._next_feed = np.zeros(max_batch, np.int64)     # token to feed next
         self._prompt_pos = np.zeros(max_batch, np.int64)    # progress in prompt
         self._decode = jax.jit(model.decode_step)
-        self.metrics = {"steps": 0, "tokens_out": 0, "prefill_tokens": 0}
+        self.metrics = Metrics("serve", steps=0, tokens_out=0, prefill_tokens=0)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -90,7 +91,7 @@ class ServeEngine:
                                 self.model.cfg.d_model), jnp.bfloat16)
         logits, self.cache = self._decode(self.params, feed, self.cache, memory)
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))
-        self.metrics["steps"] += 1
+        self.metrics.inc("steps")
 
         for i in active:
             req = self.slots[i]
@@ -98,11 +99,11 @@ class ServeEngine:
             if self._prompt_pos[i] < len(req.prompt_ids):
                 # still prefilling: teacher-force the next prompt token
                 self._next_feed[i] = req.prompt_ids[self._prompt_pos[i]]
-                self.metrics["prefill_tokens"] += 1
+                self.metrics.inc("prefill_tokens")
                 continue
             tok = int(next_tok[i])
             req.out_ids.append(tok)
-            self.metrics["tokens_out"] += 1
+            self.metrics.inc("tokens_out")
             self._next_feed[i] = tok
             if tok == EOS or len(req.out_ids) >= req.max_new_tokens:
                 req.done = True

@@ -18,6 +18,9 @@ def pytest_configure(config):
         "markers", "spill: tests that intentionally run the block store "
                    "under a memory budget (exempt from the global "
                    "no-unexpected-spills guard)")
+    config.addinivalue_line(
+        "markers", "trace: tests that intentionally enable the statement "
+                   "tracer (exempt from the global zero-spans guard)")
 
 
 @pytest.fixture(autouse=True)
@@ -37,6 +40,22 @@ def _no_unexpected_spills(request):
             f"unexpected block-store spills during {request.node.nodeid}: "
             f"{after - before} (mark the test @pytest.mark.spill if "
             "budget-governed residency is intended)")
+
+
+@pytest.fixture(autouse=True)
+def _no_unexpected_spans(request):
+    """The disabled path must be a true no-op: with tracing off (the test
+    default) no span may be recorded anywhere in the process.  Tests that
+    turn the tracer on opt out with ``@pytest.mark.trace``."""
+    from repro.core import trace
+    before = trace.recorded_total()
+    yield
+    if request.node.get_closest_marker("trace") is None:
+        after = trace.recorded_total()
+        assert after == before, (
+            f"unexpected trace spans recorded during {request.node.nodeid}: "
+            f"{after - before} (mark the test @pytest.mark.trace if tracing "
+            "is intended)")
 
 
 @pytest.fixture

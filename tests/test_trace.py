@@ -1,0 +1,367 @@
+"""Statement tracing & metrics layer (observability PR).
+
+The tracer must be invisible when off (the autouse conftest guard watches
+``trace.recorded_total()`` in every OTHER test of the suite) and exact when
+on: span parenting survives pool-thread hops, retries/cancellation/shutdown
+never leak open spans, the Chrome export validates against the trace-event
+schema, and per-statement counter deltas attached to spans sum exactly to
+the global ``ExecStats`` movement — even under a seeded chaos plan with a
+4x-over-budget spill pipeline.
+"""
+import dataclasses
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import EvalMode, Session
+from repro.core import algebra as alg
+from repro.core import faults, schedule, trace
+from repro.core.algebra import GroupBy, Map, Selection, Udf, col, lit
+from repro.core.dtypes import Domain
+from repro.core.executor import ExecStats
+from repro.core.faults import StatementCancelled
+from repro.core.frame import Column, Frame
+from repro.core.labels import RangeLabels, labels_from_values
+from repro.core.service import QueryService
+
+pytestmark = pytest.mark.trace
+
+_DELTA_KEYS = ("spills", "faults", "spilled_bytes", "checksum_failures",
+               "recomputed_blocks", "budget_overruns", "faults_injected")
+
+
+@pytest.fixture(autouse=True)
+def clean_trace(monkeypatch):
+    """Isolate the process tracer state around every test here."""
+    for knob in ("REPRO_TRACE", "REPRO_TRACE_RING", "REPRO_FAULT_PLAN",
+                 "REPRO_FAULT_SEED", "REPRO_MEM_BUDGET"):
+        monkeypatch.delenv(knob, raising=False)
+    trace.reset()
+    faults.reset()
+    yield monkeypatch
+    trace.reset()
+    faults.reset()
+    schedule.reset_pool()
+
+
+def _frame(n=120, seed=0):
+    rng = np.random.default_rng(seed)
+    return Frame(
+        [Column(np.asarray(rng.integers(0, 8, n, dtype=np.int32)), Domain.INT),
+         Column(np.asarray((rng.integers(0, 12, n) * np.float32(0.25))
+                           .astype(np.float32)), Domain.FLOAT)],
+        RangeLabels(n), labels_from_values(["k", "x"]))
+
+
+def _plan(src, name="trace_scale"):
+    def fn(cols, frame):
+        out = dict(cols)
+        c = cols["x"]
+        out["x"] = Column(c.data * 2.0 + 1.0, Domain.FLOAT, c.mask, None)
+        return out
+
+    udf = Udf(name=name, fn=fn, deps=frozenset(["x"]), elementwise=True)
+    return GroupBy(Selection(Map(src, udf), col("k") < lit(6)),
+                   ("k",), [("x", "sum", "xs"), ("x", "count", "n")])
+
+
+def _slow_plan(src, delay_s, started=None, release=None, name="trace_slow"):
+    def fn(cols, frame):
+        if started is not None:
+            started.set()
+        if release is not None:
+            release.wait(10.0)
+        time.sleep(delay_s)
+        return dict(cols)
+
+    return Map(src, Udf(name=name, fn=fn, deps=frozenset(["x"]),
+                        elementwise=True))
+
+
+def _drain_open(tr, timeout=10.0):
+    """Unwinding worker threads close their spans asynchronously."""
+    deadline = time.monotonic() + timeout
+    while tr.open_spans() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return tr.open_spans()
+
+
+# =============================================================================
+# disabled path: a true no-op
+# =============================================================================
+def test_disabled_records_nothing():
+    before = trace.recorded_total()
+    assert trace.current() is None
+    s = Session(mode=EvalMode.LAZY)
+    try:
+        src = s.register_frame(_frame(200, seed=1), row_parts=4)
+        assert s.collect(_plan(src)).nrows > 0
+        assert s.tracer is None
+        assert s.explain_stats()["traced"] is False
+    finally:
+        s.close()
+    assert trace.recorded_total() == before
+
+
+def test_session_trace_false_forces_off(clean_trace):
+    clean_trace.setenv("REPRO_TRACE", "1")
+    trace.reset()
+    assert isinstance(trace.current(), trace.Tracer)   # process tracer on
+    s = Session(mode=EvalMode.LAZY, trace=False)
+    try:
+        assert s.tracer is None                        # session forced off
+    finally:
+        s.close()
+
+
+# =============================================================================
+# span parenting: plan → dispatch → pool-thread chunks
+# =============================================================================
+def test_span_parenting_across_pool_threads(clean_trace):
+    clean_trace.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    tr = trace.Tracer(session_id="t")
+    trace.configure(tr)
+    try:
+        with schedule.node_scope("parenting"):
+            out = schedule.dispatch_blocks(lambda x: x * 2, list(range(16)))
+        assert out == [i * 2 for i in range(16)]
+    finally:
+        trace.reset()
+    spans = tr.snapshot()
+    disp = [s for s in spans if s.cat == "dispatch"]
+    chunks = [s for s in spans if s.cat == "task"]
+    assert len(disp) == 1 and chunks
+    assert disp[0].args["blocks"] == 16
+    assert disp[0].args["chunks"] == len(chunks)
+    for c in chunks:
+        assert c.parent == disp[0].id            # carried via propagate()
+        assert c.stmt == disp[0].stmt
+    assert {c.tid for c in chunks} != {disp[0].tid}   # crossed threads
+    assert sum(c.args["blocks"] for c in chunks) == 16
+    assert tr.open_spans() == 0
+
+
+def test_failed_chunk_split_retry_records_backoff_spans(clean_trace):
+    clean_trace.setenv("REPRO_POOL_WORKERS", "2")
+    clean_trace.setenv("REPRO_RETRY_BACKOFF_MS", "1")
+    schedule.reset_pool()
+    ref = schedule.dispatch_blocks(lambda x: x * 2, list(range(16)))
+    clean_trace.setenv("REPRO_FAULT_PLAN", "worker:0.5")
+    clean_trace.setenv("REPRO_FAULT_SEED", "3")
+    tr = trace.Tracer(session_id="t")
+    trace.configure(tr)
+    st = ExecStats()
+    try:
+        got = schedule.dispatch_blocks(lambda x: x * 2, list(range(16)),
+                                       stats=st)
+    finally:
+        trace.reset()
+    assert got == ref                            # chaos recovered, identical
+    assert st.retries > 0
+    retries = [s for s in tr.snapshot() if s.cat == "retry"]
+    assert len(retries) == st.retries            # one backoff span per retry
+    stmts = {s.stmt for s in tr.snapshot()}
+    assert len(stmts) == 1                       # all under one statement
+    for r in retries:
+        assert r.args["attempt"] >= 1 and "block" in r.args
+    assert tr.open_spans() == 0
+
+
+# =============================================================================
+# cancellation / shutdown: spans never leak open
+# =============================================================================
+def test_cancellation_closes_open_spans():
+    s = Session(mode=EvalMode.LAZY, trace=True)
+    tr = s.tracer
+    try:
+        started = threading.Event()
+        src = s.register_frame(_frame(64, seed=4), row_parts=8)
+        h = s.submit(_slow_plan(src, 0.15, started=started,
+                                name="trace_cancel"))
+        assert started.wait(5.0)
+        h.cancel()
+        with pytest.raises(StatementCancelled):
+            h.result(timeout=10.0)
+        assert _drain_open(tr) == 0
+        errs = [sp for sp in tr.snapshot()
+                if sp.args and "error" in sp.args]
+        assert any("Cancel" in sp.args["error"] for sp in errs)
+    finally:
+        s.close()
+
+
+def test_executor_shutdown_mid_statement_closes_spans():
+    s = Session(mode=EvalMode.LAZY, trace=True)
+    tr = s.tracer
+    started, release = threading.Event(), threading.Event()
+    src = s.register_frame(_frame(48, seed=6), row_parts=4)
+    s.submit(_slow_plan(src, 0.0, started=started, release=release,
+                        name="trace_close"))
+    assert started.wait(5.0)
+    try:
+        s.close()                                # shutdown under the statement
+    finally:
+        release.set()
+    assert _drain_open(tr) == 0                  # every span closed on unwind
+
+
+# =============================================================================
+# profile / explain surfaces
+# =============================================================================
+def test_statement_profile_and_explain_stats():
+    s = Session(mode=EvalMode.LAZY, trace=True)
+    try:
+        src = s.register_frame(_frame(300, seed=7), row_parts=4)
+        h = s.submit(_plan(src, name="trace_prof"))
+        h.result(timeout=30.0)
+        prof = h.profile()
+        assert prof is not None and prof["stmt"] == h.stmt_id
+        assert prof["wall_ns"] > 0 and prof["spans"] > 0
+        assert prof["nodes"]                     # per-node attribution
+        assert prof["dispatch"]["dispatched_blocks"] > 0
+        ex = s.explain_stats(h.stmt_id)
+        assert ex["traced"] is True
+        assert ex["profile"]["stmt"] == h.stmt_id
+        assert ex["stats"]["metrics"]["evaluated_nodes"] > 0
+        assert ex["stats"]["metrics"]["node_wall_ns"] > 0
+        # timing counters move even with tracing off (always-on ExecStats)
+        assert s.stats.plan_prep_ns >= 0
+    finally:
+        s.close()
+
+
+@pytest.mark.spill
+def test_counter_deltas_sum_exactly_under_chaos(tmp_path):
+    import repro.core.api as api
+    n = 50_000
+    data = {"a": np.arange(n, dtype=np.float64),
+            "b": (np.arange(n) % 97).astype(np.float64)}
+    s = Session(mode=EvalMode.LAZY, trace=True, mem_budget_bytes=n * 8 // 2,
+                spill_dir=str(tmp_path),
+                fault_plan="worker:0.2,corrupt:0.5,enospc:0.5", fault_seed=7)
+    try:
+        df = api.from_pydict(data, session=s)
+        q = df[df["a"] > 1000.0].groupby("b").agg({"a": ["sum", "mean"]})
+        st0 = dataclasses.replace(s.stats)
+        q.collect()
+        st1, tr = s.stats, s.tracer
+        assert tr.open_spans() == 0
+        totals = tr.counter_totals(tr.last_stmt)
+        for k in _DELTA_KEYS:
+            assert totals.get(k, 0) == getattr(st1, k) - getattr(st0, k), k
+    finally:
+        s.close()
+    leftovers = [p for p in tmp_path.rglob("*") if p.is_file()]
+    assert leftovers == []                       # zero leaked spill files
+
+
+# =============================================================================
+# Chrome trace export
+# =============================================================================
+def test_chrome_export_validates_and_names_threads(clean_trace, tmp_path):
+    clean_trace.setenv("REPRO_POOL_WORKERS", "2")
+    schedule.reset_pool()
+    s = Session(mode=EvalMode.LAZY, trace=True)
+    try:
+        src = s.register_frame(_frame(300, seed=8), row_parts=4)
+        assert s.collect(_plan(src, name="trace_export")).nrows > 0
+        path = s.trace_json(str(tmp_path / "trace.json"))
+        doc = json.load(open(path))
+    finally:
+        s.close()
+    n = trace.validate_chrome_trace(doc)
+    assert n == len(doc["traceEvents"]) and n > 0
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert "X" in phases and "M" in phases       # spans + thread names
+    names = [e["args"]["name"] for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert names and all(isinstance(x, str) and x for x in names)
+    durs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all(isinstance(e["ts"], (int, float)) and e["dur"] >= 0
+               for e in durs)
+
+
+def test_chrome_validation_rejects_malformed():
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace({"no": "events"})
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "x"}]})   # missing ts/dur
+    with pytest.raises(ValueError):
+        trace.validate_chrome_trace(
+            {"traceEvents": [{"ph": "?", "name": "x", "pid": 1, "tid": 1,
+                              "ts": 0}]})                  # unknown phase
+
+
+def test_ring_buffer_bounds_retention():
+    tr = trace.Tracer(ring=4, session_id="ring")
+    before = trace.recorded_total()
+    for i in range(10):
+        tr.instant(f"e{i}")
+    assert len(tr.snapshot()) == 4               # bounded retention
+    assert trace.recorded_total() == before + 10  # but every record counted
+    assert tr.open_spans() == 0
+
+
+# =============================================================================
+# metrics registry (shared shape: core ExecStats + serve engine)
+# =============================================================================
+def test_metrics_registry_shape_and_serve_unification():
+    m = trace.Metrics("m", steps=0)
+    m.inc("steps")
+    m["tokens_out"] = 3
+    m.gauge("depth", 7)
+    assert m["steps"] == 1 and m["missing"] == 0
+    assert dict(m) == {"steps": 1, "tokens_out": 3, "depth": 7}
+    exp = m.export()
+    assert exp["name"] == "m" and exp["metrics"]["tokens_out"] == 3
+
+    st = ExecStats()
+    st.evaluated_nodes = 5
+    proj = trace.stats_metrics(st)
+    assert set(proj.export()) == set(exp)        # ONE export shape
+    assert proj["evaluated_nodes"] == 5
+
+    from repro.serve import engine as serve_engine
+    assert serve_engine.Metrics is trace.Metrics  # serve tier unified
+
+
+# =============================================================================
+# service: admission phases + per-tenant attribution
+# =============================================================================
+def test_service_tenant_report_and_admission_phases():
+    with QueryService(background_workers=2) as svc:
+        busy = svc.session(mode=EvalMode.LAZY)
+        idle = svc.session(mode=EvalMode.LAZY)
+        src = busy.register_frame(_frame(400, seed=9), row_parts=4)
+        busy.submit(_plan(src, name="trace_tenant")).result(timeout=30.0)
+        rows = svc.tenant_report()
+        assert len(rows) == 2
+        by_sid = {r["session"]: r for r in rows}
+        bid = busy.config.session_id
+        assert by_sid[bid]["evaluated_nodes"] > 0
+        assert by_sid[bid]["node_wall_ns"] > 0
+        assert by_sid[bid]["slot_hold_ns"] > 0   # admission slot was held
+        assert by_sid[bid]["queue_wait_ns"] >= 0
+        assert by_sid[idle.config.session_id]["evaluated_nodes"] == 0
+        assert rows[0]["session"] == bid         # pool-pressure sort
+        # the per-tenant gauges sum to the service-global timing counters
+        assert sum(r["slot_hold_ns"] for r in rows) == svc.stats.slot_hold_ns
+        assert sum(r["node_wall_ns"] for r in rows) == svc.stats.node_wall_ns
+
+
+def test_service_traced_statement_records_admission_spans():
+    with QueryService(background_workers=2) as svc:
+        tr = trace.Tracer(session_id="tenant")
+        s = svc.session(mode=EvalMode.LAZY, trace=tr)
+        src = s.register_frame(_frame(200, seed=11), row_parts=4)
+        h = s.submit(_plan(src, name="trace_admit"))
+        h.result(timeout=30.0)
+        assert _drain_open(tr) == 0
+        names = {sp.name for sp in tr.snapshot()}
+        assert "queue_wait" in names and "slot_hold" in names
+        prof = tr.profile(h.stmt_id)
+        assert prof["service"]["slot_hold_ns"] > 0
